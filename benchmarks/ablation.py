@@ -1,0 +1,26 @@
+"""Paper Fig. 8: the WindGP-/WindGP*/WindGP+/WindGP technique ladder."""
+from __future__ import annotations
+
+from repro.core import windgp
+
+from .common import CSV, cluster_for, dataset, timed
+
+LEVELS = ("windgp-", "windgp*", "windgp+", "windgp")
+
+
+def run(quick: bool = True, datasets=("TW", "CO", "LJ", "CP", "RN")):
+    csv = CSV("fig8_ablation")
+    out = {}
+    for ds in datasets:
+        g = dataset(ds, quick)
+        cl = cluster_for(ds, g)
+        tcs = {}
+        for lvl in LEVELS:
+            res, dt = timed(windgp, g, cl, level=lvl, t0=30, theta=0.02,
+                            alpha=0.1, beta=0.1)
+            tcs[lvl] = res.stats.tc
+            csv.row(f"{ds}/{lvl}", dt, f"TC={res.stats.tc:.4e}")
+        csv.row(f"{ds}/full_vs_naive", 0,
+                f"{tcs['windgp-'] / tcs['windgp']:.2f}x")
+        out[ds] = tcs
+    return out

@@ -1,0 +1,40 @@
+"""Paper Tables 15/16: distributed graph computing performance per
+partitioner (PageRank / SSSP / TriangleCount on the heterogeneous
+cluster, simulated makespan from real active sets)."""
+from __future__ import annotations
+
+import time
+
+from repro.bsp import (PartitionRuntime, pagerank, simulate_runtime, sssp,
+                       triangle_count)
+from repro.core import evaluate, windgp
+from repro.core.baselines import PARTITIONERS
+
+from .common import CSV, cluster_for, dataset, timed
+
+
+def run(quick: bool = True, datasets=("TW", "LJ", "CP", "RN")):
+    csv = CSV("tab15_16_bsp_runtime")
+    out = {}
+    for ds in datasets:
+        g = dataset(ds, quick)
+        cl = cluster_for(ds, g)
+        for m in ("hdrf", "ne", "windgp"):
+            if m == "windgp":
+                assign = windgp(g, cl, t0=20, theta=0.02,
+                                alpha=0.1, beta=0.1).assign
+            else:
+                assign = PARTITIONERS[m](g, cl)
+            rt = PartitionRuntime.build(g, assign, cl.p)
+            sim_pr = simulate_runtime(rt, cl, num_steps=10)
+            _, act = sssp(rt, source=0, num_iters=12)
+            sim_ss = simulate_runtime(rt, cl, actives=act,
+                                      comm_scale="active")
+            t0 = time.perf_counter()
+            tri = triangle_count(rt, g)
+            wall_tri = time.perf_counter() - t0
+            csv.row(f"{ds}/{m}", 0,
+                    f"simPR={sim_pr:.4e};simSSSP={sim_ss:.4e};"
+                    f"triangles={tri};wallTri={wall_tri:.1f}s")
+            out[(ds, m)] = (sim_pr, sim_ss)
+    return out

@@ -1,0 +1,61 @@
+"""Shared benchmark substrate: dataset proxies, clusters, CSV output.
+
+The paper's SNAP datasets are billion-edge; the container is one CPU core.
+Each dataset is replaced by a generator-matched proxy (same family, same
+average degree, same skew mechanism — R-MAT for the scale-free graphs, a
+lattice for roadNet), with machine counts scaled to keep |E|/p in a sane
+regime.  Trends/orderings are the reproduction target (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from repro.core import Cluster, Machine, scaled_paper_cluster
+from repro.data import rmat, road_mesh
+
+_CACHE = {}
+
+
+def dataset(name: str, quick: bool = True):
+    """Proxy graphs: (name, paper dataset, family)."""
+    if (name, quick) in _CACHE:
+        return _CACHE[(name, quick)]
+    s = 0 if quick else 1          # +1 scale in --full mode
+    specs = {
+        # paper dataset: (scale, edge_factor) or mesh side
+        "TW": ("rmat", 13 + s, 29),   # Twitter: extreme skew, dense
+        "CO": ("rmat", 12 + s, 38),   # com-Orkut: dense social
+        "LJ": ("rmat", 13 + s, 7),    # LiveJournal: avg deg ~13.6
+        "PO": ("rmat", 12 + s, 9),    # Pokec
+        "CP": ("rmat", 13 + s, 4),    # cit-Patents: sparse, mild skew
+        "RN": ("mesh", 150 * (1 + s), 0),  # roadNet-CA: mesh-like
+    }
+    kind, a, b = specs[name]
+    g = rmat(a, edge_factor=b, seed=42) if kind == "rmat" \
+        else road_mesh(a, rewire=0.02, seed=42)
+    _CACHE[(name, quick)] = g
+    return g
+
+
+def cluster_for(name: str, g, slack: float = 1.8) -> Cluster:
+    """Paper machine template: 1/5 super machines on big graphs, 1/3 else."""
+    if name in ("TW", "CO"):
+        return scaled_paper_cluster(2, 10, g.num_edges, slack=slack)
+    return scaled_paper_cluster(3, 6, g.num_edges, slack=slack)
+
+
+class CSV:
+    """``name,us_per_call,derived`` rows, as benchmarks/run.py promises."""
+
+    def __init__(self, table: str):
+        self.table = table
+
+    def row(self, name: str, seconds: float, derived):
+        print(f"{self.table}/{name},{seconds*1e6:.0f},{derived}", flush=True)
+
+
+def timed(fn, *args, **kwargs):
+    t0 = time.perf_counter()
+    out = fn(*args, **kwargs)
+    return out, time.perf_counter() - t0

@@ -1,0 +1,37 @@
+"""Paper Fig. 12 / Table 14: TC of WindGP vs all baselines, heterogeneous
+machines, six dataset proxies."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import evaluate, windgp
+from repro.core.baselines import PARTITIONERS
+
+from .common import CSV, cluster_for, dataset, timed
+
+DATASETS = ("TW", "CO", "LJ", "PO", "CP", "RN")
+METHODS = ("hash", "dbh", "greedy", "hdrf", "ebv", "ne", "metis")
+
+
+def run(quick: bool = True):
+    csv = CSV("fig12_compare_tc")
+    summary = {}
+    for ds in DATASETS:
+        g = dataset(ds, quick)
+        cl = cluster_for(ds, g)
+        tcs = {}
+        for m in METHODS:
+            assign, dt = timed(PARTITIONERS[m], g, cl)
+            s = evaluate(g, assign, cl)
+            tcs[m] = s.tc
+            csv.row(f"{ds}/{m}", dt, f"TC={s.tc:.4e};RF={s.rf:.3f}")
+        res, dt = timed(windgp, g, cl, t0=30, theta=0.02,
+                        alpha=0.1, beta=0.1)
+        tcs["windgp"] = res.stats.tc
+        csv.row(f"{ds}/windgp", dt,
+                f"TC={res.stats.tc:.4e};RF={res.stats.rf:.3f}")
+        best_other = min(v for k, v in tcs.items() if k != "windgp")
+        csv.row(f"{ds}/speedup_vs_best", 0,
+                f"{best_other / tcs['windgp']:.2f}x")
+        summary[ds] = best_other / tcs["windgp"]
+    return summary

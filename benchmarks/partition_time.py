@@ -1,0 +1,27 @@
+"""Paper Tables 11/18: partitioning executing time of every method."""
+from __future__ import annotations
+
+from repro.core import windgp
+from repro.core.baselines import PARTITIONERS
+
+from .common import CSV, cluster_for, dataset, timed
+
+
+def run(quick: bool = True, datasets=("CO", "LJ", "PO", "CP", "RN")):
+    csv = CSV("tab11_partition_time")
+    out = {}
+    for ds in datasets:
+        g = dataset(ds, quick)
+        cl = cluster_for(ds, g)
+        times = {}
+        for m in ("hdrf", "ne", "ebv", "metis"):
+            _, dt = timed(PARTITIONERS[m], g, cl)
+            times[m] = dt
+            csv.row(f"{ds}/{m}", dt, f"{dt:.2f}s")
+        _, dt = timed(windgp, g, cl, t0=8, alpha=0.1, beta=0.1)
+        times["windgp"] = dt
+        csv.row(f"{ds}/windgp", dt, f"{dt:.2f}s")
+        csv.row(f"{ds}/windgp_vs_ne", 0,
+                f"{times['windgp'] / max(times['ne'], 1e-9):.2f}x")
+        out[ds] = times
+    return out

@@ -1,0 +1,213 @@
+"""Roofline analysis per (arch × shape × mesh) — EXPERIMENTS.md §Roofline.
+
+Three terms per cell, in seconds per step (TPU v5e constants):
+
+    compute    = FLOPs_per_device / 197e12         (bf16 MXU peak)
+    memory     = HBM_bytes_per_device / 819e9
+    collective = collective_bytes_per_device / 50e9 (ICI per link)
+
+FLOPs/HBM-bytes use an *analytic* closed-form model (documented below):
+XLA's ``cost_analysis()`` on CPU counts every ``lax.scan`` body exactly
+once (verified experimentally: L=2 and L=4 report identical FLOPs), so the
+compiled numbers are only used as a consistency check on the loop-free
+portion.  Collective bytes come from the compiled HLO with loop-body
+collectives scaled by the layer-scan trip count (recorded by dryrun.py).
+
+MODEL_FLOPS = 6·N_active·T (the assignment's definition) is reported
+against the analytic total: the gap is remat recompute, attention
+quadratic terms, and MoE capacity-padding waste.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import SHAPES, get_config           # noqa: E402
+from repro.models import active_param_count, param_count  # noqa: E402
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link
+
+
+# ---------------------------------------------------------------------------
+# analytic FLOP model
+# ---------------------------------------------------------------------------
+
+def _matmul_params(cfg) -> int:
+    """Active params participating in matmuls (embedding lookup is free)."""
+    n = active_param_count(cfg)
+    if cfg.input_mode == "tokens" and not cfg.tie_embeddings:
+        n -= cfg.vocab_size * cfg.d_model          # the lookup table
+    return n
+
+
+def _attn_layers(cfg) -> int:
+    return sum(1 for i in range(cfg.num_layers) if cfg.layer_kind(i) == "attn")
+
+
+def _ssm_layers(cfg) -> int:
+    return cfg.num_layers - _attn_layers(cfg)
+
+
+def flops_fwd(cfg, B: int, S: int, ctx: int | None = None) -> float:
+    """Forward FLOPs for B sequences of S new tokens (ctx = KV history)."""
+    T = B * S
+    f = 2.0 * _matmul_params(cfg) * T
+    hd, H = cfg.head_dim_, cfg.num_heads
+    la, ls = _attn_layers(cfg), _ssm_layers(cfg)
+    if la:
+        if ctx is None:                      # causal self-attention
+            f += la * 2.0 * B * S * S * H * hd          # scores+values, /2 causal *2 ops
+        else:                                # decode: attend over ctx
+            qk = (cfg.kv_lora_rank + cfg.qk_rope_dim
+                  if cfg.attn_type == "mla" else hd)
+            vd = cfg.kv_lora_rank if cfg.attn_type == "mla" else hd
+            f += la * 2.0 * B * S * ctx * H * (qk + vd)
+    if ls:
+        nh, dh, ds = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+        L = cfg.ssd_chunk
+        if ctx is None:
+            f += ls * 2.0 * T * nh * (L * (ds + dh) + 2.0 * ds * dh)
+        else:                                # single-step recurrence
+            f += ls * 4.0 * B * S * nh * ds * dh
+    # MoE capacity padding: compiled expert matmuls run at capacity
+    if cfg.num_experts:
+        f *= 1.0  # padding waste accounted in flops_step(as_compiled)
+    return f
+
+
+def flops_step(cfg, shape: str, as_compiled: bool = True) -> float:
+    """Whole-step FLOPs across all devices."""
+    sh = SHAPES[shape]
+    B, S, kind = sh["global_batch"], sh["seq_len"], sh["kind"]
+    if kind == "train":
+        fwd = flops_fwd(cfg, B, S)
+        mult = 4.0 if as_compiled else 3.0   # remat re-forward
+        f = fwd * mult
+    elif kind == "prefill":
+        f = flops_fwd(cfg, B, S)
+    else:
+        f = flops_fwd(cfg, B, 1, ctx=S)
+    if as_compiled and cfg.num_experts:
+        f *= cfg.capacity_factor             # expert-buffer padding waste
+    return f
+
+
+def model_flops(cfg, shape: str) -> float:
+    """The assignment's MODEL_FLOPS: 6·N_active·D (D = tokens processed)."""
+    sh = SHAPES[shape]
+    B, S, kind = sh["global_batch"], sh["seq_len"], sh["kind"]
+    tokens = B * (S if kind != "decode" else 1)
+    n = active_param_count(cfg)
+    return (6.0 if kind == "train" else 2.0) * n * tokens
+
+
+# ---------------------------------------------------------------------------
+# analytic HBM-traffic model (per device)
+# ---------------------------------------------------------------------------
+
+def bytes_step(cfg, shape: str, devices: int, model_par: int = 16,
+               data_par: int | None = None) -> float:
+    sh = SHAPES[shape]
+    B, S, kind = sh["global_batch"], sh["seq_len"], sh["kind"]
+    data_par = data_par or max(1, devices // model_par)
+    P = param_count(cfg)
+    n_params_dev = P / model_par
+    if P > 12e9:                              # FSDP'd archs
+        n_params_dev /= data_par
+    B_dev = max(1, B // data_par)
+    d, L = cfg.d_model, cfg.num_layers
+    if kind == "train":
+        # params: fwd read + bwd read (bf16) + grad w/r (f32) + m,v r/w
+        # (f32) + param write — ≈ 30 bytes per element-shard.
+        pb = n_params_dev * 30.0
+        # activations: ~12 (B,S,d)-sized reads+writes per layer (remat'd),
+        # bf16.
+        ab = L * B_dev * S * d * 12.0 * 2.0
+        return pb + ab
+    if kind == "prefill":
+        pb = n_params_dev * 2.0
+        ab = L * B_dev * S * d * 6.0 * 2.0
+        cache = _cache_bytes(cfg, B_dev, S, model_par)
+        return pb + ab + cache
+    # decode: params once + full cache read per token
+    pb = n_params_dev * 2.0
+    cache = _cache_bytes(cfg, B_dev, S, model_par)
+    return pb + cache
+
+
+def _cache_bytes(cfg, B_dev, S, model_par) -> float:
+    la, ls = _attn_layers(cfg), _ssm_layers(cfg)
+    out = 0.0
+    if la:
+        if cfg.attn_type == "mla":
+            per_tok = cfg.kv_lora_rank + cfg.qk_rope_dim
+        else:
+            per_tok = 2 * cfg.num_kv_heads * cfg.head_dim_
+        out += la * B_dev * S * per_tok * 2.0 / model_par  # seq- or kv-sharded
+    if ls:
+        out += ls * B_dev * cfg.ssm_heads * cfg.ssm_state * cfg.ssm_head_dim * 4.0
+    return out
+
+
+# ---------------------------------------------------------------------------
+# table assembly
+# ---------------------------------------------------------------------------
+
+def analyze(record: dict) -> dict:
+    cfg = get_config(record["arch"])
+    devices = record["devices"]
+    model_par = 16
+    f_total = flops_step(cfg, record["shape"])
+    f_dev = f_total / devices
+    b_dev = bytes_step(cfg, record["shape"], devices, model_par)
+    c_dev = record["collectives"]["total_bytes_trip_scaled"]
+    t_c = f_dev / PEAK_FLOPS
+    t_m = b_dev / HBM_BW
+    t_x = c_dev / ICI_BW
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
+    mf = model_flops(cfg, record["shape"])
+    step_time = max(t_c, t_m, t_x)
+    mfu = mf / devices / PEAK_FLOPS / step_time if step_time else 0.0
+    return {
+        "arch": record["arch"], "shape": record["shape"],
+        "mesh": record["mesh"],
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+        "dominant": dom,
+        "model_flops": mf, "analytic_flops": f_total,
+        "useful_ratio": mf / f_total,
+        "roofline_fraction": mfu,
+        "peak_gib_per_dev": record["peak_bytes_per_device"] / 2 ** 30,
+        "hlo_flops_body_once": record.get("flops_hlo_body_once", -1),
+    }
+
+
+def run(path: str = "results/dryrun.jsonl", mesh: str = "pod16x16"):
+    rows = []
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            if "error" in r or r["mesh"] != mesh:
+                continue
+            rows.append(analyze(r))
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    hdr = (f"{'arch':24s} {'shape':12s} {'t_comp':>9s} {'t_mem':>9s} "
+           f"{'t_coll':>9s} {'dominant':>10s} {'useful':>7s} {'RLfrac':>7s} "
+           f"{'GiB/dev':>8s}")
+    print(hdr)
+    for r in rows:
+        print(f"{r['arch']:24s} {r['shape']:12s} "
+              f"{r['t_compute_s']:9.4f} {r['t_memory_s']:9.4f} "
+              f"{r['t_collective_s']:9.4f} {r['dominant']:>10s} "
+              f"{r['useful_ratio']:7.2f} {r['roofline_fraction']:7.3f} "
+              f"{r['peak_gib_per_dev']:8.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run(*sys.argv[1:])

@@ -1,0 +1,48 @@
+"""Benchmark entry: one function per paper table/figure.
+
+Prints ``table/name,us_per_call,derived`` CSV rows.  ``--full`` doubles the
+graph scales (container default is laptop-scale, see DESIGN.md §7).
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only fig12,...]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from . import (ablation, bsp_runtime, compare_tc, partition_time,
+               scale_graphsize, scale_machines, tc_vs_runtime, tuning)
+
+TABLES = {
+    "fig12": compare_tc.run,          # TC vs baselines
+    "fig8": ablation.run,             # technique ladder
+    "tab4_9": tuning.run,             # hyper-parameter grids
+    "fig13": scale_graphsize.run,     # graph-size scalability
+    "fig14_15": scale_machines.run,   # machine count/types
+    "tab11": partition_time.run,      # partitioning time
+    "tab1": tc_vs_runtime.run,        # TC ∝ runtime
+    "tab15_16": bsp_runtime.run,      # distributed algorithm runtimes
+}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated table keys")
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else set(TABLES)
+    t0 = time.perf_counter()
+    print("table/name,us_per_call,derived")
+    for key, fn in TABLES.items():
+        if key not in only:
+            continue
+        t = time.perf_counter()
+        fn(quick=not args.full)
+        print(f"_meta/{key}_wall,{(time.perf_counter()-t)*1e6:.0f},done",
+              flush=True)
+    print(f"_meta/total_wall,{(time.perf_counter()-t0)*1e6:.0f},done")
+
+
+if __name__ == "__main__":
+    main()

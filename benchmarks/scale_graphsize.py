@@ -1,0 +1,34 @@
+"""Paper Fig. 13 / Table 12: scalability with Graph500 R-MAT scale."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import evaluate, scaled_paper_cluster, windgp
+from repro.core.baselines import PARTITIONERS
+from repro.data import graph500
+
+from .common import CSV, timed
+
+
+def run(quick: bool = True):
+    csv = CSV("fig13_scale_graphsize")
+    scales = range(10, 15) if quick else range(10, 17)
+    tc_by_scale = {}
+    for s in scales:
+        g = graph500(s, seed=5)
+        cl = scaled_paper_cluster(2, 10, g.num_edges, slack=1.8)
+        res, dt = timed(windgp, g, cl, t0=20, theta=0.02,
+                        alpha=0.1, beta=0.1)
+        csv.row(f"S{s}/windgp", dt,
+                f"E={g.num_edges};TC={res.stats.tc:.4e}")
+        for m in ("ne", "hdrf"):
+            assign, dtm = timed(PARTITIONERS[m], g, cl)
+            st = evaluate(g, assign, cl)
+            csv.row(f"S{s}/{m}", dtm, f"TC={st.tc:.4e}")
+        tc_by_scale[s] = res.stats.tc
+    # growth slope (paper: WindGP <= 1.8, others > 2)
+    ss = sorted(tc_by_scale)
+    slopes = [np.log2(tc_by_scale[b] / tc_by_scale[a])
+              for a, b in zip(ss, ss[1:])]
+    csv.row("windgp/slope", 0, f"{np.mean(slopes):.2f}")
+    return tc_by_scale

@@ -1,0 +1,47 @@
+"""Paper Figs. 14-15: scalability with machine count and machine-type count."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import Cluster, Machine, evaluate, scaled_paper_cluster, windgp
+from repro.core.baselines import PARTITIONERS
+
+from .common import CSV, dataset, timed
+
+
+def run(quick: bool = True):
+    csv = CSV("fig14_15_scale_machines")
+    g = dataset("LJ", quick)
+    # Fig 14: machine count sweep (1/3 super, like the paper)
+    for p in (9, 15, 21, 30, 45):
+        cl = scaled_paper_cluster(p // 3, p - p // 3, g.num_edges, slack=1.8)
+        res, dt = timed(windgp, g, cl, t0=20, theta=0.02,
+                        alpha=0.1, beta=0.1)
+        csv.row(f"machines={p}/windgp", dt, f"TC={res.stats.tc:.4e}")
+        a, dtn = timed(PARTITIONERS["ne"], g, cl)
+        csv.row(f"machines={p}/ne", dtn,
+                f"TC={evaluate(g, a, cl).tc:.4e}")
+
+    # Fig 15: machine-type count sweep at p=9
+    total_units = 3.0 * g.num_edges * 1.8
+    for ntypes in (1, 2, 3, 4, 6):
+        machines = []
+        # evenly split 9 machines into ntypes tiers; tier k is 1+k/2 "bigger"
+        weights = np.array([1 + 0.5 * k for k in range(ntypes)])
+        shares = np.repeat(weights, [9 // ntypes] * (ntypes - 1)
+                           + [9 - (9 // ntypes) * (ntypes - 1)])
+        mem = total_units * shares / shares.sum()
+        for k, m in zip(np.repeat(np.arange(ntypes),
+                                  [9 // ntypes] * (ntypes - 1)
+                                  + [9 - (9 // ntypes) * (ntypes - 1)]), mem):
+            c = 5 + 2.5 * k
+            machines.append(Machine(float(m), c / 2, c, c))
+        cl = Cluster(machines=tuple(machines))
+        res, dt = timed(windgp, g, cl, t0=20, theta=0.02,
+                        alpha=0.1, beta=0.1)
+        csv.row(f"types={ntypes}/windgp", dt, f"TC={res.stats.tc:.4e}")
+        for m in ("ne", "ebv"):
+            a, dtm = timed(PARTITIONERS[m], g, cl)
+            csv.row(f"types={ntypes}/{m}", dtm,
+                    f"TC={evaluate(g, a, cl).tc:.4e}")
+    return None

@@ -1,0 +1,57 @@
+"""Paper Table 1: TC is proportional to the distributed running time.
+
+Two measurements per (partitioner, app):
+  * simulated BSP makespan on the heterogeneous cluster (cost-model time,
+    driven by the *measured* per-superstep active sets of the real run);
+  * wall-clock of the real JAX BSP engine (homogeneous container CPU —
+    engine-speed sanity, not the heterogeneity signal).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.bsp import PartitionRuntime, bfs, pagerank, simulate_runtime, sssp
+from repro.core import evaluate, windgp
+from repro.core.baselines import PARTITIONERS
+
+from .common import CSV, cluster_for, dataset, timed
+
+
+def run(quick: bool = True, ds: str = "LJ"):
+    csv = CSV("tab1_tc_vs_runtime")
+    g = dataset(ds, quick)
+    cl = cluster_for(ds, g)
+    rows = []
+    for m in ("hdrf", "ne", "windgp"):
+        if m == "windgp":
+            assign = windgp(g, cl, t0=20, theta=0.02,
+                            alpha=0.1, beta=0.1).assign
+        else:
+            assign = PARTITIONERS[m](g, cl)
+        tc = evaluate(g, assign, cl).tc
+        rt = PartitionRuntime.build(g, assign, cl.p)
+
+        t0 = time.perf_counter()
+        _, act_pr = pagerank(rt, num_iters=10)
+        wall_pr = time.perf_counter() - t0
+        sim_pr = simulate_runtime(rt, cl, num_steps=10)
+
+        t0 = time.perf_counter()
+        _, act_ss = sssp(rt, source=0, num_iters=15)
+        wall_ss = time.perf_counter() - t0
+        sim_ss = simulate_runtime(rt, cl, actives=act_ss,
+                                  comm_scale="active")
+
+        csv.row(f"{ds}/{m}", 0,
+                f"TC={tc:.4e};simPR={sim_pr:.4e};simSSSP={sim_ss:.4e};"
+                f"wallPR={wall_pr:.2f}s;wallSSSP={wall_ss:.2f}s")
+        rows.append((tc, sim_pr, sim_ss))
+    # proportionality check (paper: <10% error for dense)
+    tcs = np.array([r[0] for r in rows])
+    prs = np.array([r[1] for r in rows])
+    ratio = prs / tcs
+    err = ratio.std() / ratio.mean()
+    csv.row(f"{ds}/dense_proportionality_cv", 0, f"{err:.4f}")
+    return rows

@@ -1,0 +1,24 @@
+"""Train a (reduced) assigned-architecture LM with the full substrate:
+synthetic data pipeline, AdamW, remat, checkpoint/resume.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 60]
+"""
+import argparse
+import tempfile
+
+from repro.launch.train import main as train_main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--arch", default="qwen3-4b")
+    args = ap.parse_args()
+    ckpt = tempfile.mkdtemp(prefix="lm_ckpt_")
+    rc = train_main([
+        "--arch", args.arch, "--reduced",
+        "--steps", str(args.steps), "--batch", "8", "--seq", "128",
+        "--lr", "3e-3", "--checkpoint-dir", ckpt,
+        "--checkpoint-every", "25", "--log-every", "10",
+    ])
+    print(f"checkpoints in {ckpt}")
+    raise SystemExit(rc)

@@ -1,0 +1,16 @@
+"""BSP distributed graph engine (JAX): the runtime the partitions feed.
+
+The paper's machines run Plato-style BSP supersteps; here each *machine* is
+a mesh device (or a vmap lane in single-device simulation).  Cross-machine
+vertex synchronization is a fixed-shape collective over the replicated-
+vertex table — TPU-native, and its size shrinks with partition quality.
+"""
+from .partition_runtime import PartitionRuntime
+from .apps import (pagerank, sssp, bfs, triangle_count,
+                   connected_components)
+from . import ref
+from .simulate import simulate_superstep_times, simulate_runtime
+
+__all__ = ["PartitionRuntime", "pagerank", "sssp", "bfs", "triangle_count",
+           "connected_components",
+           "ref", "simulate_superstep_times", "simulate_runtime"]

@@ -1,0 +1,112 @@
+"""Build fixed-shape per-machine arrays from an edge partition.
+
+Every machine gets the same padded shapes (shard_map/vmap require it):
+
+* ``local_vertex_gid``: (p, Vmax) global id of each local vertex (pad: -1)
+* ``local_edges``:      (p, Emax, 2) endpoints in *local* indices (pad: 0)
+* ``edge_valid``:       (p, Emax) bool
+* ``edge_weight``:      (p, Emax) float32
+* ``vertex_valid``:     (p, Vmax) bool
+* ``global_degree``:    (p, Vmax) degree of the vertex in G (pad: 1)
+* ``rep_slot``:         (p, Vmax) slot into the replica exchange table,
+                        -1 if the vertex lives on a single machine.
+
+The replica table has one slot per vertex present on ≥2 machines; the BSP
+exchange is a psum/pmin over a (R+1,) buffer (last slot = scatter dump for
+non-replicated lanes).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core.graph import Graph
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionRuntime:
+    p: int
+    num_vertices: int
+    num_replicas: int                  # R
+    local_vertex_gid: np.ndarray       # (p, Vmax) int32
+    vertex_valid: np.ndarray           # (p, Vmax) bool
+    local_edges: np.ndarray            # (p, Emax, 2) int32 (local indices)
+    edge_valid: np.ndarray             # (p, Emax) bool
+    edge_weight: np.ndarray            # (p, Emax) float32
+    global_degree: np.ndarray          # (p, Vmax) int32
+    rep_slot: np.ndarray               # (p, Vmax) int32
+    verts_per_machine: np.ndarray      # (p,)
+    edges_per_machine: np.ndarray      # (p,)
+
+    @property
+    def vmax(self) -> int:
+        return self.local_vertex_gid.shape[1]
+
+    @property
+    def emax(self) -> int:
+        return self.local_edges.shape[1]
+
+    @classmethod
+    def build(cls, g: Graph, assign: np.ndarray, p: int,
+              edge_weights: np.ndarray | None = None) -> "PartitionRuntime":
+        assert (assign >= 0).all() and assign.max() < p
+        deg = g.degree().astype(np.int32)
+        if edge_weights is None:
+            edge_weights = np.ones(g.num_edges, dtype=np.float32)
+
+        locals_, edges_, weights_ = [], [], []
+        for i in range(p):
+            eids = np.flatnonzero(assign == i)
+            e = g.edges[eids]
+            verts = np.unique(e)
+            lut = np.full(g.num_vertices, -1, dtype=np.int64)
+            lut[verts] = np.arange(len(verts))
+            locals_.append(verts)
+            edges_.append(lut[e])
+            weights_.append(edge_weights[eids])
+
+        vmax = max(1, max(len(v) for v in locals_))
+        emax = max(1, max(len(e) for e in edges_))
+        member_count = np.zeros(g.num_vertices, dtype=np.int32)
+        for verts in locals_:
+            member_count[verts] += 1
+        rep_vertices = np.flatnonzero(member_count >= 2)
+        rep_index = np.full(g.num_vertices, -1, dtype=np.int32)
+        rep_index[rep_vertices] = np.arange(len(rep_vertices), dtype=np.int32)
+
+        lv = np.full((p, vmax), -1, dtype=np.int32)
+        vv = np.zeros((p, vmax), dtype=bool)
+        le = np.zeros((p, emax, 2), dtype=np.int32)
+        ev = np.zeros((p, emax), dtype=bool)
+        ew = np.zeros((p, emax), dtype=np.float32)
+        gd = np.ones((p, vmax), dtype=np.int32)
+        rs = np.full((p, vmax), -1, dtype=np.int32)
+        for i in range(p):
+            nv, ne = len(locals_[i]), len(edges_[i])
+            lv[i, :nv] = locals_[i]
+            vv[i, :nv] = True
+            gd[i, :nv] = deg[locals_[i]]
+            rs[i, :nv] = rep_index[locals_[i]]
+            if ne:
+                le[i, :ne] = edges_[i]
+                ev[i, :ne] = True
+                ew[i, :ne] = weights_[i]
+        return cls(
+            p=p, num_vertices=g.num_vertices,
+            num_replicas=len(rep_vertices),
+            local_vertex_gid=lv, vertex_valid=vv, local_edges=le,
+            edge_valid=ev, edge_weight=ew, global_degree=gd, rep_slot=rs,
+            verts_per_machine=np.array([len(v) for v in locals_]),
+            edges_per_machine=np.array([len(e) for e in edges_]))
+
+    def gather_global(self, local_values: np.ndarray,
+                      fill: float = 0.0) -> np.ndarray:
+        """Merge per-machine local vertex values into a (V,) global array.
+
+        Replicated vertices must agree across machines (post-exchange)."""
+        out = np.full(self.num_vertices, fill, dtype=np.asarray(local_values).dtype)
+        for i in range(self.p):
+            m = self.vertex_valid[i]
+            out[self.local_vertex_gid[i, m]] = local_values[i, m]
+        return out

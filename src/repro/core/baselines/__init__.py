@@ -1,0 +1,22 @@
+"""Baseline edge partitioners the paper compares against (Section 5).
+
+Each is adapted — exactly as the paper does for fairness — to heterogeneous
+machines by adding per-machine memory-capacity constraints; otherwise they
+optimize their original homogeneous objectives.
+"""
+from .streaming import dbh, ebv, hdrf, powergraph_greedy, random_hash
+from .ne import ne
+from .metis_like import metis_like
+
+PARTITIONERS = {
+    "hash": random_hash,
+    "dbh": dbh,
+    "greedy": powergraph_greedy,
+    "hdrf": hdrf,
+    "ebv": ebv,
+    "ne": ne,
+    "metis": metis_like,
+}
+
+__all__ = ["dbh", "ebv", "hdrf", "powergraph_greedy", "random_hash", "ne",
+           "metis_like", "PARTITIONERS"]

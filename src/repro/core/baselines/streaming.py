@@ -1,0 +1,162 @@
+"""Streaming edge partitioners: hash, DBH, PowerGraph-greedy, HDRF, EBV.
+
+All receive the same heterogeneous-memory adaptation the paper applies to
+its baselines: a per-machine edge-capacity cap derived from M_i (identical
+to the one WindGP's preprocessing uses), with overflow spilling to the
+best-scoring machine that still has room.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..capacity import _mem_cap
+from ..graph import Graph
+from ..machines import Cluster
+
+
+def _caps(cluster: Cluster, g: Graph) -> np.ndarray:
+    return np.floor(_mem_cap(cluster, g.num_vertices, g.num_edges)).astype(np.int64)
+
+
+def _spill(scores: np.ndarray, counts: np.ndarray, caps: np.ndarray) -> int:
+    """Best-scoring machine with room (scores higher = better)."""
+    ok = counts < caps
+    if not ok.any():
+        return int(np.argmin(counts - caps))   # least-overfull fallback
+    masked = np.where(ok, scores, -np.inf)
+    return int(np.argmax(masked))
+
+
+def random_hash(g: Graph, cluster: Cluster, seed: int = 0) -> np.ndarray:
+    """f(e) = hash(e) % p with memory spill."""
+    p = cluster.p
+    caps = _caps(cluster, g)
+    h = (g.edges[:, 0].astype(np.uint64) * np.uint64(2654435761)
+         ^ g.edges[:, 1].astype(np.uint64) * np.uint64(40503)) % np.uint64(p)
+    assign = h.astype(np.int32)
+    counts = np.bincount(assign, minlength=p)
+    if np.all(counts <= caps):
+        return assign
+    # deterministic spill pass
+    counts = np.zeros(p, dtype=np.int64)
+    for e in range(g.num_edges):
+        i = int(assign[e])
+        if counts[i] >= caps[i]:
+            i = _spill(np.zeros(p), counts, caps)
+            assign[e] = i
+        counts[i] += 1
+    return assign
+
+
+def dbh(g: Graph, cluster: Cluster, seed: int = 0) -> np.ndarray:
+    """Degree-Based Hashing [Xie et al. 2014]: hash the low-degree endpoint."""
+    p = cluster.p
+    caps = _caps(cluster, g)
+    deg = g.degree()
+    u, v = g.edges[:, 0], g.edges[:, 1]
+    low = np.where(deg[u] <= deg[v], u, v).astype(np.uint64)
+    assign = ((low * np.uint64(2654435761)) % np.uint64(p)).astype(np.int32)
+    counts = np.bincount(assign, minlength=p)
+    if np.all(counts <= caps):
+        return assign
+    counts = np.zeros(p, dtype=np.int64)
+    for e in range(g.num_edges):
+        i = int(assign[e])
+        if counts[i] >= caps[i]:
+            i = _spill(np.zeros(p), counts, caps)
+            assign[e] = i
+        counts[i] += 1
+    return assign
+
+
+def powergraph_greedy(g: Graph, cluster: Cluster, seed: int = 0) -> np.ndarray:
+    """PowerGraph's greedy vertex-cut [Gonzalez et al. 2012].
+
+    Prefer machines holding both endpoints, then either, then least loaded;
+    ties broken by load.
+    """
+    p = cluster.p
+    caps = _caps(cluster, g)
+    member = np.zeros((p, g.num_vertices), dtype=bool)
+    counts = np.zeros(p, dtype=np.int64)
+    assign = np.empty(g.num_edges, dtype=np.int32)
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(g.num_edges)       # stream order
+    load_score = lambda: -counts / np.maximum(1, caps)
+    for e in order:
+        u, v = g.edges[e]
+        au, av = member[:, u], member[:, v]
+        both, either = au & av, au | av
+        base = load_score()
+        if both.any():
+            scores = np.where(both, base + 4, -np.inf)
+        elif either.any():
+            scores = np.where(either, base + 2, -np.inf)
+        else:
+            scores = base
+        i = _spill(scores, counts, caps)
+        assign[e] = i
+        member[i, u] = member[i, v] = True
+        counts[i] += 1
+    return assign
+
+
+def hdrf(g: Graph, cluster: Cluster, seed: int = 0,
+         lam: float = 1.0, eps: float = 1.0) -> np.ndarray:
+    """High-Degree Replicated First [Petroni et al. 2015]."""
+    p = cluster.p
+    caps = _caps(cluster, g)
+    member = np.zeros((p, g.num_vertices), dtype=bool)
+    counts = np.zeros(p, dtype=np.int64)
+    pdeg = np.zeros(g.num_vertices, dtype=np.int64)   # partial degrees
+    assign = np.empty(g.num_edges, dtype=np.int32)
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(g.num_edges)
+    for e in order:
+        u, v = g.edges[e]
+        pdeg[u] += 1
+        pdeg[v] += 1
+        du, dv = pdeg[u], pdeg[v]
+        theta_u = du / (du + dv)
+        theta_v = 1.0 - theta_u
+        g_u = np.where(member[:, u], 1.0 + (1.0 - theta_u), 0.0)
+        g_v = np.where(member[:, v], 1.0 + (1.0 - theta_v), 0.0)
+        maxs, mins = counts.max(), counts.min()
+        c_bal = lam * (maxs - counts) / (eps + maxs - mins)
+        i = _spill(g_u + g_v + c_bal, counts, caps)
+        assign[e] = i
+        member[i, u] = member[i, v] = True
+        counts[i] += 1
+    return assign
+
+
+def ebv(g: Graph, cluster: Cluster, seed: int = 0,
+        w_e: float = 1.0, w_v: float = 1.0) -> np.ndarray:
+    """Efficient-and-Balanced Vertex-cut [Zhang et al. 2021].
+
+    Streams edges sorted by end-degree sum ascending; score for machine i:
+    I(u∉V_i) + I(v∉V_i) + w_e·p|E_i|/|E| + w_v·p|V_i|/|V|  (minimized).
+    """
+    p = cluster.p
+    caps = _caps(cluster, g)
+    member = np.zeros((p, g.num_vertices), dtype=bool)
+    counts = np.zeros(p, dtype=np.int64)
+    vcounts = np.zeros(p, dtype=np.int64)
+    assign = np.empty(g.num_edges, dtype=np.int32)
+    deg = g.degree()
+    order = np.argsort(deg[g.edges[:, 0]] + deg[g.edges[:, 1]], kind="stable")
+    nE, nV = g.num_edges, max(1, g.num_vertices)
+    for e in order:
+        u, v = g.edges[e]
+        rep = (~member[:, u]).astype(np.float64) + (~member[:, v])
+        score = rep + w_e * p * counts / nE + w_v * p * vcounts / nV
+        i = _spill(-score, counts, caps)
+        assign[e] = i
+        if not member[i, u]:
+            member[i, u] = True
+            vcounts[i] += 1
+        if not member[i, v]:
+            member[i, v] = True
+            vcounts[i] += 1
+        counts[i] += 1
+    return assign

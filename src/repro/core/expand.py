@@ -1,0 +1,229 @@
+"""Partition expansion via best-first search (paper Algorithms 2-3).
+
+For machine i with capacity δ_i we grow edge set E_i by repeatedly expanding
+the boundary vertex minimizing
+
+    w(v) = (1+α)|N(v)\\S| − (α + I_B(v)·β)|N(v)|            (paper Eq. 5)
+
+where S is the boundary set, C ⊆ S the core set (all remaining edges
+consumed) and B the global border set.  Neighborhoods are taken in the
+working graph of partition i — ``E(G) \\ Σ_{j<i} E_j`` (the input of
+Algorithm 2) — frozen at the start of this partition's expansion:
+
+* |N(v)|   = remaining degree of v when partition i starts;
+* |N(v)\\S| = those neighbors not yet in S (edges assigned *during* this
+  partition count toward cohesion |N(v)∩S|; edges consumed by earlier
+  partitions never count).
+
+Expanding x (AllocEdges, Alg. 3) pulls every unassigned neighbor y of x
+into S and assigns all unassigned edges between y and S.  Invariant: within
+one partition's expansion, every unassigned edge incident to S leads
+outside S.
+
+Complexity: O(|E_i| + |V_i| log |V_i|) per partition via a lazy min-heap
+(the paper's Min-Heap optimization); set membership via uint8 bitmaps (the
+paper's bitmap optimization).  Per-vertex neighborhood work is numpy-
+vectorized.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+
+import numpy as np
+
+from .graph import Graph
+
+
+@dataclasses.dataclass
+class ExpansionState:
+    """Shared state across the p sequential partition expansions."""
+
+    g: Graph
+    epoch: np.ndarray             # (E,) int32: partition that took e, -1 free
+    rem_deg: np.ndarray           # (V,) int64: unassigned incident edges
+    in_border: np.ndarray         # (V,) uint8: B, replicated-vertex set
+    seed_heap: list               # lazy (rem_deg, v) heap for vertexSelection
+    unassigned_edges: int
+
+    @classmethod
+    def fresh(cls, g: Graph) -> "ExpansionState":
+        deg = g.degree().astype(np.int64)
+        heap = [(int(d), int(v)) for v, d in enumerate(deg) if d > 0]
+        heapq.heapify(heap)
+        return cls(
+            g=g,
+            epoch=np.full(g.num_edges, -1, dtype=np.int32),
+            rem_deg=deg.copy(),
+            in_border=np.zeros(g.num_vertices, dtype=np.uint8),
+            seed_heap=heap,
+            unassigned_edges=g.num_edges,
+        )
+
+    @property
+    def assigned(self) -> np.ndarray:
+        return self.epoch >= 0
+
+
+def _vertex_selection(st: ExpansionState, in_s: np.ndarray) -> int:
+    """Pick a fresh seed: minimum remaining degree among untouched vertices."""
+    h = st.seed_heap
+    while h:
+        d, v = h[0]
+        rd = st.rem_deg[v]
+        if rd <= 0 or in_s[v]:
+            heapq.heappop(h)
+            continue
+        if rd != d:  # stale priority: refresh lazily
+            heapq.heapreplace(h, (int(rd), v))
+            continue
+        return v
+    return -1
+
+
+def expand_partition(
+    st: ExpansionState,
+    part_id: int,
+    delta: int,
+    alpha: float,
+    beta: float,
+    *,
+    memory_limit: float | None = None,
+    m_node: float = 1.0,
+    m_edge: float = 2.0,
+    record_order: list | None = None,
+) -> np.ndarray:
+    """Grow one partition of up to ``delta`` edges; returns its edge ids.
+
+    If ``memory_limit`` is given, expansion stops early once the *actual*
+    memory footprint m_node·|V_i| + m_edge·|E_i| would exceed it (the δ from
+    preprocessing bounds it only through the |V|/|E| estimate).
+    """
+    g, V = st.g, st.g.num_vertices
+    indptr, indices, eids = g.indptr, g.indices, g.edge_ids
+    epoch, rem_deg, in_border = st.epoch, st.rem_deg, st.in_border
+    in_s = np.zeros(V, dtype=np.uint8)
+    in_c = np.zeros(V, dtype=np.uint8)
+    deg0 = rem_deg.copy()                   # |N(v)| in this partition's graph
+    ext = deg0.copy()                       # |N(v)\S|, starts at |N(v)|
+    edge_list: list[int] = []
+    heap: list[tuple[float, int]] = []
+    w_cur = np.zeros(V, dtype=np.float64)
+    n_vertices = 0
+    target = int(delta)
+
+    def join_s(y: int) -> None:
+        """Add y to S; assign all unassigned y→S edges (vectorized)."""
+        nonlocal n_vertices
+        in_s[y] = 1
+        n_vertices += 1
+        nb = indices[indptr[y]:indptr[y + 1]]
+        es = eids[indptr[y]:indptr[y + 1]]
+        live = epoch[es] == -1              # edges still in the working graph
+        nb_live, es_live = nb[live], es[live]
+        ext[nb_live] -= 1                   # y entered S (working-graph nbrs)
+        s_nb = in_s[nb_live] == 1
+        e_new, z_new = es_live[s_nb], nb_live[s_nb]
+        room = target - len(edge_list)
+        if len(e_new) > room:               # respect δ_i exactly (Alg.3 L8)
+            e_new, z_new = e_new[:room], z_new[:room]
+        if len(e_new):
+            epoch[e_new] = part_id
+            rem_deg[z_new] -= 1
+            rem_deg[y] -= len(e_new)
+            st.unassigned_edges -= len(e_new)
+            edge_list.extend(e_new.tolist())
+        # Refresh frontier priorities for affected S\C vertices (incl. y).
+        front = nb_live[s_nb & (in_c[nb_live] == 0)]
+        if in_c[y] == 0:
+            front = np.append(front, y)
+        if len(front):
+            ws = ((1.0 + alpha) * ext[front]
+                  - (alpha + beta * in_border[front]) * deg0[front])
+            w_cur[front] = ws
+            for w, v in zip(ws.tolist(), front.tolist()):
+                heapq.heappush(heap, (w, v))
+
+    while len(edge_list) < target and st.unassigned_edges > 0:
+        if memory_limit is not None and (
+                m_node * (n_vertices + 1) + m_edge * (len(edge_list) + 1)
+                > memory_limit + 1e-9):
+            break
+        # --- select the expansion vertex x (Alg.2 L4-7) -------------------
+        x = -1
+        while heap:
+            w, v = heap[0]
+            if in_c[v] or not in_s[v] or w != w_cur[v]:
+                heapq.heappop(heap)        # stale or consumed
+                continue
+            x = v
+            break
+        if x == -1:
+            x = _vertex_selection(st, in_s)
+            if x == -1:
+                break                      # nothing expandable remains
+            join_s(x)
+            if len(edge_list) >= target:
+                in_c[x] = 1
+                break
+        # --- AllocEdges(C, S, E_i, x, E) (Alg.3) ---------------------------
+        in_c[x] = 1
+        sl = slice(indptr[x], indptr[x + 1])
+        nbs = indices[sl][epoch[eids[sl]] == -1]     # unassigned edges only
+        for y in nbs[in_s[nbs] == 0].tolist():
+            if in_s[y]:                    # joined via an earlier sibling
+                continue
+            join_s(y)
+            if len(edge_list) >= target:
+                break
+
+    # B ← B ∪ (S \ C); plus core vertices that still have remaining edges
+    # (they will replicate into later partitions).
+    touched = np.flatnonzero(in_s)
+    in_border[touched[in_c[touched] == 0]] = 1
+    core = touched[in_c[touched] == 1]
+    in_border[core[rem_deg[core] > 0]] = 1
+    if record_order is not None:
+        record_order.extend(edge_list)
+    return np.asarray(edge_list, dtype=np.int64)
+
+
+def run_expansion(
+    g: Graph,
+    deltas: np.ndarray,
+    alpha: float = 0.3,
+    beta: float = 0.3,
+    *,
+    memories: np.ndarray | None = None,
+    m_node: float = 1.0,
+    m_edge: float = 2.0,
+    order: str = "asc_capacity",
+    state: ExpansionState | None = None,
+) -> tuple[np.ndarray, list[list[int]]]:
+    """Run Algorithm 2 for every machine; returns (assign, per-part order).
+
+    assign[e] = machine id, or -1 if the edge could not be placed under the
+    memory guard (callers must repair; WindGP's driver does).
+    ``order`` controls the machine visit order; ascending capacity keeps the
+    big-capacity machines for last so they absorb the irregular tail.
+    """
+    p = len(deltas)
+    st = state if state is not None else ExpansionState.fresh(g)
+    orders: list[list[int]] = [[] for _ in range(p)]
+    if order == "asc_capacity":
+        visit = np.argsort(np.asarray(deltas), kind="stable")
+    elif order == "desc_capacity":
+        visit = np.argsort(-np.asarray(deltas), kind="stable")
+    else:
+        visit = np.arange(p)
+    for i in visit:
+        lim = None if memories is None else float(memories[i])
+        rec: list[int] = []
+        expand_partition(
+            st, int(i), int(deltas[i]), alpha, beta,
+            memory_limit=lim, m_node=m_node, m_edge=m_edge, record_order=rec)
+        orders[int(i)] = rec
+        if st.unassigned_edges == 0:
+            break
+    assign = st.epoch.astype(np.int32).copy()
+    return assign, orders

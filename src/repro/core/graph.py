@@ -1,0 +1,94 @@
+"""Undirected graph in CSR form, numpy-backed.
+
+The partitioner is a host-side sequential heuristic (control plane), so the
+graph lives in numpy.  Edges are stored once with a canonical id; the CSR
+adjacency stores each edge twice (u->v and v->u) but both directions carry
+the same edge id, so edge-set membership is a single bitmap over E ids.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """Immutable CSR graph.
+
+    Attributes:
+      indptr:   (V+1,) int64 — CSR row pointers.
+      indices:  (2E,)  int32 — neighbor vertex ids.
+      edge_ids: (2E,)  int32 — canonical edge id for each adjacency slot;
+                the two directions of one undirected edge share an id.
+      edges:    (E, 2) int32 — canonical (u, v) with u < v.
+    """
+
+    indptr: np.ndarray
+    indices: np.ndarray
+    edge_ids: np.ndarray
+    edges: np.ndarray
+
+    @property
+    def num_vertices(self) -> int:
+        return len(self.indptr) - 1
+
+    @property
+    def num_edges(self) -> int:
+        return len(self.edges)
+
+    def degree(self, u=None):
+        deg = np.diff(self.indptr)
+        return deg if u is None else deg[u]
+
+    def neighbors(self, u: int) -> np.ndarray:
+        return self.indices[self.indptr[u]:self.indptr[u + 1]]
+
+    def incident_edge_ids(self, u: int) -> np.ndarray:
+        return self.edge_ids[self.indptr[u]:self.indptr[u + 1]]
+
+    @property
+    def avg_degree(self) -> float:
+        return 2.0 * self.num_edges / max(1, self.num_vertices)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"Graph(V={self.num_vertices}, E={self.num_edges}, "
+                f"maxdeg={int(self.degree().max(initial=0))})")
+
+
+def from_edge_list(edges: np.ndarray, num_vertices: int | None = None) -> Graph:
+    """Build a Graph from an (N, 2) array of (possibly duplicated) edges.
+
+    Self loops are dropped; duplicate/reverse duplicates are merged.
+    """
+    edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    # Canonicalize: u < v, drop self loops.
+    u = np.minimum(edges[:, 0], edges[:, 1])
+    v = np.maximum(edges[:, 0], edges[:, 1])
+    keep = u != v
+    u, v = u[keep], v[keep]
+    if num_vertices is None:
+        num_vertices = int(max(u.max(initial=-1), v.max(initial=-1)) + 1)
+    # Dedup via single key.
+    key = u * np.int64(num_vertices) + v
+    _, first = np.unique(key, return_index=True)
+    u, v = u[first], v[first]
+    E = len(u)
+    eid = np.arange(E, dtype=np.int32)
+
+    # Symmetric adjacency: (u->v, eid) and (v->u, eid).
+    src = np.concatenate([u, v])
+    dst = np.concatenate([v, u]).astype(np.int32)
+    eids = np.concatenate([eid, eid])
+    order = np.argsort(src, kind="stable")
+    src, dst, eids = src[order], dst[order], eids[order]
+    indptr = np.zeros(num_vertices + 1, dtype=np.int64)
+    np.add.at(indptr, src + 1, 1)
+    np.cumsum(indptr, out=indptr)
+    edges_canon = np.stack([u, v], axis=1).astype(np.int32)
+    return Graph(indptr=indptr, indices=dst, edge_ids=eids, edges=edges_canon)
+
+
+def subgraph_edge_mask(g: Graph, edge_mask: np.ndarray) -> Graph:
+    """Graph induced by the edges where edge_mask is True (vertex ids kept)."""
+    return from_edge_list(g.edges[edge_mask], num_vertices=g.num_vertices)

@@ -1,0 +1,288 @@
+"""Post-processing: Subgraph-Local Search (paper Algorithms 4-7).
+
+Two operators over the current edge assignment:
+
+* **destroy-and-repair** (Alg. 5): machines with T_i above the γ-quantile
+  threshold lose a θ-fraction of their edges (last-in-first-out, preserving
+  connectivity of what stays), which are greedily re-inserted by
+  BalancedGreedyRepair (Alg. 6) preferring machines already holding both
+  endpoints, then either endpoint, then anybody — always the feasible
+  machine with the lowest resulting T.
+* **re-partition** (Alg. 7): on N0 consecutive non-improvements, the worst
+  machine and its k-1 largest-replica-overlap peers are merged and re-expanded
+  with Algorithm 2 to escape local optima.
+
+All objective updates are incremental via per-(machine, vertex) incident-edge
+counts, so one destroy-repair sweep is O(p·|destroyed|) as in the paper's
+analysis.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from . import expand
+from .graph import Graph, from_edge_list
+from .machines import Cluster
+
+
+@dataclasses.dataclass
+class IncrementalTC:
+    """Incrementally-maintained per-machine costs for an edge assignment."""
+
+    g: Graph
+    cluster: Cluster
+    assign: np.ndarray            # (E,) int32, machine per edge (-1 = unassigned)
+    cnt: np.ndarray               # (p, V) int32: partition-i edges incident on v
+    edges_per: np.ndarray         # (p,)
+    verts_per: np.ndarray         # (p,)
+    t_cal: np.ndarray             # (p,)
+    t_com: np.ndarray             # (p,)
+    com_sum: np.ndarray           # (V,) Σ_{i∈S(v)} c_com[i]
+    replicas: np.ndarray          # (V,) |S(v)|
+
+    @classmethod
+    def build(cls, g: Graph, assign: np.ndarray, cluster: Cluster):
+        p, V = cluster.p, g.num_vertices
+        cnt = np.zeros((p, V), dtype=np.int32)
+        ok = assign >= 0
+        np.add.at(cnt, (assign[ok], g.edges[ok, 0]), 1)
+        np.add.at(cnt, (assign[ok], g.edges[ok, 1]), 1)
+        member = cnt > 0
+        edges_per = np.bincount(assign[ok], minlength=p).astype(np.float64)
+        verts_per = member.sum(axis=1).astype(np.float64)
+        c_com = cluster.c_com()
+        replicas = member.sum(axis=0).astype(np.int64)
+        com_sum = member.T.astype(np.float64) @ c_com
+        t_cal = cluster.c_node() * verts_per + cluster.c_edge() * edges_per
+        t_com = np.zeros(p)
+        for i in range(p):
+            vs = member[i]
+            t_com[i] = ((replicas[vs] - 1) * c_com[i]
+                        + (com_sum[vs] - c_com[i])).sum()
+        obj = cls(g=g, cluster=cluster, assign=assign.copy(), cnt=cnt,
+                  edges_per=edges_per, verts_per=verts_per, t_cal=t_cal,
+                  t_com=t_com, com_sum=com_sum, replicas=replicas)
+        return obj
+
+    # -- helpers -----------------------------------------------------------
+    @property
+    def t_total(self) -> np.ndarray:
+        return self.t_cal + self.t_com
+
+    @property
+    def tc(self) -> float:
+        return float(self.t_total.max())
+
+    def mem_used(self, i: int) -> float:
+        return (self.cluster.m_node * self.verts_per[i]
+                + self.cluster.m_edge * self.edges_per[i])
+
+    def _vertex_enter(self, i: int, v: int) -> None:
+        c_com = self.cluster.c_com()
+        # v becomes present on i: pairs (i, j) for each j already holding v.
+        self.t_com[i] += self.replicas[v] * c_com[i] + self.com_sum[v]
+        holders = np.flatnonzero(self.cnt[:, v] > 0)
+        self.t_com[holders] += c_com[holders] + c_com[i]
+        self.replicas[v] += 1
+        self.com_sum[v] += c_com[i]
+        self.verts_per[i] += 1
+        self.t_cal[i] += self.cluster.c_node()[i]
+
+    def _vertex_leave(self, i: int, v: int) -> None:
+        c_com = self.cluster.c_com()
+        self.replicas[v] -= 1
+        self.com_sum[v] -= c_com[i]
+        self.t_com[i] -= self.replicas[v] * c_com[i] + self.com_sum[v]
+        holders = np.flatnonzero(self.cnt[:, v] > 0)
+        holders = holders[holders != i]
+        self.t_com[holders] -= c_com[holders] + c_com[i]
+        self.verts_per[i] -= 1
+        self.t_cal[i] -= self.cluster.c_node()[i]
+
+    def remove_edge(self, e: int) -> None:
+        i = int(self.assign[e])
+        assert i >= 0
+        u, v = self.g.edges[e]
+        self.assign[e] = -1
+        self.edges_per[i] -= 1
+        self.t_cal[i] -= self.cluster.c_edge()[i]
+        for x in (int(u), int(v)):
+            self.cnt[i, x] -= 1
+            if self.cnt[i, x] == 0:
+                self._vertex_leave(i, x)
+
+    def add_edge(self, e: int, i: int) -> None:
+        assert self.assign[e] == -1
+        u, v = self.g.edges[e]
+        for x in (int(u), int(v)):
+            if self.cnt[i, x] == 0:
+                self._vertex_enter(i, x)
+            self.cnt[i, x] += 1
+        self.assign[e] = i
+        self.edges_per[i] += 1
+        self.t_cal[i] += self.cluster.c_edge()[i]
+
+    def delta_t_if_added(self, e: int, i: int) -> float:
+        """Resulting T_i if edge e were added to machine i (no mutation)."""
+        u, v = self.g.edges[e]
+        c_com = self.cluster.c_com()
+        dt = self.cluster.c_edge()[i]
+        for x in (int(u), int(v)):
+            if self.cnt[i, x] == 0:
+                dt += (self.cluster.c_node()[i]
+                       + self.replicas[x] * c_com[i] + self.com_sum[x])
+        return float(self.t_total[i] + dt)
+
+    def mem_after(self, e: int, i: int) -> float:
+        u, v = self.g.edges[e]
+        new_v = sum(1 for x in (int(u), int(v)) if self.cnt[i, x] == 0)
+        return (self.cluster.m_node * (self.verts_per[i] + new_v)
+                + self.cluster.m_edge * (self.edges_per[i] + 1))
+
+
+def balanced_greedy_repair(obj: IncrementalTC, e: int, cands) -> int:
+    """Algorithm 6: feasible candidate with the lowest resulting T, or -1."""
+    best, best_t = -1, np.inf
+    mem = obj.cluster.memory()
+    for i in cands:
+        i = int(i)
+        if obj.mem_after(e, i) > mem[i] + 1e-9:
+            continue
+        t = obj.delta_t_if_added(e, i)
+        if t < best_t:
+            best, best_t = i, t
+    return best
+
+
+def destroy_repair(obj: IncrementalTC, orders: list[list[int]],
+                   gamma: float, theta: float,
+                   rng: np.random.Generator) -> bool:
+    """Algorithm 5. Returns True iff TC strictly improved."""
+    tc_before = obj.tc
+    t = obj.t_total
+    thd = t.min() + gamma * (t.max() - t.min())
+    removed: list[int] = []
+    for i in range(obj.cluster.p):
+        if t[i] < thd - 1e-12 or obj.edges_per[i] == 0:
+            continue
+        k = max(1, int(np.ceil(theta * obj.edges_per[i])))
+        stack = orders[i]
+        # LIFO removal preserves the connectivity of the kept prefix.
+        take = []
+        while stack and len(take) < k:
+            e = stack.pop()
+            if obj.assign[e] == i:     # may have moved since recorded
+                take.append(e)
+        for e in take:
+            obj.remove_edge(e)
+        removed.extend(take)
+    # Repair, endpoint-sharing machines first (Alg. 5 L11-20).
+    for e in removed:
+        u, v = obj.g.edges[e]
+        a_u = np.flatnonzero(obj.cnt[:, u] > 0)
+        a_v = np.flatnonzero(obj.cnt[:, v] > 0)
+        both = np.intersect1d(a_u, a_v)
+        either = np.union1d(a_u, a_v)
+        i = -1
+        if len(both):
+            i = balanced_greedy_repair(obj, e, both)
+        if i < 0 and len(either):
+            i = balanced_greedy_repair(obj, e, either)
+        if i < 0:
+            i = balanced_greedy_repair(obj, e, range(obj.cluster.p))
+        if i < 0:
+            # No memory anywhere (should not happen when input feasible):
+            # force the machine with most free memory.
+            free = obj.cluster.memory() - np.array(
+                [obj.mem_used(j) for j in range(obj.cluster.p)])
+            i = int(np.argmax(free))
+        obj.add_edge(e, i)
+        orders[i].append(e)
+    return obj.tc < tc_before - 1e-9
+
+
+def repartition(obj: IncrementalTC, orders: list[list[int]],
+                deltas: np.ndarray, k: int,
+                alpha: float, beta: float) -> IncrementalTC:
+    """Algorithm 7: re-run expansion over the worst machine + k-1 peers."""
+    p = obj.cluster.p
+    i = int(np.argmax(obj.t_total))
+    # n_{i,j}: replica-node overlap with machine i.
+    mi = obj.cnt[i] > 0
+    n_ij = (obj.cnt > 0)[:, mi].sum(axis=1)
+    n_ij[i] = -1
+    k = min(k, p)
+    peers = np.argsort(-n_ij, kind="stable")[:max(0, k - 1)]
+    sel = sorted(set([i] + [int(j) for j in peers]))
+    edge_pool = np.flatnonzero(np.isin(obj.assign, sel))
+    if len(edge_pool) == 0:
+        return obj
+    # Expand the union with each member's capacity, on the union subgraph.
+    sub = from_edge_list(obj.g.edges[edge_pool], num_vertices=obj.g.num_vertices)
+    # Map: sub edge ids -> global edge ids (from_edge_list sorts by (u,v) key).
+    u, v = obj.g.edges[edge_pool, 0], obj.g.edges[edge_pool, 1]
+    order_key = np.argsort(
+        u.astype(np.int64) * obj.g.num_vertices + v.astype(np.int64))
+    sub_to_global = edge_pool[order_key]
+    st = expand.ExpansionState.fresh(sub)
+    # Seed the border set with vertices replicated on *unselected* machines.
+    outside = np.ones(p, dtype=bool)
+    outside[sel] = False
+    st.in_border[:] = ((obj.cnt[outside] > 0).any(axis=0)).astype(np.uint8)
+    assign = obj.assign.copy()
+    new_orders = [list(o) for o in orders]
+    mem = obj.cluster.memory()
+    for j in sorted(sel, key=lambda m: deltas[m]):
+        rec: list[int] = []
+        eids = expand.expand_partition(
+            st, int(j), int(deltas[j]), alpha, beta,
+            memory_limit=float(mem[j]),
+            m_node=obj.cluster.m_node, m_edge=obj.cluster.m_edge,
+            record_order=rec)
+        assign[sub_to_global[eids]] = j
+        new_orders[j] = [int(x) for x in sub_to_global[eids]]
+    # Any leftover edges in the pool: greedy repair below.
+    left = sub_to_global[~st.assigned]
+    assign[left] = -1
+    new_obj = IncrementalTC.build(obj.g, assign, obj.cluster)
+    for e in left.tolist():
+        u_, v_ = obj.g.edges[e]
+        cands = np.flatnonzero((new_obj.cnt[:, u_] > 0) | (new_obj.cnt[:, v_] > 0))
+        i2 = balanced_greedy_repair(new_obj, e, cands if len(cands) else range(p))
+        if i2 < 0:
+            i2 = balanced_greedy_repair(new_obj, e, range(p))
+        if i2 < 0:
+            i2 = int(np.argmax(mem - new_obj.cluster.m_edge * new_obj.edges_per))
+        new_obj.add_edge(e, i2)
+        new_orders[i2].append(e)
+    orders[:] = new_orders
+    return new_obj
+
+
+def sls(g: Graph, assign: np.ndarray, cluster: Cluster,
+        orders: list[list[int]], deltas: np.ndarray, *,
+        t0: int = 8, n0: int = 5, gamma: float = 0.9, theta: float = 0.01,
+        k: int = 3, alpha: float = 0.3, beta: float = 0.3,
+        seed: int = 0) -> tuple[np.ndarray, float]:
+    """Algorithm 4: the SLS driver.  Returns (best assignment, best TC)."""
+    rng = np.random.default_rng(seed)
+    obj = IncrementalTC.build(g, assign, cluster)
+    best_assign, best_tc = obj.assign.copy(), obj.tc
+    n = 0
+    budget = t0
+    while budget > 0:
+        if destroy_repair(obj, orders, gamma, theta, rng):
+            n = 0
+        else:
+            n += 1
+        if obj.tc < best_tc - 1e-9:
+            best_assign, best_tc = obj.assign.copy(), obj.tc
+        if n > n0:
+            obj = repartition(obj, orders, deltas, k, alpha, beta)
+            if obj.tc < best_tc - 1e-9:
+                best_assign, best_tc = obj.assign.copy(), obj.tc
+            n = 0
+        budget -= 1
+    return best_assign, best_tc

@@ -1,0 +1,6 @@
+"""Graph generators and IO (R-MAT / road mesh / SNAP edge lists)."""
+from .generators import rmat, road_mesh, erdos_renyi, graph500
+from .io import read_edge_list, write_edge_list
+
+__all__ = ["rmat", "road_mesh", "erdos_renyi", "graph500",
+           "read_edge_list", "write_edge_list"]

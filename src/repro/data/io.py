@@ -1,0 +1,16 @@
+"""SNAP-style edge-list IO (whitespace-separated ``u v`` per line, # comments)."""
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.graph import Graph, from_edge_list
+
+
+def read_edge_list(path: str, num_vertices: int | None = None) -> Graph:
+    edges = np.loadtxt(path, dtype=np.int64, comments="#", ndmin=2)
+    return from_edge_list(edges[:, :2], num_vertices=num_vertices)
+
+
+def write_edge_list(g: Graph, path: str) -> None:
+    np.savetxt(path, g.edges, fmt="%d",
+               header=f"V={g.num_vertices} E={g.num_edges}")

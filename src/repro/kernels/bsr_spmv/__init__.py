@@ -1,0 +1,5 @@
+from .ops import bsr_from_edges, bsr_spmv, BsrMatrix
+from .ref import bsr_spmv_ref, dense_from_bsr
+
+__all__ = ["bsr_from_edges", "bsr_spmv", "BsrMatrix",
+           "bsr_spmv_ref", "dense_from_bsr"]

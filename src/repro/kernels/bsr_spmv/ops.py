@@ -1,0 +1,82 @@
+"""Public ops around the Block-ELL SpMV kernel: layout builder + jit wrapper."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import spmv_pallas
+
+
+@dataclasses.dataclass(frozen=True)
+class BsrMatrix:
+    """Symmetric adjacency (optionally weighted) in Block-ELL layout."""
+
+    cols: np.ndarray     # (R, K) int32 block-column ids
+    blocks: np.ndarray   # (R, K, bm, bm) float32 dense blocks
+    n: int               # logical dimension (<= R*bm)
+    block_size: int
+
+    @property
+    def shape(self):
+        return (self.n, self.n)
+
+    @property
+    def padded(self):
+        return self.cols.shape[0] * self.block_size
+
+    @property
+    def nnz_blocks(self) -> int:
+        return int((np.abs(self.blocks).sum(axis=(2, 3)) > 0).sum())
+
+
+def bsr_from_edges(edges: np.ndarray, n: int, values: np.ndarray | None = None,
+                   block_size: int = 128, symmetric: bool = True) -> BsrMatrix:
+    """Build a Block-ELL matrix from an (E, 2) edge list.
+
+    A[u, v] += w (and A[v, u] += w when symmetric).  Zero-padding blocks
+    point at block-column 0 (their contribution is 0·x ≡ 0).
+    """
+    bm = block_size
+    R = max(1, -(-n // bm))
+    e = np.asarray(edges, dtype=np.int64)
+    w = np.ones(len(e), dtype=np.float32) if values is None else values
+    if symmetric:
+        e = np.concatenate([e, e[:, ::-1]], axis=0)
+        w = np.concatenate([w, w])
+    bi, bj = e[:, 0] // bm, e[:, 1] // bm
+    # group by (block-row, block-col)
+    key = bi * R + bj
+    order = np.argsort(key, kind="stable")
+    e, w, bi, bj, key = e[order], w[order], bi[order], bj[order], key[order]
+    uniq, start = np.unique(key, return_index=True)
+    counts_per_row = np.bincount((uniq // R).astype(np.int64), minlength=R)
+    K = max(1, int(counts_per_row.max()))
+    cols = np.zeros((R, K), dtype=np.int32)
+    blocks = np.zeros((R, K, bm, bm), dtype=np.float32)
+    slot = np.zeros(R, dtype=np.int64)
+    bounds = np.append(start, len(e))
+    for s, t in zip(bounds[:-1], bounds[1:]):
+        r, c = int(bi[s]), int(bj[s])
+        k = slot[r]
+        cols[r, k] = c
+        np.add.at(blocks[r, k], (e[s:t, 0] % bm, e[s:t, 1] % bm), w[s:t])
+        slot[r] += 1
+    return BsrMatrix(cols=cols, blocks=blocks, n=n, block_size=bm)
+
+
+def bsr_spmv(m: BsrMatrix, x: jnp.ndarray, *,
+             interpret: bool | None = None) -> jnp.ndarray:
+    """y = A @ x.  x: (n,) -> y: (n,).
+
+    interpret=None auto-selects: Pallas interpreter on CPU (validation),
+    compiled kernel on TPU.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    xp = jnp.zeros(m.padded, dtype=jnp.float32).at[:m.n].set(x.astype(jnp.float32))
+    y = spmv_pallas(jnp.asarray(m.cols), jnp.asarray(m.blocks), xp,
+                    block_size=m.block_size, interpret=interpret)
+    return y[:m.n].astype(x.dtype)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the Block-ELL SpMV kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .ops import BsrMatrix
+
+
+def dense_from_bsr(m: BsrMatrix) -> np.ndarray:
+    bm = m.block_size
+    R, K = m.cols.shape
+    out = np.zeros((m.padded, m.padded), dtype=np.float32)
+    for r in range(R):
+        for k in range(K):
+            c = int(m.cols[r, k])
+            out[r * bm:(r + 1) * bm, c * bm:(c + 1) * bm] += m.blocks[r, k]
+    return out[:m.n, :m.n]
+
+
+def bsr_spmv_ref(m: BsrMatrix, x: jnp.ndarray) -> jnp.ndarray:
+    """y = A @ x without Pallas: per-block einsum + scatter-add."""
+    bm = m.block_size
+    R, K = m.cols.shape
+    xp = jnp.zeros(m.padded, dtype=jnp.float32).at[:m.n].set(
+        x.astype(jnp.float32))
+    xb = xp.reshape(-1, bm)                        # (C, bm)
+    gathered = xb[jnp.asarray(m.cols)]             # (R, K, bm)
+    y = jnp.einsum("rkij,rkj->ri", jnp.asarray(m.blocks), gathered)
+    return y.reshape(-1)[:m.n].astype(x.dtype)

@@ -1,0 +1,82 @@
+"""Flash-decode attention Pallas TPU kernel (GQA, one query token).
+
+One new token attends over an (S, KVH, dh) KV cache.  The KV sequence is
+streamed through VMEM in blocks with the online-softmax recurrence kept in
+VMEM scratch (m, l, acc) across sequential grid steps — the TPU analogue of
+GPU flash-decode's split-K + shared-memory reduction, without the
+cross-block atomic: TPU grid order is sequential, so the accumulator simply
+lives in scratch.
+
+Layouts (per batch element; callers vmap over batch):
+  q:    (KVH, G, dh)   — query heads grouped under their KV head
+  k, v: (S, KVH, dh)
+  bias: (S,)           — additive mask (0 valid, -inf padded)
+Grid = (KVH, S/BS), KV-block index innermost.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, m_scr, l_scr, acc_scr):
+    s = pl.program_id(1)
+
+    @pl.when(s == 0)
+    def _reset():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)            # (G, dh)
+    k = k_ref[:, 0, :].astype(jnp.float32)      # (BS, dh)
+    v = v_ref[:, 0, :].astype(jnp.float32)      # (BS, dh)
+    bias = bias_ref[...].astype(jnp.float32)    # (BS,)
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    scores = scores + bias[None, :]             # (G, BS)
+
+    m_prev, l_prev = m_scr[...], l_scr[...]     # (G, 1)
+    m_new = jnp.maximum(m_prev, scores.max(axis=-1, keepdims=True))
+    p = jnp.exp(scores - m_new)                 # (G, BS)
+    alpha = jnp.exp(m_prev - m_new)             # (G, 1)
+    l_new = l_prev * alpha + p.sum(axis=-1, keepdims=True)
+    acc_new = acc_scr[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+
+    m_scr[...], l_scr[...], acc_scr[...] = m_new, l_new, acc_new
+    o_ref[0] = (acc_new / jnp.maximum(l_new, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def decode_attn_pallas(q, k, v, bias, *, block_s: int = 256,
+                       interpret: bool = True):
+    KVH, G, dh = q.shape
+    S = k.shape[0]
+    assert S % block_s == 0, (S, block_s)
+    grid = (KVH, S // block_s)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, G, dh), lambda h, s: (h, 0, 0)),
+            pl.BlockSpec((block_s, 1, dh), lambda h, s: (s, h, 0)),
+            pl.BlockSpec((block_s, 1, dh), lambda h, s: (s, h, 0)),
+            pl.BlockSpec((block_s,), lambda h, s: (s,)),
+        ],
+        out_specs=pl.BlockSpec((1, G, dh), lambda h, s: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((KVH, G, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, bias)

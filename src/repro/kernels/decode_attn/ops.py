@@ -1,0 +1,34 @@
+"""Batched jit wrapper for flash-decode attention (auto interpret off-TPU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import decode_attn_pallas
+
+
+def decode_attention(q, k, v, lengths=None, *, block_s: int = 256,
+                     interpret: bool | None = None):
+    """Batched GQA decode attention.
+
+    q: (B, H, dh); k, v: (B, S, KVH, dh); lengths: (B,) valid KV prefix.
+    Returns (B, H, dh).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, H, dh = q.shape
+    S, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    qg = q.reshape(B, KVH, G, dh)
+    if lengths is None:
+        bias = jnp.zeros((B, S), dtype=jnp.float32)
+    else:
+        bias = jnp.where(jnp.arange(S)[None, :] < lengths[:, None],
+                         0.0, -1e30).astype(jnp.float32)
+
+    def one(qb, kb, vb, bb):
+        return decode_attn_pallas(qb, kb, vb, bb, block_s=block_s,
+                                  interpret=interpret)
+
+    out = jax.vmap(one)(qg, k, v, bias)        # (B, KVH, G, dh)
+    return out.reshape(B, H, dh)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for flash-decode attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, bias):
+    """q: (KVH, G, dh); k,v: (S, KVH, dh); bias: (S,) -> (KVH, G, dh)."""
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    scores = jnp.einsum("hgd,shd->hgs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    scores = scores + bias[None, None, :].astype(jnp.float32)
+    w = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    w = w / w.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("hgs,shd->hgd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)

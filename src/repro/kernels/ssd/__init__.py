@@ -1,0 +1,4 @@
+from .ops import ssd_chunked
+from .ref import ssd_ref
+
+__all__ = ["ssd_chunked", "ssd_ref"]

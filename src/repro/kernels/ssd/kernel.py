@@ -1,0 +1,85 @@
+"""Mamba-2 SSD (state-space duality) chunk-scan Pallas TPU kernel.
+
+Computes the scalar-decay SSM
+
+    h_t = exp(a_t)·h_{t-1} + B_t x_tᵀ          h: (ds, dh) per head
+    y_t = C_tᵀ h_t
+
+via the SSD block decomposition (arXiv:2405.21060): the sequence is tiled
+into chunks of length L; within a chunk the quadratic "attention-like" form
+rides the MXU, while the inter-chunk recurrence is a rank-preserving state
+pass carried in a VMEM scratch accumulator across sequential grid steps —
+the TPU-native replacement for the paper's warp-level GPU scan.
+
+Grid = (BH, T/L), chunk index innermost (sequential on TPU), so the state
+scratch is private per (b, h) lane and flows chunk to chunk.
+
+    intra:  Y += ((C·Bᵀ) ⊙ M) X          M_ts = exp(cum_t − cum_s)·[t ≥ s]
+    inter:  Y += exp(cum_t)·(C h_in)
+    state:  h_out = exp(cum_L)·h_in + Σ_s exp(cum_L − cum_s) B_s x_sᵀ
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, b_ref, c_ref, a_ref, y_ref, h_scr):
+    ch = pl.program_id(1)
+
+    @pl.when(ch == 0)
+    def _reset():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    xl = x_ref[0].astype(jnp.float32)          # (L, dh)
+    bl = b_ref[0].astype(jnp.float32)          # (L, ds)
+    cl = c_ref[0].astype(jnp.float32)          # (L, ds)
+    al = a_ref[0].astype(jnp.float32)          # (L,)
+    L = xl.shape[0]
+    cum = jnp.cumsum(al)                        # (L,)
+
+    # intra-chunk quadratic form (MXU):
+    seg = cum[:, None] - cum[None, :]
+    tri = jnp.tril(jnp.ones((L, L), dtype=jnp.bool_))
+    decay = jnp.where(tri, jnp.exp(jnp.where(tri, seg, 0.0)), 0.0)
+    scores = jnp.dot(cl, bl.T, preferred_element_type=jnp.float32) * decay
+    y = jnp.dot(scores, xl, preferred_element_type=jnp.float32)
+
+    # inter-chunk carry-in:
+    h = h_scr[...]                              # (ds, dh)
+    y += jnp.exp(cum)[:, None] * jnp.dot(
+        cl, h, preferred_element_type=jnp.float32)
+
+    # state update for the next chunk:
+    w = jnp.exp(cum[-1] - cum)                  # (L,)
+    h_scr[...] = (jnp.exp(cum[-1]) * h
+                  + jnp.dot((w[:, None] * bl).T, xl,
+                            preferred_element_type=jnp.float32))
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_pallas(x, b, c, a, *, chunk: int = 128, interpret: bool = True):
+    """x: (BH, T, dh), b/c: (BH, T, ds), a: (BH, T) log-decay (<= 0)."""
+    BH, T, dh = x.shape
+    ds = b.shape[-1]
+    assert T % chunk == 0, (T, chunk)
+    grid = (BH, T // chunk)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, dh), lambda bh, ch: (bh, ch, 0)),
+            pl.BlockSpec((1, chunk, ds), lambda bh, ch: (bh, ch, 0)),
+            pl.BlockSpec((1, chunk, ds), lambda bh, ch: (bh, ch, 0)),
+            pl.BlockSpec((1, chunk), lambda bh, ch: (bh, ch)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, dh), lambda bh, ch: (bh, ch, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, T, dh), x.dtype),
+        scratch_shapes=[pltpu.VMEM((ds, dh), jnp.float32)],
+        interpret=interpret,
+    )(x, b, c, a)

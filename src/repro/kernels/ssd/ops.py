@@ -1,0 +1,23 @@
+"""Jit wrapper for the SSD chunk-scan kernel (auto interpret off-TPU)."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import ssd_pallas
+
+
+def ssd_chunked(x, b, c, a, *, chunk: int = 128,
+                interpret: bool | None = None):
+    """SSD scan; pads T to a chunk multiple internally if needed."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    BH, T, dh = x.shape
+    pad = (-T) % chunk
+    if pad:
+        import jax.numpy as jnp
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad)))
+    y = ssd_pallas(x, b, c, a, chunk=chunk, interpret=interpret)
+    return y[:, :T]

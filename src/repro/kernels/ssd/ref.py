@@ -1,0 +1,26 @@
+"""Pure-jnp oracle: the naive per-step SSD recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, b, c, a):
+    """x: (BH, T, dh), b/c: (BH, T, ds), a: (BH, T) log-decay.
+
+    Returns y: (BH, T, dh) from the exact sequential recurrence."""
+    ds, dh = b.shape[-1], x.shape[-1]
+
+    def one(xh, bh, ch, ah):
+        def step(h, inp):
+            xt, bt, ct, at = inp
+            h = jnp.exp(at) * h + bt[:, None] * xt[None, :]
+            return h, jnp.dot(ct, h)
+        h0 = jnp.zeros((ds, dh), dtype=jnp.float32)
+        _, y = jax.lax.scan(step, h0, (xh.astype(jnp.float32),
+                                       bh.astype(jnp.float32),
+                                       ch.astype(jnp.float32),
+                                       ah.astype(jnp.float32)))
+        return y.astype(xh.dtype)
+
+    return jax.vmap(one)(x, b, c, a)

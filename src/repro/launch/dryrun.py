@@ -1,0 +1,282 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+DOC = """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count at first
+init, and the production meshes need 512 placeholder host devices.
+
+For every cell this driver:
+  1. builds ShapeDtypeStruct inputs (``input_specs`` — no allocation),
+  2. jits the train/prefill/serve step with in/out shardings,
+  3. ``.lower().compile()`` — sharding mismatches, compile-time OOM and
+     unsupported collectives all fail HERE, which is the point,
+  4. records ``memory_analysis()`` (fits-per-device proof),
+     ``cost_analysis()`` (FLOPs/bytes) and the per-collective byte counts
+     parsed from the optimized HLO — the §Roofline inputs.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+      --out results/dryrun.jsonl
+"""
+
+import argparse
+import functools
+import json
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCHS, SHAPES, cells, get_config
+from ..models import decode_step, forward, init_cache, init_params
+from ..sharding import (cache_specs, input_specs_for, logical_batch_spec,
+                        param_specs)
+from ..train import make_loss_fn, make_train_step
+from .mesh import make_production_mesh
+
+_FSDP_OVERRIDE = None   # perf.py may force FSDP on/off per variant
+
+
+# ---------------------------------------------------------------------------
+# input stand-ins (weak-type-correct, shardable, no device allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    sh = SHAPES[shape_name]
+    B, S = sh["global_batch"], sh["seq_len"]
+    kind = sh["kind"]
+    if cfg.input_mode == "tokens":
+        x = jax.ShapeDtypeStruct((B, S if kind != "decode" else 1), jnp.int32)
+    else:
+        x = jax.ShapeDtypeStruct(
+            (B, S if kind != "decode" else 1, cfg.d_model), jnp.bfloat16)
+    if kind == "train":
+        return {"inputs": x, "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if kind == "prefill":
+        return {"inputs": x}
+    return {"inputs": x,
+            "cache_len": jax.ShapeDtypeStruct((B,), jnp.int32)}
+
+
+def _collective_bytes(hlo_text: str, loop_trip: int = 1) -> dict:
+    """Per-collective byte totals from the optimized HLO.
+
+    Handles sync and async (``*-start``/``*-done``) forms; for async ops the
+    tuple output's first element (the operand alias) is skipped and the
+    ``-done`` op is ignored (it aliases the ``-start``).  XLA emits each
+    ``lax.scan`` body once; collectives inside non-ENTRY computations (loop
+    bodies) execute ``loop_trip`` times per step — both raw and trip-scaled
+    totals are reported (callers pass the layer-scan trip count).
+    """
+    colls = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+    sizes = {c: 0 for c in colls}
+    body_sizes = {c: 0 for c in colls}
+    counts = {c: 0 for c in colls}
+    dt_bytes = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8, "s16": 2,
+                "u16": 2}
+    shape_re = re.compile(r"(\w+)\[([\d,]*)\]")
+    op_re = re.compile(
+        r"(?:ROOT\s+)?%?\S+\s*=\s*(.+?)\s+(all-gather|all-reduce|reduce-scatter|"
+        r"all-to-all|collective-permute)(-start|-done)?\(")
+    in_entry = False
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if stripped.startswith("ENTRY"):
+            in_entry = True
+            continue
+        if re.match(r"%?\S+\s*\(.*\)\s*->", stripped) and \
+                stripped.endswith("{"):
+            in_entry = False
+        m = op_re.match(stripped)
+        if not m:
+            continue
+        out_shape, op, variant = m.group(1), m.group(2), m.group(3)
+        if variant == "-done":
+            continue                    # aliases its -start
+        shapes = shape_re.findall(out_shape)
+        if variant == "-start" and len(shapes) > 1:
+            shapes = shapes[1:]         # drop the operand alias
+        total = 0
+        for dt, dims in shapes:
+            if dt not in dt_bytes:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * dt_bytes[dt]
+        (sizes if in_entry else body_sizes)[op] += total
+        counts[op] += 1
+    raw = {c: sizes[c] + body_sizes[c] for c in colls}
+    scaled = {c: sizes[c] + loop_trip * body_sizes[c] for c in colls}
+    return {"bytes": raw, "bytes_trip_scaled": scaled, "counts": counts,
+            "total_bytes": int(sum(raw.values())),
+            "total_bytes_trip_scaled": int(sum(scaled.values()))}
+
+
+def build_step(cfg, shape_name: str, mesh):
+    """Returns (jitted_fn, example_args as ShapeDtypeStructs)."""
+    sh = SHAPES[shape_name]
+    B, S, kind = sh["global_batch"], sh["seq_len"], sh["kind"]
+    pshapes = jax.eval_shape(functools.partial(init_params, cfg),
+                             jax.ShapeDtypeStruct((2,), jnp.uint32))
+    n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(pshapes))
+    # >12B params: shard params over 'data' too (FSDP) or they don't fit HBM
+    fsdp = n_params > 12e9
+    if globals().get("_FSDP_OVERRIDE") is not None:
+        fsdp = bool(_FSDP_OVERRIDE)   # perf.py hillclimb knob
+    pspecs = param_specs(cfg, pshapes, mesh, fsdp=fsdp)
+    psharding = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+    ins = input_specs(cfg, shape_name)
+    ispecs = input_specs_for(cfg, mesh, B, kind)
+    isharding = {k: NamedSharding(mesh, v) for k, v in ispecs.items()}
+
+    if kind == "train":
+        step = make_train_step(cfg, remat=True)
+        mspec = NamedSharding(mesh, P())
+        opt_shapes = jax.eval_shape(
+            lambda p: {"m": p, "v": p,
+                       "step": jax.ShapeDtypeStruct((), jnp.int32)}, pshapes)
+        # ZeRO: Adam moments additionally shard their largest free dim
+        # over 'data'.
+        from ..sharding import opt_state_specs
+        mom_specs = opt_state_specs(pspecs, pshapes, mesh)
+        mom_sharding = jax.tree.map(lambda sp: NamedSharding(mesh, sp),
+                                    mom_specs)
+        ospec = {"m": mom_sharding, "v": mom_sharding,
+                 "step": NamedSharding(mesh, P())}
+
+        fn = jax.jit(
+            lambda params, opt, batch: step(params, opt, batch),
+            in_shardings=(psharding, ospec,
+                          {"inputs": isharding["inputs"],
+                           "labels": isharding["labels"]}),
+            out_shardings=(psharding, ospec,
+                           {"loss": mspec, "grad_norm": mspec}),
+            donate_argnums=(0, 1))
+        args = (pshapes, opt_shapes, ins)
+        return fn, args
+
+    # serving paths share the decode_step entry
+    cache_shape = jax.eval_shape(
+        lambda: init_cache(cfg, B, S, dtype=jnp.bfloat16))
+    cspecs = cache_specs(cfg, mesh, B, S)
+    csharding = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), cspecs,
+        is_leaf=lambda x: isinstance(x, P))
+    bspec = logical_batch_spec(mesh, B)
+    lsharding = NamedSharding(mesh, bspec)
+    vshard = "model" if cfg.vocab_size % mesh.shape.get("model", 1) == 0 \
+        else None
+    logits_sharding = NamedSharding(
+        mesh, P(bspec[0] if len(bspec) else None, None, vshard))
+    if kind == "prefill":
+        def prefill(params, cache, inputs):
+            zero = jnp.zeros((B,), jnp.int32)
+            return decode_step(cfg, params, cache, inputs, zero)
+        fn = jax.jit(
+            prefill,
+            in_shardings=(psharding, csharding, isharding["inputs"]),
+            out_shardings=(logits_sharding, csharding),
+            donate_argnums=(1,))
+        args = (pshapes, cache_shape, ins["inputs"])
+        return fn, args
+
+    def serve(params, cache, tokens, cache_len):
+        return decode_step(cfg, params, cache, tokens, cache_len)
+    fn = jax.jit(
+        serve,
+        in_shardings=(psharding, csharding, isharding["inputs"], lsharding),
+        out_shardings=(logits_sharding, csharding),
+        donate_argnums=(1,))
+    args = (pshapes, cache_shape, ins["inputs"], ins["cache_len"])
+    return fn, args
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.perf_counter()
+    fn, args = build_step(cfg, shape_name, mesh)
+    with mesh:
+        lowered = fn.lower(*args)
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        coll = _collective_bytes(compiled.as_text(),
+                                 loop_trip=cfg.num_layers // cfg.pattern_period)
+    n_super = cfg.num_layers // cfg.pattern_period
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "pod2x16x16" if multi_pod else "pod16x16",
+        "devices": int(np.prod(list(mesh.shape.values()))),
+        "n_super": n_super,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "flops_hlo_body_once": float(cost.get("flops", -1)),
+        "bytes_hlo_body_once": float(cost.get("bytes accessed", -1)),
+        "argument_size_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+        "output_size_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+        "peak_bytes_per_device": int(getattr(mem, "peak_memory_in_bytes", 0)),
+        "collectives": coll,
+    }
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"],
+                    default="both")
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    ap.add_argument("--skip-done", action="store_true",
+                    help="skip cells already present in --out")
+    args = ap.parse_args(argv)
+
+    todo = cells() if args.all else [(args.arch, args.shape)]
+    meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done = set()
+    if args.skip_done and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                r = json.loads(line)
+                if "error" not in r:
+                    done.add((r["arch"], r["shape"], r["mesh"]))
+    failures = 0
+    for arch, shape in todo:
+        for mp in meshes:
+            mesh_name = "pod2x16x16" if mp else "pod16x16"
+            if (arch, shape, mesh_name) in done:
+                continue
+            tag = f"{arch} × {shape} × {mesh_name}"
+            try:
+                rec = run_cell(arch, shape, mp)
+                print(f"OK   {tag}: peak {rec['peak_bytes_per_device']/2**30:.2f} GiB/dev, "
+                      f"coll {rec['collectives']['total_bytes_trip_scaled']/2**30:.2f} GiB/step, "
+                      f"compile {rec['compile_s']}s", flush=True)
+            except Exception as e:  # noqa: BLE001 - report and continue
+                rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                       "error": f"{type(e).__name__}: {e}"}
+                print(f"FAIL {tag}: {rec['error'][:300]}", flush=True)
+                failures += 1
+            with open(args.out, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+            jax.clear_caches()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

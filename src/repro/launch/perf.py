@@ -1,0 +1,97 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Perf-iteration driver (EXPERIMENTS.md §Perf).
+
+Compiles one (arch × shape) cell with config overrides (the hillclimb
+knobs) and prints the roofline terms, so each hypothesis → change →
+re-lower → re-analyse loop is one command:
+
+  PYTHONPATH=src python -m repro.launch.perf --arch qwen3-14b \
+      --shape train_4k --set act_shard=seq --set fsdp=off
+"""
+import argparse
+import dataclasses
+import json
+import sys
+
+import numpy as np
+
+from ..configs import ARCHS, SHAPES, get_config
+from . import dryrun
+from .mesh import make_production_mesh
+
+
+def parse_overrides(pairs):
+    out = {}
+    for p in pairs or []:
+        k, v = p.split("=", 1)
+        if v in ("true", "on"):
+            v = True
+        elif v in ("false", "off"):
+            v = False
+        else:
+            try:
+                v = int(v)
+            except ValueError:
+                try:
+                    v = float(v)
+                except ValueError:
+                    pass
+        out[k] = v
+    return out
+
+
+def run_variant(arch: str, shape: str, overrides: dict,
+                multi_pod: bool = False) -> dict:
+    cfg = get_config(arch)
+    fsdp_override = overrides.pop("fsdp", None)
+    cfg = dataclasses.replace(cfg, **overrides)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if fsdp_override is not None:
+        # monkey-level knob: build_step decides FSDP by param count; force it
+        dryrun._FSDP_OVERRIDE = bool(fsdp_override)
+    else:
+        dryrun._FSDP_OVERRIDE = None
+    try:
+        fn, args = dryrun.build_step(cfg, shape, mesh)
+        with mesh:
+            compiled = fn.lower(*args).compile()
+            mem = compiled.memory_analysis()
+            coll = dryrun._collective_bytes(
+                compiled.as_text(),
+                loop_trip=cfg.num_layers // cfg.pattern_period)
+    finally:
+        dryrun._FSDP_OVERRIDE = None
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__),
+                                    "..", "..", ".."))
+    from benchmarks import roofline
+    rec = {
+        "arch": arch, "shape": shape,
+        "mesh": "pod2x16x16" if multi_pod else "pod16x16",
+        "devices": int(np.prod(list(mesh.shape.values()))),
+        "collectives": coll,
+        "peak_bytes_per_device": int(getattr(mem, "peak_memory_in_bytes", 0)),
+        "flops_hlo_body_once": -1,
+    }
+    out = roofline.analyze(rec)
+    out["collective_counts"] = coll["counts"]
+    out["collective_bytes"] = coll["bytes_trip_scaled"]
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCHS)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg override key=value (plus fsdp=on/off)")
+    ap.add_argument("--multipod", action="store_true")
+    args = ap.parse_args(argv)
+    out = run_variant(args.arch, args.shape, parse_overrides(args.set),
+                      args.multipod)
+    print(json.dumps(out, indent=2, default=str))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""LM model zoo: the assigned architectures as one composable decoder stack."""
+from .config import ModelConfig
+from .model import (forward, init_params, init_cache, decode_step,
+                    param_count, active_param_count)
+
+__all__ = ["ModelConfig", "forward", "init_params", "init_cache",
+           "decode_step", "param_count", "active_param_count"]

@@ -1,0 +1,507 @@
+"""Shared neural layers: norms, RoPE, attention (GQA / MLA), FFN, MoE, SSD.
+
+Everything is a pure function over a params dict; init_* builds the params.
+All attention paths use a JAX-native blockwise (flash) formulation so the
+32k-prefill dry-runs fit memory; the Pallas kernels in ``repro.kernels``
+are the TPU-optimized drop-ins validated against the same math.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms & RoPE
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps=1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x, positions, theta: float, fraction: float = 1.0):
+    """x: (..., S, H, D). Rotates the first ``fraction·D`` dims."""
+    D = x.shape[-1]
+    rot = int(D * fraction) // 2 * 2
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    # positions: (..., S) -> (..., S, 1, half)
+    ang = positions.astype(jnp.float32)[..., :, None, None] * freq
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = xr[..., :half], xr[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise causal attention (JAX-native flash)
+# ---------------------------------------------------------------------------
+
+def flash_attention(q, k, v, *, causal: bool = True, q_offset=0,
+                    kv_lengths=None, block_q: int = 512, block_k: int = 1024):
+    """q: (B, Sq, H, D); k, v: (B, Skv, KVH, D) -> (B, Sq, H, D).
+
+    Online-softmax over KV blocks inside a scan over Q blocks: HLO stays
+    O(1) in sequence length and live memory is O(block_q · block_k).
+    q_offset: absolute position of q[0] (decode/prefill continuation).
+    kv_lengths: (B,) valid KV prefix for left-padded caches.
+    """
+    B, Sq, H, D = q.shape
+    Skv, KVH = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]                 # may differ from D (MLA latent values)
+    G = H // KVH
+    scale = 1.0 / math.sqrt(D)
+    bq, bk = min(block_q, Sq), min(block_k, Skv)
+    nq, nk = -(-Sq // bq), -(-Skv // bk)
+    # pad to block multiples
+    qp = jnp.pad(q, ((0, 0), (0, nq * bq - Sq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, nk * bk - Skv), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, nk * bk - Skv), (0, 0), (0, 0)))
+    qp = qp.reshape(B, nq, bq, KVH, G, D)
+    kp = kp.reshape(B, nk, bk, KVH, D)
+    vp = vp.reshape(B, nk, bk, KVH, Dv)
+
+    def q_block(carry, qi):
+        qb = qp[:, qi]                                     # (B,bq,KVH,G,D)
+        q_pos = q_offset + qi * bq + jnp.arange(bq)
+
+        def kv_block(acc, ki):
+            m, l, o = acc
+            kb, vb = kp[:, ki], vp[:, ki]                  # (B,bk,KVH,D)
+            k_pos = ki * bk + jnp.arange(bk)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qb.astype(jnp.float32),
+                           kb.astype(jnp.float32)) * scale
+            mask = k_pos[None, :] < Skv                    # drop pad
+            if causal:
+                mask = mask & (q_pos[:, None] >= k_pos[None, :])
+            if kv_lengths is not None:
+                mask = mask[None] & (
+                    k_pos[None, None, :] < kv_lengths[:, None, None])
+                s = jnp.where(mask[:, None, None], s, -1e30)
+            else:
+                s = jnp.where(mask[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            o_new = o * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, vb.astype(jnp.float32))
+            return (m_new, l_new, o_new), None
+
+        m0 = jnp.full((B, KVH, G, bq), -1e30, dtype=jnp.float32)
+        l0 = jnp.zeros((B, KVH, G, bq), dtype=jnp.float32)
+        o0 = jnp.zeros((B, KVH, G, bq, Dv), dtype=jnp.float32)
+        (m, l, o), _ = jax.lax.scan(kv_block, (m0, l0, o0), jnp.arange(nk))
+        o = o / jnp.maximum(l, 1e-30)[..., None]
+        # (B,KVH,G,bq,D) -> (B,bq,KVH,G,D)
+        return carry, o.transpose(0, 3, 1, 2, 4)
+
+    _, blocks = jax.lax.scan(q_block, 0, jnp.arange(nq))   # (nq,B,bq,KVH,G,D)
+    out = blocks.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * bq, H, Dv)
+    return out[:, :Sq].astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer
+# ---------------------------------------------------------------------------
+
+def head_pad_mask(cfg: ModelConfig):
+    """(Hp,) 1.0 for real q-head slots, 0.0 for in-group padding slots.
+
+    Slot layout: kv group j owns slots [j·P, (j+1)·P); the first G are real
+    (G = true group size, P = cfg.pad_group_to).  Flash attention's
+    ``slot // P -> kv head`` mapping is then exact by construction.
+    """
+    Hp, H, KVH = cfg.num_heads_padded, cfg.num_heads, cfg.num_kv_heads
+    if Hp == H:
+        return None
+    g, P = H // KVH, Hp // KVH
+    mask = jnp.zeros((Hp,), jnp.float32)
+    real = jnp.arange(KVH)[:, None] * P + jnp.arange(g)[None, :]
+    return mask.at[real.reshape(-1)].set(1.0)
+
+
+def init_attention(cfg: ModelConfig, key):
+    hd, KVH, d = cfg.head_dim_, cfg.num_kv_heads, cfg.d_model
+    Hp = cfg.num_heads_padded
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "wq": jax.random.normal(k1, (d, Hp, hd), _dtype(cfg)) * s,
+        "wk": jax.random.normal(k2, (d, KVH, hd), _dtype(cfg)) * s,
+        "wv": jax.random.normal(k3, (d, KVH, hd), _dtype(cfg)) * s,
+        "wo": jax.random.normal(k4, (Hp, hd, d), _dtype(cfg)) * s / math.sqrt(cfg.num_layers),
+    }
+    mask = head_pad_mask(cfg)
+    if mask is not None:
+        # padded slots are zero and receive zero gradients (their wo rows
+        # are zero, so no loss path reaches them): exact semantics.
+        p["wq"] = p["wq"] * mask[None, :, None].astype(p["wq"].dtype)
+        p["wo"] = p["wo"] * mask[:, None, None].astype(p["wo"].dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), _dtype(cfg))
+        p["k_norm"] = jnp.ones((hd,), _dtype(cfg))
+    return p
+
+
+def attention(cfg: ModelConfig, p, x, positions, *, cache=None,
+              cache_len=None):
+    """x: (B, S, d).  cache: dict(k,v: (B, Smax, KVH, hd)) for decode."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
+    k = rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
+    new_cache = None
+    if cache is not None:
+        # decode: append at cache_len, attend over the prefix
+        idx = cache_len[:, None] + jnp.arange(x.shape[1])[None, :]
+        ck = jax.vmap(lambda c, i, u: c.at[i].set(u))(cache["k"], idx, k)
+        cv = jax.vmap(lambda c, i, u: c.at[i].set(u))(cache["v"], idx, v)
+        new_cache = {"k": ck, "v": cv}
+        # S > 1 => prefill from an empty cache (causal); S == 1 => decode.
+        out = flash_attention(q, ck, cv, causal=x.shape[1] > 1,
+                              kv_lengths=cache_len + x.shape[1],
+                              block_q=cfg.block_q, block_k=cfg.block_k)
+    else:
+        out = flash_attention(q, k, v, causal=True,
+                              block_q=cfg.block_q, block_k=cfg.block_k)
+    mask = head_pad_mask(cfg)
+    if mask is not None:
+        # zero the padded heads' outputs so their wo rows get zero grads
+        # (keeps padding semantically inert under training)
+        out = out * mask[None, None, :, None].astype(out.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (MiniCPM3 / DeepSeek-style latent KV)
+# ---------------------------------------------------------------------------
+
+def init_mla(cfg: ModelConfig, key):
+    d, H = cfg.d_model, cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    r, qr = cfg.kv_lora_rank, cfg.q_lora_rank
+    ks = jax.random.split(key, 8)
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "w_dkv": jax.random.normal(ks[0], (d, r), _dtype(cfg)) * s,
+        "kv_norm": jnp.ones((r,), _dtype(cfg)),
+        "w_uk": jax.random.normal(ks[1], (r, H, dn), _dtype(cfg)) / math.sqrt(r),
+        "w_uv": jax.random.normal(ks[2], (r, H, dv), _dtype(cfg)) / math.sqrt(r),
+        "w_kr": jax.random.normal(ks[3], (d, dr), _dtype(cfg)) * s,
+        "wo": jax.random.normal(ks[4], (H, dv, d), _dtype(cfg)) / math.sqrt(H * dv * cfg.num_layers),
+    }
+    if qr:
+        p["w_dq"] = jax.random.normal(ks[5], (d, qr), _dtype(cfg)) * s
+        p["q_norm"] = jnp.ones((qr,), _dtype(cfg))
+        p["w_uq"] = jax.random.normal(ks[6], (qr, H, dn + dr), _dtype(cfg)) / math.sqrt(qr)
+    else:
+        p["wq"] = jax.random.normal(ks[6], (d, H, dn + dr), _dtype(cfg)) * s
+    return p
+
+
+def mla_attention(cfg: ModelConfig, p, x, positions, *, cache=None,
+                  cache_len=None):
+    """Multi-head Latent Attention; caches the compressed latent + k_rope."""
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    if cfg.q_lora_rank:
+        ql = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["w_dq"]), p["q_norm"],
+                      cfg.norm_eps)
+        q = jnp.einsum("bsr,rhk->bshk", ql, p["w_uq"])
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    latent = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["w_dkv"]), p["kv_norm"],
+                      cfg.norm_eps)
+    k_rope = rope(jnp.einsum("bsd,dk->bsk", x, p["w_kr"])[:, :, None, :],
+                  positions, cfg.rope_theta)[:, :, 0, :]
+
+    new_cache = None
+    if cache is not None:
+        idx = cache_len[:, None] + jnp.arange(S)[None, :]
+        cl = jax.vmap(lambda c, i, u: c.at[i].set(u))(cache["latent"], idx, latent)
+        cr = jax.vmap(lambda c, i, u: c.at[i].set(u))(cache["k_rope"], idx, k_rope)
+        new_cache = {"latent": cl, "k_rope": cr}
+        latent_all, k_rope_all = cl, cr
+        lengths = cache_len + S
+    else:
+        latent_all, k_rope_all = latent, k_rope
+        lengths = None
+
+    # absorbed form: score = (q_nope·W_uk)·latent + q_rope·k_rope
+    q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, p["w_uk"])
+    qq = jnp.concatenate([q_lat, q_rope], axis=-1)          # (B,S,H,r+dr)
+    kk = jnp.concatenate([latent_all,
+                          k_rope_all], axis=-1)[:, :, None, :]  # (B,Sk,1,r+dr)
+    # values = latent (per-head projection absorbed after attention)
+    ctx = flash_attention(qq, kk, latent_all[:, :, None, :],
+                          causal=(cache is None or S > 1),
+                          kv_lengths=lengths,
+                          block_q=cfg.block_q, block_k=cfg.block_k)
+    out = jnp.einsum("bshr,rhv->bshv", ctx, p["w_uv"])      # (B,S,H,dv)
+    y = jnp.einsum("bshv,hvd->bsd", out, p["wo"])
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# FFN & MoE
+# ---------------------------------------------------------------------------
+
+def init_mlp(cfg: ModelConfig, key):
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = 1.0 / math.sqrt(d)
+    p = {"w_down": jax.random.normal(k2, (f, d), _dtype(cfg)) / math.sqrt(f * cfg.num_layers)}
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        p["w_gate"] = jax.random.normal(k1, (d, f), _dtype(cfg)) * s
+        p["w_up"] = jax.random.normal(k3, (d, f), _dtype(cfg)) * s
+    else:
+        p["w_up"] = jax.random.normal(k1, (d, f), _dtype(cfg)) * s
+    return p
+
+
+def mlp(cfg: ModelConfig, p, x):
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.mlp_type == "swiglu" else jax.nn.gelu
+        h = act(jnp.einsum("bsd,df->bsf", x, p["w_gate"])) \
+            * jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w_up"]))
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+
+
+def init_moe(cfg: ModelConfig, key):
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    return {
+        "router": jax.random.normal(k1, (d, E), jnp.float32) * s,
+        "w_gate": jax.random.normal(k2, (E, d, f), _dtype(cfg)) * s,
+        "w_up": jax.random.normal(k3, (E, d, f), _dtype(cfg)) * s,
+        "w_down": jax.random.normal(k4, (E, f, d), _dtype(cfg)) / math.sqrt(f * cfg.num_layers),
+    }
+
+
+def moe_ffn(cfg: ModelConfig, p, x):
+    """Token-choice top-k MoE with sort-based capacity dispatch.
+
+    Fixed-shape throughout (argsort + scatter).  With ``cfg.moe_groups = G``
+    tokens are split into G groups aligned with the data sharding so every
+    argsort/scatter is shard-local, and with ``cfg.moe_ep`` the per-group
+    expert buffers are constrained to (g→data, e→model) — the cross-device
+    motion becomes one buffer all-to-all into expert parallelism instead of
+    a global sort (§Perf iteration log).
+    """
+    B, S, d = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    N = B * S
+    G = cfg.moe_groups if (cfg.moe_groups and (B * S) % cfg.moe_groups == 0
+                           and B * S // cfg.moe_groups >= K) else 1
+    n = N // G
+    xf = x.reshape(G, n, d)
+    logits = jnp.einsum("gnd,de->gne", xf.astype(jnp.float32), p["router"])
+    gates, idx = jax.lax.top_k(logits, K)                  # (G, n, K)
+    weights = jax.nn.softmax(gates, axis=-1)
+    flat_e = idx.reshape(G, n * K)
+    tok = jnp.tile(jnp.repeat(jnp.arange(n), K)[None], (G, 1))
+    w = weights.reshape(G, n * K)
+    order = jnp.argsort(flat_e, axis=-1)                   # per-group sort
+    se = jnp.take_along_axis(flat_e, order, axis=-1)
+    stok = jnp.take_along_axis(tok, order, axis=-1)
+    sw = jnp.take_along_axis(w, order, axis=-1)
+    seg_start = jax.vmap(
+        lambda row: jnp.searchsorted(row, jnp.arange(E), side="left"))(se)
+    pos = jnp.arange(n * K)[None, :] - jnp.take_along_axis(
+        seg_start, se, axis=-1)
+    # capacity: cf-scaled at training batch sizes; clamped so tiny serving
+    # batches (decode: one token per sequence) never drop.
+    cap = max(1, int(cfg.capacity_factor * n * K / E), min(n, 128))
+    keep = pos < cap
+    slot = jnp.where(keep, se * cap + pos, E * cap)        # overflow -> dump
+    gslot = (jnp.arange(G)[:, None] * (E * cap + 1) + slot).reshape(-1)
+    gtok = (jnp.arange(G)[:, None] * n + stok).reshape(-1)
+    buf = jnp.zeros((G * (E * cap + 1), d), x.dtype).at[gslot].add(
+        jnp.where(keep.reshape(-1)[:, None], xf.reshape(N, d)[gtok], 0))
+    h = buf.reshape(G, E * cap + 1, d)[:, :-1].reshape(G, E, cap, d)
+    if cfg.moe_ep:
+        from jax.sharding import PartitionSpec as _P
+        h = jax.lax.with_sharding_constraint(
+            h, _P("data" if G > 1 else None, "model", None, None))
+    act = jax.nn.silu if cfg.mlp_type != "gelu" else jax.nn.gelu
+    hidden = act(jnp.einsum("gecd,edf->gecf", h, p["w_gate"])) \
+        * jnp.einsum("gecd,edf->gecf", h, p["w_up"])
+    out_e = jnp.einsum("gecf,efd->gecd", hidden, p["w_down"])
+    if cfg.moe_ep:
+        from jax.sharding import PartitionSpec as _P
+        out_e = jax.lax.with_sharding_constraint(
+            out_e, _P("data" if G > 1 else None, None, None, None))
+    flat_out = out_e.reshape(G, E * cap, d)
+    flat_out = jnp.concatenate(
+        [flat_out, jnp.zeros((G, 1, d), x.dtype)], axis=1).reshape(-1, d)
+    gathered = flat_out[gslot]
+    out = jnp.zeros((N, d), x.dtype).at[gtok].add(
+        gathered * (sw.reshape(-1) * keep.reshape(-1))[:, None].astype(x.dtype))
+    return out.reshape(B, S, d)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 mixer (SSD)
+# ---------------------------------------------------------------------------
+
+def ssd_jax(x, b, c, a, chunk: int, return_state: bool = False):
+    """Chunked SSD, pure JAX (the lowering-friendly twin of kernels/ssd).
+
+    x: (B, T, nh, dh); b, c: (B, T, G, ds); a: (B, T, nh) log-decay.
+    If return_state, also returns the final state (B, nh, ds, dh) so
+    prefill can seed the decode cache.
+    """
+    B, T, nh, dh = x.shape
+    G, ds = b.shape[2], b.shape[3]
+    L = min(chunk, T)
+    pad = (-T) % L
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+    Tp = T + pad
+    nc = Tp // L
+    rep = nh // G
+    xc = x.reshape(B, nc, L, nh, dh).astype(jnp.float32)
+    bc = jnp.repeat(b.reshape(B, nc, L, G, ds), rep, axis=3).astype(jnp.float32)
+    cc = jnp.repeat(c.reshape(B, nc, L, G, ds), rep, axis=3).astype(jnp.float32)
+    ac = a.reshape(B, nc, L, nh).astype(jnp.float32)
+    cum = jnp.cumsum(ac, axis=2)                          # (B,nc,L,nh)
+
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,L,L,nh)
+    tri = jnp.tril(jnp.ones((L, L), bool))[None, None, :, :, None]
+    decay = jnp.where(tri, jnp.exp(jnp.where(tri, seg, 0.0)), 0.0)
+    scores = jnp.einsum("bnlhs,bnmhs->bnlmh", cc, bc) * decay
+    y_intra = jnp.einsum("bnlmh,bnmhd->bnlhd", scores, xc)
+
+    # chunk states
+    wdec = jnp.exp(cum[:, :, -1:, :] - cum)               # (B,nc,L,nh)
+    s_c = jnp.einsum("bnlh,bnlhs,bnlhd->bnhsd", wdec, bc, xc)
+    d_c = jnp.exp(cum[:, :, -1, :])                       # (B,nc,nh)
+
+    def step(h, inp):
+        s, dmul = inp
+        h_new = dmul[:, :, None, None] * h + s
+        return h_new, h                                    # emit carry-in
+    h0 = jnp.zeros((B, nh, ds, dh), jnp.float32)
+    h_last, h_in = jax.lax.scan(step, h0, (s_c.transpose(1, 0, 2, 3, 4),
+                                           d_c.transpose(1, 0, 2)))
+    h_in = h_in.transpose(1, 0, 2, 3, 4)                   # (B,nc,nh,ds,dh)
+    y_inter = jnp.einsum("bnlhs,bnhsd->bnlhd",
+                         cc * jnp.exp(cum)[..., None], h_in)
+    y = (y_intra + y_inter).reshape(B, Tp, nh, dh)[:, :T]
+    if return_state:
+        return y.astype(x.dtype), h_last
+    return y.astype(x.dtype)
+
+
+def init_ssm(cfg: ModelConfig, key):
+    d, di = cfg.d_model, cfg.d_inner
+    nh, ds, G = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_groups
+    conv_ch = di + 2 * G * ds
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    return {
+        "in_proj": jax.random.normal(
+            ks[0], (d, 2 * di + 2 * G * ds + nh), _dtype(cfg)) * s,
+        "conv_w": jax.random.normal(ks[1], (cfg.conv_width, conv_ch),
+                                    _dtype(cfg)) / math.sqrt(cfg.conv_width),
+        "conv_b": jnp.zeros((conv_ch,), _dtype(cfg)),
+        "a_log": jnp.zeros((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "out_norm": jnp.ones((di,), _dtype(cfg)),
+        "out_proj": jax.random.normal(ks[2], (di, d), _dtype(cfg))
+        / math.sqrt(di * cfg.num_layers),
+    }
+
+
+def _causal_conv(u, w, b):
+    """u: (B, T, C) depthwise causal conv, width W; returns same shape."""
+    W = w.shape[0]
+    pads = [jnp.pad(u, ((0, 0), (W - 1 - i, i), (0, 0)))[:, :u.shape[1]]
+            for i in range(W)]
+    # pads[i] = u shifted so position t sees u[t - (W-1-i)]
+    out = sum(pads[i] * w[i][None, None, :] for i in range(W))
+    return out + b[None, None, :]
+
+
+def ssm_mixer(cfg: ModelConfig, p, x, *, state=None):
+    """Mamba-2 block.  state: dict(conv: (B, W-1, C), ssm: (B,nh,ds,dh))
+    for single-step decode; None for full-sequence (train/prefill)."""
+    B, T, _ = x.shape
+    di, nh, ds, G = cfg.d_inner, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_groups
+    dh = cfg.ssm_head_dim
+    proj = jnp.einsum("bsd,dk->bsk", x, p["in_proj"])
+    z, xs, bc, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + 2 * G * ds], axis=-1)
+    conv_in = jnp.concatenate([xs, bc], axis=-1)           # (B,T,C)
+    new_state = None
+    if state is None or state == "prefill":
+        conv = jax.nn.silu(_causal_conv(conv_in, p["conv_w"], p["conv_b"]))
+    else:
+        # roll the conv buffer one step (T == 1)
+        hist = jnp.concatenate([state["conv"], conv_in], axis=1)  # (B,W,C)
+        conv = jax.nn.silu(
+            jnp.einsum("bwc,wc->bc", hist, p["conv_w"]) + p["conv_b"]
+        )[:, None, :]
+        new_conv = hist[:, 1:]
+    xs, b, c = jnp.split(conv, [di, di + G * ds], axis=-1)
+    xh = xs.reshape(B, T, nh, dh)
+    bh = b.reshape(B, T, G, ds)
+    ch = c.reshape(B, T, G, ds)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,T,nh)
+    a = -jnp.exp(p["a_log"])[None, None, :] * dt                  # log decay
+    xdt = xh * dt[..., None].astype(xh.dtype)
+    if state == "prefill":
+        y, h_last = ssd_jax(xdt, bh, ch, a, cfg.ssd_chunk, return_state=True)
+        new_state = {"conv": conv_in[:, -(cfg.conv_width - 1):], "ssm": h_last}
+    elif state is None:
+        y = ssd_jax(xdt, bh, ch, a, cfg.ssd_chunk)
+    else:
+        # single-step recurrence: h = exp(a) h + B x ; y = C h
+        h = state["ssm"]                                   # (B,nh,ds,dh)
+        rep = nh // G
+        b1 = jnp.repeat(bh[:, 0], rep, axis=1).astype(jnp.float32)  # (B,nh,ds)
+        c1 = jnp.repeat(ch[:, 0], rep, axis=1).astype(jnp.float32)
+        x1 = xdt[:, 0].astype(jnp.float32)                 # (B,nh,dh)
+        h = jnp.exp(a[:, 0])[..., None, None] * h \
+            + b1[..., :, None] * x1[..., None, :]
+        y = jnp.einsum("bhs,bhsd->bhd", c1, h)[:, None].astype(x.dtype)
+        new_state = {"conv": new_conv, "ssm": h}
+    y = y.reshape(B, T, nh, dh)
+    y = y + p["d_skip"][None, None, :, None].astype(y.dtype) * \
+        xdt.reshape(B, T, nh, dh)
+    y = y.reshape(B, T, di)
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"])
+    return out, new_state

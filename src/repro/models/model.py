@@ -1,0 +1,256 @@
+"""Decoder stack assembly: pattern-periodic blocks scanned over depth.
+
+Layers are grouped into super-blocks of ``cfg.pattern_period`` sub-layers
+(dense archs: 1; jamba: lcm(attention interleave, MoE interleave)); the
+stack is a ``lax.scan`` over ``num_layers / period`` super-blocks, so the
+HLO is O(period) regardless of depth — essential for the 62-layer MiniCPM3
+and the 512-device dry-run compile times.
+
+API (all pure functions over a params pytree):
+  init_params(cfg, key)                 -> params
+  forward(cfg, params, inputs)          -> logits            (training)
+  init_cache(cfg, batch, max_len)       -> cache
+  decode_step(cfg, params, cache, toks, cache_len)
+                                        -> (logits, cache)   (serving)
+      S > 1 with an all-zero cache_len acts as prefill.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .config import ModelConfig
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_sublayer(cfg: ModelConfig, layer_idx: int, key):
+    """Params for one sub-layer (mixer + optional FFN)."""
+    kind = cfg.layer_kind(layer_idx)
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": jnp.ones((cfg.d_model,), _dt(cfg))}
+    if kind == "attn":
+        init = L.init_mla if cfg.attn_type == "mla" else L.init_attention
+        p["mixer"] = init(cfg, k1)
+    else:
+        p["mixer"] = L.init_ssm(cfg, k1)
+    if cfg.d_ff > 0:
+        p["ln2"] = jnp.ones((cfg.d_model,), _dt(cfg))
+        if cfg.layer_is_moe(layer_idx):
+            p["ffn"] = L.init_moe(cfg, k2)
+        else:
+            p["ffn"] = L.init_mlp(cfg, k2)
+    return p
+
+
+def init_params(cfg: ModelConfig, key):
+    period = cfg.pattern_period
+    n_super = cfg.num_layers // period
+    assert n_super * period == cfg.num_layers, \
+        f"{cfg.name}: num_layers {cfg.num_layers} % period {period} != 0"
+    keys = jax.random.split(key, period + 2)
+    blocks = {}
+    for pos in range(period):
+        sub_keys = jax.random.split(keys[pos], n_super)
+        blocks[f"pos{pos}"] = jax.vmap(
+            functools.partial(_init_sublayer, cfg, pos))(sub_keys)
+    params = {
+        "blocks": blocks,
+        "final_norm": jnp.ones((cfg.d_model,), _dt(cfg)),
+    }
+    if cfg.input_mode == "tokens":
+        params["embed"] = jax.random.normal(
+            keys[-1], (cfg.vocab_size, cfg.d_model), _dt(cfg)) * 0.02
+        if not cfg.tie_embeddings:
+            params["unembed"] = jax.random.normal(
+                keys[-2], (cfg.d_model, cfg.vocab_size), _dt(cfg)) \
+                / math.sqrt(cfg.d_model)
+    else:
+        params["unembed"] = jax.random.normal(
+            keys[-2], (cfg.d_model, cfg.vocab_size), _dt(cfg)) \
+            / math.sqrt(cfg.d_model)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# sub-layer application
+# ---------------------------------------------------------------------------
+
+def _constrain_act(cfg, x):
+    """Residual-stream sharding constraint between sub-layers.
+
+    'batch': pin (B, S, d) to batch-sharded/replicated-d — stops XLA's
+    propagation from settling on a batch-replicated, d-sharded layout
+    inside the layer scan (observed fixpoint on 40-head archs; §Perf).
+    'seq': Megatron-style sequence parallelism — shard S over 'model'
+    between blocks (all-reduce becomes reduce-scatter + all-gather).
+    No-op outside a mesh context (CPU unit tests)."""
+    if cfg.act_shard == "none" or x.ndim != 3 or x.shape[1] <= 1:
+        return x
+    from jax._src import mesh as mesh_lib
+    from jax.sharding import PartitionSpec as _P
+    m = mesh_lib.thread_resources.env.physical_mesh
+    if m.empty:
+        return x
+    if cfg.act_shard == "seq":
+        if "model" in m.shape and x.shape[1] % m.shape["model"] == 0:
+            return jax.lax.with_sharding_constraint(
+                x, _P(None, "model", None))
+    elif cfg.act_shard == "batch":
+        axes = tuple(a for a in ("pod", "data") if a in m.shape)
+        import math as _math
+        if axes and x.shape[0] % _math.prod(m.shape[a] for a in axes) == 0:
+            return jax.lax.with_sharding_constraint(
+                x, _P(axes, None, None))
+    return x
+
+
+def _apply_sublayer(cfg, layer_idx, p, x, positions, cache, cache_len, mode):
+    kind = cfg.layer_kind(layer_idx)
+    x = _constrain_act(cfg, x)
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind == "attn":
+        attn = L.mla_attention if cfg.attn_type == "mla" else L.attention
+        y, new_cache = attn(cfg, p["mixer"], h, positions,
+                            cache=cache, cache_len=cache_len)
+    else:
+        state = cache if mode == "decode" else (
+            "prefill" if mode == "prefill" else None)
+        y, new_cache = L.ssm_mixer(cfg, p["mixer"], h, state=state)
+    x = x + y
+    if cfg.d_ff > 0:
+        h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        if cfg.layer_is_moe(layer_idx):
+            x = x + L.moe_ffn(cfg, p["ffn"], h)
+        else:
+            x = x + L.mlp(cfg, p["ffn"], h)
+    return x, new_cache
+
+
+def _stack(cfg, params, x, positions, caches, cache_len, mode, remat=False):
+    """Scan over super-blocks; caches is a pytree stacked on n_super or None."""
+    period = cfg.pattern_period
+
+    def super_block(carry, scanned):
+        xx = carry
+        block_params, block_cache = scanned
+        new_caches = {}
+        for pos in range(period):
+            c = None if block_cache is None else block_cache.get(f"pos{pos}")
+            xx, nc = _apply_sublayer(cfg, pos, block_params[f"pos{pos}"], xx,
+                                     positions, c, cache_len, mode)
+            if nc is not None:
+                new_caches[f"pos{pos}"] = nc
+        return xx, (new_caches if new_caches else None)
+
+    if caches is None:
+        body = lambda c, bp: super_block(c, (bp, None))
+        if remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+        return x, None
+    x, new_caches = jax.lax.scan(super_block, x, (params["blocks"], caches))
+    return x, new_caches
+
+
+def _embed_in(cfg, params, inputs):
+    if cfg.input_mode == "tokens":
+        return params["embed"][inputs].astype(_dt(cfg))
+    return inputs.astype(_dt(cfg))
+
+
+def _logits_out(cfg, params, x):
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.input_mode == "tokens" and cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    return jnp.einsum("bsd,dv->bsv", x, params["unembed"])
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+def forward(cfg: ModelConfig, params, inputs, *, remat: bool = False):
+    """Training forward: inputs (B, S) tokens or (B, S, d) embeddings."""
+    x = _embed_in(cfg, params, inputs)
+    positions = jnp.arange(x.shape[1])[None, :]
+    x, _ = _stack(cfg, params, x, positions, None, None, mode="train",
+                  remat=remat)
+    return _logits_out(cfg, params, x)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    """Decode cache pytree, stacked (n_super, ...) per pattern position."""
+    dt = dtype or _dt(cfg)
+    period = cfg.pattern_period
+    n_super = cfg.num_layers // period
+    hd, KVH = cfg.head_dim_, cfg.num_kv_heads
+    out = {}
+    for pos in range(period):
+        kind = cfg.layer_kind(pos)
+        if kind == "attn":
+            if cfg.attn_type == "mla":
+                c = {"latent": jnp.zeros(
+                        (n_super, batch, max_len, cfg.kv_lora_rank), dt),
+                     "k_rope": jnp.zeros(
+                        (n_super, batch, max_len, cfg.qk_rope_dim), dt)}
+            else:
+                c = {"k": jnp.zeros((n_super, batch, max_len, KVH, hd), dt),
+                     "v": jnp.zeros((n_super, batch, max_len, KVH, hd), dt)}
+        else:
+            conv_ch = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+            c = {"conv": jnp.zeros(
+                    (n_super, batch, cfg.conv_width - 1, conv_ch), dt),
+                 "ssm": jnp.zeros(
+                    (n_super, batch, cfg.ssm_heads, cfg.ssm_state,
+                     cfg.ssm_head_dim), jnp.float32)}
+        out[f"pos{pos}"] = c
+    return out
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, cache_len):
+    """One serving step.
+
+    tokens: (B, S) or (B, S, d); S == 1 => decode, S > 1 (cache_len == 0)
+    => prefill.  Returns (logits (B, S, vocab), new cache).
+    """
+    S = tokens.shape[1]
+    mode = "decode" if S == 1 else "prefill"
+    x = _embed_in(cfg, params, tokens)
+    positions = cache_len[:, None] + jnp.arange(S)[None, :]
+    x, new_cache = _stack(cfg, params, x, positions, cache, cache_len, mode)
+    return _logits_out(cfg, params, x), new_cache
+
+
+# ---------------------------------------------------------------------------
+# parameter accounting (roofline MODEL_FLOPS uses these)
+# ---------------------------------------------------------------------------
+
+def param_count(cfg: ModelConfig) -> int:
+    n = sum(x.size for x in jax.tree.leaves(
+        jax.eval_shape(lambda k: init_params(cfg, k),
+                       jax.ShapeDtypeStruct((2,), jnp.uint32))))
+    return int(n)
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Per-token active params (MoE: only top-k experts count)."""
+    total = param_count(cfg)
+    if cfg.num_experts == 0:
+        return total
+    # subtract inactive expert weights
+    d, f, E, K = cfg.d_model, cfg.d_ff, cfg.num_experts, cfg.experts_per_token
+    per_layer_expert = 3 * d * f
+    n_moe = sum(1 for i in range(cfg.num_layers) if cfg.layer_is_moe(i))
+    return int(total - n_moe * (E - K) * per_layer_expert)

@@ -1,0 +1,104 @@
+"""True expert-parallel MoE dispatch via shard_map + all_to_all.
+
+XLA's SPMD partitioner cannot localize the data-dependent dispatch scatter
+(measured in EXPERIMENTS.md §Perf Cell 2: EP sharding constraints made the
+collective term 2–3× *worse*).  This module expresses the canonical EP flow
+manually:
+
+  tokens sharded over ('data','model') → local top-k routing → per-
+  destination capacity buffers → ``all_to_all`` over 'model' → local expert
+  FFN on the E/tp resident experts → ``all_to_all`` back → local combine.
+
+Opt-in (not wired into the default decoder): call sites run it under an
+explicit mesh; gradients flow through all_to_all natively.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .config import ModelConfig
+
+
+def _dispatch_local(cfg: ModelConfig, router, xf, tp: int, cap: int):
+    """Route n local tokens into (tp, E/tp, cap, d) send buffers.
+
+    Returns (buffers, combine weights, slot bookkeeping) — all local.
+    """
+    n, d = xf.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    e_loc = E // tp
+    logits = jnp.einsum("nd,de->ne", xf.astype(jnp.float32), router)
+    gates, idx = jax.lax.top_k(logits, K)                 # (n, K)
+    weights = jax.nn.softmax(gates, axis=-1)
+    flat_e = idx.reshape(-1)                              # (n*K,)
+    tok = jnp.repeat(jnp.arange(n), K)
+    w = weights.reshape(-1)
+    order = jnp.argsort(flat_e)
+    se, stok, sw = flat_e[order], tok[order], w[order]
+    seg_start = jnp.searchsorted(se, jnp.arange(E), side="left")
+    pos = jnp.arange(n * K) - seg_start[se]
+    keep = pos < cap
+    # slot within the (tp, e_loc, cap) send layout
+    dest, e_in = se // e_loc, se % e_loc
+    slot = jnp.where(keep, (dest * e_loc + e_in) * cap + pos, E * cap)
+    buf = jnp.zeros((E * cap + 1, d), xf.dtype).at[slot].add(
+        jnp.where(keep[:, None], xf[stok], 0))
+    return buf[:-1].reshape(tp, e_loc, cap, d), (slot, stok, sw, keep)
+
+
+def _combine_local(n: int, d: int, out_buf, book):
+    slot, stok, sw, keep = book
+    flat = jnp.concatenate(
+        [out_buf.reshape(-1, d), jnp.zeros((1, d), out_buf.dtype)])
+    gathered = flat[slot]
+    return jnp.zeros((n, d), out_buf.dtype).at[stok].add(
+        gathered * (sw * keep)[:, None].astype(out_buf.dtype))
+
+
+def moe_ffn_ep(cfg: ModelConfig, params, x, mesh: Mesh,
+               capacity_factor: float | None = None):
+    """x: (B, S, d) global view; params: global (replicated router,
+    E-sharded experts).  Returns (B, S, d).
+
+    Requires mesh axes 'data' and 'model', B % data == 0,
+    S % model == 0 and E % model == 0.
+    """
+    B, S, d = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    dp, tp = mesh.shape["data"], mesh.shape["model"]
+    assert E % tp == 0 and B % dp == 0 and S % tp == 0, (E, B, S, dp, tp)
+    n_loc = (B // dp) * (S // tp)
+    cf = capacity_factor or cfg.capacity_factor
+    cap = max(1, int(cf * n_loc * K / E), min(n_loc, 64))
+
+    def body(router, w_gate, w_up, w_down, xs):
+        # xs: (B/dp, S/tp, d) local tokens; experts local: (E/tp, d, f)
+        xf = xs.reshape(-1, d)
+        send, book = _dispatch_local(cfg, router, xf, tp, cap)
+        # exchange: concat over the tp dim -> (tp, e_loc, cap, d) received
+        recv = jax.lax.all_to_all(send, "model", split_axis=0,
+                                  concat_axis=0, tiled=False)
+        # recv: (tp, e_loc, cap, d) = per-source buffers for MY experts
+        h = recv.reshape(tp, -1, cap, d)
+        act = jax.nn.silu if cfg.mlp_type != "gelu" else jax.nn.gelu
+        hidden = act(jnp.einsum("secd,edf->secf", h, w_gate)) \
+            * jnp.einsum("secd,edf->secf", h, w_up)
+        out = jnp.einsum("secf,efd->secd", hidden, w_down)
+        back = jax.lax.all_to_all(out, "model", split_axis=0,
+                                  concat_axis=0, tiled=False)
+        y = _combine_local(n_loc, d, back, book)
+        return y.reshape(xs.shape)
+
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P("model", None, None), P("model", None, None),
+                  P("model", None, None), P("data", "model", None)),
+        out_specs=P("data", "model", None),
+        check_vma=False)
+    return fn(params["router"], params["w_gate"], params["w_up"],
+              params["w_down"], x)

@@ -1,0 +1,49 @@
+"""Batched serving: prefill + greedy/temperature decode loop."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..models import decode_step, init_cache
+
+
+def make_serve_step(cfg):
+    """Jitted single-token decode step (the dry-run's serve entry)."""
+    @jax.jit
+    def step(params, cache, tokens, cache_len):
+        return decode_step(cfg, params, cache, tokens, cache_len)
+    return step
+
+
+def generate(cfg, params, prompts, max_new_tokens: int, *,
+             temperature: float = 0.0, key=None, max_len: int | None = None):
+    """prompts: (B, P) token ids (or (B, P, d) embeddings for stub archs).
+
+    Returns (B, max_new_tokens) sampled ids.  Greedy when temperature=0.
+    """
+    B, P = prompts.shape[0], prompts.shape[1]
+    max_len = max_len or (P + max_new_tokens + 1)
+    cache = init_cache(cfg, B, max_len)
+    step = make_serve_step(cfg)
+    logits, cache = step(params, cache, prompts, jnp.zeros(B, jnp.int32))
+    lens = jnp.full((B,), P, jnp.int32)
+    out = []
+    key = key if key is not None else jax.random.PRNGKey(0)
+    last = logits[:, -1]
+    for t in range(max_new_tokens):
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, last / temperature, axis=-1)
+        else:
+            tok = jnp.argmax(last, axis=-1)
+        out.append(tok)
+        if cfg.input_mode == "tokens":
+            nxt = tok[:, None]
+        else:  # embedding-stub archs feed the embedded token back
+            nxt = jax.nn.one_hot(tok, cfg.d_model)[:, None, :]
+        logits, cache = step(params, cache, nxt, lens)
+        last = logits[:, 0]
+        lens = lens + 1
+    return jnp.stack(out, axis=1)

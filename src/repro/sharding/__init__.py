@@ -1,0 +1,6 @@
+from .specs import (param_specs, input_specs_for, cache_specs, opt_state_specs,
+                    data_axes, logical_batch_spec)
+from . import windgp_placement
+
+__all__ = ["param_specs", "input_specs_for", "cache_specs", "opt_state_specs",
+           "data_axes", "logical_batch_spec", "windgp_placement"]

@@ -1,0 +1,197 @@
+"""Name-based sharding rules: params, optimizer state, inputs, caches.
+
+Mesh axes: ``("pod", "data", "model")`` multi-pod or ``("data", "model")``
+single-pod.  Tensor parallelism lives on ``model``; batch DP on
+``("pod", "data")``; ZeRO-sharded optimizer moments additionally use
+``data``; FSDP (param sharding over ``data``) is opt-in per arch.
+
+Every rule is divisibility-guarded: if the preferred dim doesn't divide the
+mesh axis (e.g. 40 heads on model=16), the next-preference dim is tried,
+ending at replication — so every (arch × mesh) cell lowers, and the perf
+pass upgrades the hot archs explicitly.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if isinstance(axis, tuple):
+        return math.prod(mesh.shape[a] for a in axis)
+    return mesh.shape[axis]
+
+
+def data_axes(mesh: Mesh):
+    """The data-parallel axes present in this mesh."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def logical_batch_spec(mesh: Mesh, batch: int) -> P:
+    """Shard batch over as many DP axes as divide it (long-context B=1
+    falls back to replication)."""
+    axes = []
+    remaining = batch
+    for a in data_axes(mesh):
+        if remaining % mesh.shape[a] == 0:
+            axes.append(a)
+            remaining //= mesh.shape[a]
+    return P(tuple(axes) if axes else None)
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+
+# name -> ordered dim preferences for the 'model' axis, by array *suffix*
+# shape (ignoring the stacked n_super leading dim inside blocks).
+_RULES = {
+    # heads first, then the contracting d_model; NEVER head_dim — rope
+    # slices it, and hd-sharding triggered a per-layer permute storm
+    # (§Perf iteration log).
+    "wq": (2, 1), "wk": (2, 1), "wv": (2, 1), "wo": (1, 3),
+    "w_gate": (-1, 1), "w_up": (-1, 1), "w_down": (1, -1),
+    "router": (-1,),
+    "in_proj": (2, 1), "out_proj": (1, 2), "conv_w": (), "conv_b": (),
+    "w_dkv": (2,), "w_uk": (2, 1), "w_uv": (2, 1), "w_kr": (),
+    "w_dq": (2,), "w_uq": (2, 1),
+    "embed": (0, 1), "unembed": (1, 0),
+}
+_MOE_RULES = {  # TP-within-expert: shard f, tokens never cross devices.
+    # Expert-parallel (E-first) was measured 2-3x worse — XLA cannot
+    # localize the data-dependent dispatch scatter and all-gathers the
+    # token buffers (§Perf iteration log).
+    "w_gate": (-1, 1), "w_up": (-1, 1), "w_down": (1, -1), "router": (-1,),
+}
+
+
+def _spec_for(name: str, shape, mesh: Mesh, *, stacked: bool,
+              moe: bool, fsdp: bool) -> P:
+    ndim = len(shape)
+    rules = _MOE_RULES if (moe and name in _MOE_RULES) else _RULES
+    prefs = rules.get(name, ())
+    spec: list[Any] = [None] * ndim
+    offset = 1 if stacked else 0
+    m = mesh.shape.get("model", 1)
+    chosen = None
+    for pref in prefs:
+        # prefs are written for the *unstacked* layout; shift by offset
+        d = (pref + (ndim - offset) if pref < 0 else pref) + offset
+        if d < offset or d >= ndim:
+            continue
+        if shape[d] % m == 0 and m > 1:
+            spec[d] = "model"
+            chosen = d
+            break
+    if fsdp:
+        # shard the largest still-unsharded dim over 'data' (param FSDP)
+        dp = mesh.shape.get("data", 1)
+        if dp > 1:
+            cands = [(shape[d], d) for d in range(offset, ndim)
+                     if spec[d] is None and shape[d] % dp == 0]
+            if cands:
+                spec[max(cands)[1]] = "data"
+    return P(*spec)
+
+
+def param_specs(cfg, params_shape, mesh: Mesh, *, fsdp: bool = False):
+    """PartitionSpec pytree matching ``init_params``' structure.
+
+    params_shape: pytree of ShapeDtypeStruct (from jax.eval_shape).
+    """
+    def walk(path, leaf):
+        names = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+        name = names[-1]
+        stacked = names[0] == "blocks"
+        moe = "ffn" in names and "router" in [n for n in names] or \
+              ("ffn" in names and len(leaf.shape) - (1 if stacked else 0) == 3
+               and name in ("w_gate", "w_up", "w_down"))
+        if name in ("ln1", "ln2", "final_norm", "q_norm", "k_norm",
+                    "kv_norm", "out_norm", "a_log", "dt_bias", "d_skip",
+                    "conv_b", "conv_w"):
+            return P()
+        return _spec_for(name, leaf.shape, mesh, stacked=stacked, moe=moe,
+                         fsdp=fsdp)
+
+    return jax.tree_util.tree_map_with_path(walk, params_shape)
+
+
+def opt_state_specs(param_spec_tree, params_shape, mesh: Mesh):
+    """ZeRO: moments get the param spec + 'data' on the largest free dim."""
+    dp = mesh.shape.get("data", 1)
+
+    def widen(spec: P, leaf):
+        if dp <= 1 or "data" in tuple(spec):   # FSDP params: already ZeRO'd
+            return spec
+        parts = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        cands = [(leaf.shape[d], d) for d in range(len(leaf.shape))
+                 if parts[d] is None and leaf.shape[d] % dp == 0
+                 and leaf.shape[d] > 1]
+        if cands:
+            parts[max(cands)[1]] = "data"
+        return P(*parts)
+
+    return jax.tree.map(widen, param_spec_tree, params_shape)
+
+
+# ---------------------------------------------------------------------------
+# inputs & caches
+# ---------------------------------------------------------------------------
+
+def input_specs_for(cfg, mesh: Mesh, batch: int, kind: str):
+    """Specs for the train/serve step inputs (tokens/embeddings/labels)."""
+    bspec = logical_batch_spec(mesh, batch)
+    b = bspec[0] if len(bspec) else None
+    if cfg.input_mode == "tokens":
+        x = P(b, None)
+    else:
+        x = P(b, None, None)
+    if kind == "train":
+        return {"inputs": x, "labels": P(b, None)}
+    if kind == "prefill":
+        return {"inputs": x}
+    return {"inputs": x, "cache_len": P(b)}
+
+
+def cache_specs(cfg, mesh: Mesh, batch: int, max_len: int):
+    """Cache pytree specs.
+
+    Batch shards over DP axes when divisible; KV heads shard over 'model'
+    when divisible, otherwise the cache *sequence* axis shards over 'model'
+    (none of the assigned archs has kv_heads % 16 == 0, and a 32k×128
+    cache is 17 GiB/device unsharded — seq-sharding is what makes decode
+    fit v5e HBM)."""
+    bspec = logical_batch_spec(mesh, batch)
+    b = bspec[0] if len(bspec) else None
+    m = mesh.shape.get("model", 1)
+    kvh, hd = cfg.num_kv_heads, cfg.head_dim_
+    kv_shard = "model" if (kvh % m == 0 and m > 1) else None
+    seq = "model" if (kv_shard is None and max_len % m == 0 and m > 1) \
+        else None
+    out = {}
+    for pos in range(cfg.pattern_period):
+        kind = cfg.layer_kind(pos)
+        if kind == "attn":
+            if cfg.attn_type == "mla":
+                out[f"pos{pos}"] = {
+                    "latent": P(None, b, seq, None),
+                    "k_rope": P(None, b, seq, None),
+                }
+            else:
+                out[f"pos{pos}"] = {
+                    "k": P(None, b, seq, kv_shard, None),
+                    "v": P(None, b, seq, kv_shard, None),
+                }
+        else:
+            nh = cfg.ssm_heads
+            h_shard = "model" if (nh % m == 0 and m > 1) else None
+            out[f"pos{pos}"] = {
+                "conv": P(None, b, None, None),
+                "ssm": P(None, b, h_shard, None, None),
+            }
+    return out

@@ -1,0 +1,9 @@
+from .optimizer import adamw_init, adamw_update
+from .train_step import make_train_step, make_loss_fn
+from .checkpoint import CheckpointManager
+from .compression import quantize_int8, dequantize_int8, compress_grads
+from .hetero_batch import heterogeneous_batch_split
+
+__all__ = ["adamw_init", "adamw_update", "make_train_step", "make_loss_fn",
+           "CheckpointManager", "quantize_int8", "dequantize_int8",
+           "compress_grads", "heterogeneous_batch_split"]

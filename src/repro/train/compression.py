@@ -1,0 +1,30 @@
+"""Gradient compression: int8 symmetric quantization with per-tensor scale.
+
+On a real cluster the quantized payload is what crosses the pod-to-pod DCN
+link (8× less than f32, 2× less than bf16); here we reproduce the numerics
+(quantize → dequantize) so convergence behaviour matches what the wire
+format would deliver.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x):
+    scale = jnp.maximum(jnp.abs(x).max(), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads):
+    def roundtrip(g):
+        if g.size <= 1024:      # tiny tensors (norms, biases): keep exact
+            return g
+        q, s = quantize_int8(g.astype(jnp.float32))
+        return dequantize_int8(q, s).astype(g.dtype)
+    return jax.tree.map(roundtrip, grads)

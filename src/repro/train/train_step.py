@@ -1,0 +1,73 @@
+"""Train step: remat'd forward, microbatched grad accumulation, AdamW.
+
+Distribution notes (1000+-node design):
+* gradients reduce over the DP axes implicitly through pjit (sharded batch,
+  replicated params): XLA emits hierarchical reduce-scatter in-pod then
+  all-reduce across the ``pod`` axis;
+* microbatching (``microbatches > 1``) both caps activation memory and
+  splits the backward into several reduce windows XLA's latency-hiding
+  scheduler can overlap with compute;
+* ``compress='int8'`` fake-quantizes gradients before the optimizer — the
+  numerics of an int8-compressed all-reduce (the wire format on a real
+  cluster) while staying a pure XLA program.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..models import forward
+from .compression import compress_grads
+from .optimizer import adamw_init, adamw_update
+
+
+def make_loss_fn(cfg, *, remat: bool = True):
+    def loss_fn(params, inputs, labels):
+        logits = forward(cfg, params, inputs, remat=remat).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+        return (logz - gold).mean()
+    return loss_fn
+
+
+def make_train_step(cfg, *, lr=3e-4, weight_decay=0.01, grad_clip=1.0,
+                    microbatches: int = 1, remat: bool = True,
+                    compress: str | None = None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    batch: {"inputs": (B, S) or (B, S, d), "labels": (B, S)}.
+    """
+    loss_fn = make_loss_fn(cfg, remat=remat)
+
+    def train_step(params, opt_state, batch):
+        inputs, labels = batch["inputs"], batch["labels"]
+        if microbatches > 1:
+            B = inputs.shape[0]
+            k = microbatches
+            assert B % k == 0, (B, k)
+            mb_in = inputs.reshape((k, B // k) + inputs.shape[1:])
+            mb_lb = labels.reshape((k, B // k) + labels.shape[1:])
+
+            def acc_step(carry, mb):
+                g_acc, l_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb[0], mb[1])
+                g_acc = jax.tree.map(jnp.add, g_acc,
+                                     jax.tree.map(lambda x: x / k, g))
+                return (g_acc, l_acc + l / k), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (grads, loss), _ = jax.lax.scan(acc_step, (g0, 0.0),
+                                            (mb_in, mb_lb))
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, inputs, labels)
+        if compress == "int8":
+            grads = compress_grads(grads)
+        params, opt_state, gnorm = adamw_update(
+            grads, opt_state, params, lr=lr, weight_decay=weight_decay,
+            grad_clip=grad_clip)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step

@@ -1,0 +1,134 @@
+"""Per-architecture smoke tests (reduced configs): one forward + one train
+step on CPU asserting output shapes and no NaNs; prefill/decode consistency
+against the training forward pass; MoE routing invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, get_reduced
+from repro.models import (active_param_count, decode_step, forward,
+                          init_cache, init_params, param_count)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _inputs(cfg, B, S, key=KEY):
+    if cfg.input_mode == "tokens":
+        return jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    return jax.random.normal(key, (B, S, cfg.d_model), jnp.float32)
+
+
+@pytest.fixture(scope="module", params=ARCHS)
+def arch_setup(request):
+    cfg = get_reduced(request.param)
+    params = init_params(cfg, KEY)
+    return request.param, cfg, params
+
+
+class TestSmoke:
+    def test_forward_shapes_and_finite(self, arch_setup):
+        name, cfg, params = arch_setup
+        B, S = 2, 16
+        logits = forward(cfg, params, _inputs(cfg, B, S))
+        assert logits.shape == (B, S, cfg.vocab_size)
+        assert bool(jnp.isfinite(logits).all()), f"{name}: NaN/inf in logits"
+
+    def test_train_step_no_nans(self, arch_setup):
+        name, cfg, params = arch_setup
+        B, S = 2, 16
+        inp = _inputs(cfg, B, S)
+        labels = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+
+        def loss_fn(p):
+            lg = forward(cfg, p, inp).astype(jnp.float32)
+            lp = jax.nn.log_softmax(lg, axis=-1)
+            return -jnp.take_along_axis(lp, labels[..., None], -1).mean()
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        assert bool(jnp.isfinite(loss))
+        flat = jax.tree.leaves(grads)
+        assert all(bool(jnp.isfinite(g).all()) for g in flat), \
+            f"{name}: NaN in grads"
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in flat))
+        assert float(gnorm) > 0
+
+    def test_prefill_decode_matches_forward(self, arch_setup):
+        name, cfg, params = arch_setup
+        B, S, P = 2, 12, 8
+        inp = _inputs(cfg, B, S)
+        logits = forward(cfg, params, inp)
+        cache = init_cache(cfg, B, 24)
+        lg, cache = decode_step(cfg, params, cache, inp[:, :P],
+                                jnp.zeros(B, jnp.int32))
+        scale = float(jnp.abs(logits).max())
+        assert float(jnp.abs(lg - logits[:, :P]).max()) / scale < 1e-4
+        lens = jnp.full((B,), P, jnp.int32)
+        for t in range(P, S):
+            step_in = inp[:, t:t + 1]
+            lg, cache = decode_step(cfg, params, cache, step_in, lens)
+            err = float(jnp.abs(lg[:, 0] - logits[:, t]).max()) / scale
+            assert err < 1e-4, f"{name}: decode diverges at t={t}: {err}"
+            lens = lens + 1
+
+
+class TestFullConfigs:
+    """The FULL configs are exercised via eval_shape only (no allocation)."""
+
+    @pytest.mark.parametrize("name", ARCHS)
+    def test_full_config_param_shapes(self, name):
+        cfg = get_config(name)
+        shapes = jax.eval_shape(
+            lambda k: init_params(cfg, k), jax.ShapeDtypeStruct((2,), jnp.uint32))
+        n = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(shapes))
+        assert n > 1e8, f"{name}: implausibly small full model ({n})"
+
+    def test_param_counts_match_names(self):
+        # plausibility bands around the sizes the model names advertise
+        bands = {
+            "mamba2-780m": (0.6e9, 1.0e9),
+            "glm4-9b": (7e9, 12e9),
+            "qwen3-4b": (3e9, 5.5e9),
+            "minicpm3-4b": (3e9, 6e9),
+            "qwen3-14b": (11e9, 17e9),
+            "granite-moe-3b-a800m": (2e9, 4.5e9),
+            "phi3.5-moe-42b-a6.6b": (33e9, 50e9),
+            "jamba-v0.1-52b": (40e9, 60e9),
+            "musicgen-medium": (1e9, 2.5e9),
+            "paligemma-3b": (2e9, 3.7e9),
+        }
+        for name, (lo, hi) in bands.items():
+            n = param_count(get_config(name))
+            assert lo <= n <= hi, f"{name}: {n/1e9:.2f}B params out of band"
+
+    def test_moe_active_params_smaller(self):
+        for name in ["granite-moe-3b-a800m", "phi3.5-moe-42b-a6.6b",
+                     "jamba-v0.1-52b"]:
+            cfg = get_config(name)
+            assert active_param_count(cfg) < 0.6 * param_count(cfg)
+
+
+class TestMoEInvariants:
+    def test_router_distributes_tokens(self):
+        cfg = get_reduced("phi3.5-moe-42b-a6.6b")
+        params = init_params(cfg, KEY)
+        from repro.models import layers as L
+        x = jax.random.normal(KEY, (4, 32, cfg.d_model), jnp.float32)
+        blk = jax.tree.map(lambda a: a[0], params["blocks"]["pos0"])
+        out = L.moe_ffn(cfg, blk["ffn"], x)
+        assert out.shape == x.shape
+        assert bool(jnp.isfinite(out).all())
+
+    def test_moe_permutation_invariance(self):
+        """Token order must not change per-token outputs (no drops here)."""
+        cfg = get_reduced("granite-moe-3b-a800m")
+        params = init_params(cfg, KEY)
+        from repro.models import layers as L
+        blk = jax.tree.map(lambda a: a[0], params["blocks"]["pos0"])
+        x = jax.random.normal(KEY, (1, 16, cfg.d_model), jnp.float32)
+        out1 = L.moe_ffn(cfg, blk["ffn"], x)
+        perm = jax.random.permutation(KEY, 16)
+        out2 = L.moe_ffn(cfg, blk["ffn"], x[:, perm])
+        np.testing.assert_allclose(np.asarray(out2), np.asarray(out1[:, perm]),
+                                   rtol=2e-4, atol=1e-5)

@@ -1,0 +1,48 @@
+"""Baseline partitioners: validity + qualitative ordering vs WindGP."""
+import numpy as np
+import pytest
+
+from repro.core import evaluate, scaled_paper_cluster, windgp
+from repro.core.baselines import PARTITIONERS
+from repro.data import rmat
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g = rmat(11, seed=3)
+    cl = scaled_paper_cluster(3, 6, g.num_edges, slack=2.0)
+    return g, cl
+
+
+@pytest.mark.parametrize("name", sorted(PARTITIONERS))
+def test_valid_edge_partition(setup, name):
+    g, cl = setup
+    assign = PARTITIONERS[name](g, cl)
+    assert assign.shape == (g.num_edges,)
+    assert assign.min() >= 0 and assign.max() < cl.p
+
+
+@pytest.mark.parametrize("name", ["hash", "dbh", "ebv", "hdrf", "greedy", "ne"])
+def test_respects_memory_caps(setup, name):
+    g, cl = setup
+    assign = PARTITIONERS[name](g, cl)
+    s = evaluate(g, assign, cl)
+    # all streaming baselines get the paper's memory adaptation
+    assert s.feasible
+
+
+def test_windgp_beats_streaming_baselines(setup):
+    """Paper Fig. 12: WindGP below every streaming baseline on power-law."""
+    g, cl = setup
+    r = windgp(g, cl, t0=30, theta=0.02, alpha=0.1, beta=0.1)
+    for name in ["hash", "dbh", "hdrf", "greedy", "ebv"]:
+        s = evaluate(g, PARTITIONERS[name](g, cl), cl)
+        assert r.stats.tc < s.tc, f"windgp should beat {name}"
+
+
+def test_hash_worst_ne_best_among_baselines(setup):
+    """Qualitative: locality-aware NE ≪ random hash (paper Sec. 2.2)."""
+    g, cl = setup
+    tc = {n: evaluate(g, PARTITIONERS[n](g, cl), cl).tc
+          for n in ["hash", "ne"]}
+    assert tc["ne"] < 0.5 * tc["hash"]

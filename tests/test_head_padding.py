@@ -1,0 +1,72 @@
+"""In-group q-head padding (pad_group_to): exact semantics + zero-grad pads."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.models import forward, init_params
+from repro.models.layers import head_pad_mask
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _scatter_params(cfg_pad, params):
+    """Rearrange unpadded attention weights into the padded slot layout."""
+    Hp, H, KVH = (cfg_pad.num_heads_padded, cfg_pad.num_heads,
+                  cfg_pad.num_kv_heads)
+    g, P = H // KVH, Hp // KVH
+    real = (np.arange(KVH)[:, None] * P + np.arange(g)[None, :]).reshape(-1)
+
+    def fix(path, leaf):
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        if name == "wq" and leaf.ndim == 4:        # (n_super, d, H, hd)
+            out = jnp.zeros(leaf.shape[:2] + (Hp, leaf.shape[3]), leaf.dtype)
+            return out.at[:, :, real, :].set(leaf)
+        if name == "wo" and leaf.ndim == 4:        # (n_super, H, hd, d)
+            out = jnp.zeros((leaf.shape[0], Hp) + leaf.shape[2:], leaf.dtype)
+            return out.at[:, real, :, :].set(leaf)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(fix, params)
+
+
+def test_mask_layout():
+    cfg = dataclasses.replace(get_reduced("qwen3-14b"), pad_group_to=6)
+    # reduced qwen3-14b: 5 heads, 1 kv head -> G=5, padded to 6
+    m = np.asarray(head_pad_mask(cfg))
+    assert m.shape == (6,)
+    assert m.tolist() == [1, 1, 1, 1, 1, 0]
+
+
+def test_padded_forward_matches_unpadded():
+    cfg = get_reduced("qwen3-14b")          # 5 heads, kv=1 (G=5)
+    cfg_pad = dataclasses.replace(cfg, pad_group_to=6)
+    params = init_params(cfg, KEY)
+    params_pad = _scatter_params(cfg_pad, params)
+    inp = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)
+    base = forward(cfg, params, inp)
+    padded = forward(cfg_pad, params_pad, inp)
+    np.testing.assert_allclose(np.asarray(padded), np.asarray(base),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_pad_slots_receive_zero_grads():
+    cfg = dataclasses.replace(get_reduced("qwen3-14b"), pad_group_to=6)
+    params = init_params(cfg, KEY)
+    inp = jax.random.randint(KEY, (2, 8), 0, cfg.vocab_size)
+    labels = jax.random.randint(KEY, (2, 8), 0, cfg.vocab_size)
+
+    def loss(p):
+        lg = forward(cfg, p, inp).astype(jnp.float32)
+        return -jnp.take_along_axis(jax.nn.log_softmax(lg),
+                                    labels[..., None], -1).mean()
+
+    grads = jax.grad(loss)(params)
+    mask = np.asarray(head_pad_mask(cfg))
+    pad_slots = np.flatnonzero(mask == 0)
+    gq = np.asarray(grads["blocks"]["pos0"]["mixer"]["wq"], np.float32)
+    go = np.asarray(grads["blocks"]["pos0"]["mixer"]["wo"], np.float32)
+    assert np.abs(gq[:, :, pad_slots, :]).max() == 0.0
+    assert np.abs(go[:, pad_slots, :, :]).max() == 0.0

@@ -1,0 +1,139 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import rmat, road_mesh
+from repro.kernels.bsr_spmv import (bsr_from_edges, bsr_spmv, bsr_spmv_ref,
+                                    dense_from_bsr)
+from repro.kernels.decode_attn import decode_attention, decode_attention_ref
+from repro.kernels.ssd import ssd_chunked, ssd_ref
+
+
+class TestBsrSpmv:
+    @pytest.mark.parametrize("block_size", [8, 64, 128])
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_matches_ref_and_dense(self, block_size, seed):
+        g = rmat(8, seed=seed)
+        m = bsr_from_edges(g.edges, g.num_vertices, block_size=block_size)
+        x = np.random.default_rng(seed).random(g.num_vertices).astype(np.float32)
+        y_k = np.asarray(bsr_spmv(m, jnp.asarray(x), interpret=True))
+        y_r = np.asarray(bsr_spmv_ref(m, jnp.asarray(x)))
+        y_d = dense_from_bsr(m) @ x
+        np.testing.assert_allclose(y_k, y_r, rtol=1e-5, atol=1e-4)
+        np.testing.assert_allclose(y_k, y_d, rtol=1e-5, atol=1e-4)
+
+    def test_weighted(self):
+        g = road_mesh(8, rewire=0.1, seed=2)
+        w = np.random.default_rng(0).random(g.num_edges).astype(np.float32)
+        m = bsr_from_edges(g.edges, g.num_vertices, values=w, block_size=32)
+        x = np.ones(g.num_vertices, dtype=np.float32)
+        y = np.asarray(bsr_spmv(m, jnp.asarray(x), interpret=True))
+        # row sums of the symmetric weighted adjacency
+        expect = np.zeros(g.num_vertices)
+        np.add.at(expect, g.edges[:, 0], w)
+        np.add.at(expect, g.edges[:, 1], w)
+        np.testing.assert_allclose(y, expect, rtol=1e-5, atol=1e-4)
+
+    @given(st.integers(1, 40), st.integers(0, 100))
+    @settings(max_examples=10, deadline=None)
+    def test_property_random_edges(self, n_over_8, seed):
+        n = 8 * n_over_8
+        rng = np.random.default_rng(seed)
+        e = rng.integers(0, n, size=(max(1, n), 2))
+        e = e[e[:, 0] != e[:, 1]]
+        if len(e) == 0:
+            return
+        m = bsr_from_edges(e, n, block_size=8)
+        x = rng.standard_normal(n).astype(np.float32)
+        y_k = np.asarray(bsr_spmv(m, jnp.asarray(x), interpret=True))
+        y_d = dense_from_bsr(m) @ x
+        np.testing.assert_allclose(y_k, y_d, rtol=1e-4, atol=1e-3)
+
+
+class TestSsd:
+    @pytest.mark.parametrize("dh,ds,chunk", [(16, 8, 32), (64, 32, 64),
+                                             (32, 128, 128)])
+    def test_matches_recurrence(self, dh, ds, chunk):
+        rng = np.random.default_rng(0)
+        BH, T = 3, 2 * chunk
+        x = jnp.asarray(rng.standard_normal((BH, T, dh)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((BH, T, ds)) * .5, jnp.float32)
+        c = jnp.asarray(rng.standard_normal((BH, T, ds)) * .5, jnp.float32)
+        a = jnp.asarray(-np.abs(rng.standard_normal((BH, T))) * .1, jnp.float32)
+        y_k = np.asarray(ssd_chunked(x, b, c, a, chunk=chunk, interpret=True))
+        y_r = np.asarray(ssd_ref(x, b, c, a))
+        np.testing.assert_allclose(y_k, y_r, rtol=2e-4, atol=2e-4)
+
+    def test_ragged_length_padding(self):
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.standard_normal((2, 100, 16)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((2, 100, 8)) * .5, jnp.float32)
+        c = jnp.asarray(rng.standard_normal((2, 100, 8)) * .5, jnp.float32)
+        a = jnp.asarray(-np.abs(rng.standard_normal((2, 100))) * .1, jnp.float32)
+        y_k = np.asarray(ssd_chunked(x, b, c, a, chunk=64, interpret=True))
+        y_r = np.asarray(ssd_ref(x, b, c, a))
+        np.testing.assert_allclose(y_k, y_r, rtol=2e-4, atol=2e-4)
+
+    def test_bf16_inputs(self):
+        rng = np.random.default_rng(2)
+        x = jnp.asarray(rng.standard_normal((2, 128, 32)), jnp.bfloat16)
+        b = jnp.asarray(rng.standard_normal((2, 128, 16)) * .5, jnp.bfloat16)
+        c = jnp.asarray(rng.standard_normal((2, 128, 16)) * .5, jnp.bfloat16)
+        a = jnp.asarray(-np.abs(rng.standard_normal((2, 128))) * .1, jnp.float32)
+        y_k = ssd_chunked(x, b, c, a.astype(jnp.float32), chunk=64,
+                          interpret=True)
+        y_r = ssd_ref(x, b, c, a)
+        assert y_k.dtype == jnp.bfloat16
+        np.testing.assert_allclose(
+            np.asarray(y_k, dtype=np.float32),
+            np.asarray(y_r, dtype=np.float32), rtol=1e-1, atol=1e-1)
+
+    def test_long_decay_stability(self):
+        """Strong decay: later chunks must not blow up (exp bounded)."""
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(rng.standard_normal((1, 256, 16)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((1, 256, 8)), jnp.float32)
+        c = jnp.asarray(rng.standard_normal((1, 256, 8)), jnp.float32)
+        a = jnp.full((1, 256), -5.0, dtype=jnp.float32)
+        y = np.asarray(ssd_chunked(x, b, c, a, chunk=64, interpret=True))
+        assert np.isfinite(y).all()
+
+
+class TestDecodeAttn:
+    @pytest.mark.parametrize("H,KVH,dh,S,bs", [
+        (8, 2, 64, 512, 128), (4, 4, 32, 256, 64),   # GQA + MHA
+        (16, 1, 64, 256, 256),                        # MQA
+    ])
+    def test_matches_ref(self, H, KVH, dh, S, bs):
+        rng = np.random.default_rng(0)
+        B = 2
+        q = jnp.asarray(rng.standard_normal((B, H, dh)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((B, S, KVH, dh)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((B, S, KVH, dh)), jnp.float32)
+        lens = jnp.asarray([S, S // 2 + 3])
+        out = decode_attention(q, k, v, lens, block_s=bs, interpret=True)
+        G = H // KVH
+        bias = jnp.where(jnp.arange(S)[None, :] < lens[:, None], 0.0, -1e30)
+        ref = jax.vmap(decode_attention_ref)(
+            q.reshape(B, KVH, G, dh), k, v, bias).reshape(B, H, dh)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_short_length_ignores_padding(self):
+        """Poisoned padded KV must not leak into the output."""
+        rng = np.random.default_rng(4)
+        B, H, KVH, dh, S = 1, 4, 2, 32, 256
+        q = jnp.asarray(rng.standard_normal((B, H, dh)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((B, S, KVH, dh)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((B, S, KVH, dh)), jnp.float32)
+        k = k.at[:, 100:].set(1e4)
+        v = v.at[:, 100:].set(1e4)
+        lens = jnp.asarray([100])
+        out = decode_attention(q, k, v, lens, block_s=64, interpret=True)
+        out2 = decode_attention(q, k[:, :128], v[:, :128],
+                                lens, block_s=64, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(out2),
+                                   rtol=1e-5, atol=1e-5)

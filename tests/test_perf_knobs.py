@@ -1,0 +1,49 @@
+"""The §Perf hillclimb knobs must never change model semantics."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import forward, init_params
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _logits(cfg, params, inp):
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with mesh:
+        return jax.jit(lambda p, x: forward(cfg, p, x))(params, inp)
+
+
+class TestKnobsPreserveSemantics:
+    def test_seq_parallel_constraint_is_noop_numerically(self):
+        cfg = get_reduced("qwen3-4b")
+        params = init_params(cfg, KEY)
+        inp = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)
+        base = _logits(cfg, params, inp)
+        sp = _logits(dataclasses.replace(cfg, act_shard="seq"), params, inp)
+        np.testing.assert_allclose(np.asarray(base), np.asarray(sp),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_moe_ep_constraint_is_noop_numerically(self):
+        cfg = get_reduced("phi3.5-moe-42b-a6.6b")
+        params = init_params(cfg, KEY)
+        inp = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)
+        base = _logits(cfg, params, inp)
+        ep = _logits(dataclasses.replace(cfg, moe_ep=True), params, inp)
+        np.testing.assert_allclose(np.asarray(base), np.asarray(ep),
+                                   rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("bq,bk", [(4, 8), (16, 16), (64, 32)])
+    def test_flash_block_sizes_are_noop(self, bq, bk):
+        cfg = get_reduced("glm4-9b")
+        params = init_params(cfg, KEY)
+        inp = jax.random.randint(KEY, (2, 24), 0, cfg.vocab_size)
+        base = forward(cfg, params, inp)
+        var = forward(dataclasses.replace(cfg, block_q=bq, block_k=bk),
+                      params, inp)
+        np.testing.assert_allclose(np.asarray(base), np.asarray(var),
+                                   rtol=2e-5, atol=2e-5)

@@ -1,0 +1,205 @@
+"""Training substrate: optimizer, train step, checkpointing, compression,
+heterogeneous batch split, WindGP expert placement."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import init_params
+from repro.sharding.windgp_placement import (coactivation_graph,
+                                             place_experts, placement_cost)
+from repro.train import (CheckpointManager, adamw_init, adamw_update,
+                         compress_grads, dequantize_int8,
+                         heterogeneous_batch_split, make_train_step,
+                         quantize_int8)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B=4, S=16, key=KEY):
+    if cfg.input_mode == "tokens":
+        inputs = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    else:
+        inputs = jax.random.normal(key, (B, S, cfg.d_model), jnp.float32)
+    labels = jax.random.randint(jax.random.fold_in(key, 1), (B, S), 0,
+                                cfg.vocab_size)
+    return {"inputs": inputs, "labels": labels}
+
+
+class TestTrainStep:
+    def test_loss_decreases(self):
+        cfg = get_reduced("qwen3-4b")
+        params = init_params(cfg, KEY)
+        opt = adamw_init(params)
+        step = jax.jit(make_train_step(cfg, lr=3e-3, remat=False))
+        batch = _batch(cfg)
+        losses = []
+        for _ in range(8):
+            params, opt, metrics = step(params, opt, batch)
+            losses.append(float(metrics["loss"]))
+        assert losses[-1] < losses[0] - 0.5, losses
+
+    def test_remat_matches_no_remat(self):
+        cfg = get_reduced("glm4-9b")
+        params = init_params(cfg, KEY)
+        batch = _batch(cfg)
+        opt = adamw_init(params)
+        s1 = jax.jit(make_train_step(cfg, remat=False))
+        s2 = jax.jit(make_train_step(cfg, remat=True))
+        _, _, m1 = s1(params, opt, batch)
+        _, _, m2 = s2(params, opt, batch)
+        np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                                   rtol=1e-5)
+
+    def test_microbatching_matches_full_batch(self):
+        cfg = get_reduced("qwen3-4b")
+        params = init_params(cfg, KEY)
+        opt = adamw_init(params)
+        batch = _batch(cfg, B=4)
+        s1 = jax.jit(make_train_step(cfg, microbatches=1, remat=False))
+        s2 = jax.jit(make_train_step(cfg, microbatches=2, remat=False))
+        p1, _, m1 = s1(params, opt, batch)
+        p2, _, m2 = s2(params, opt, batch)
+        np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                                   rtol=1e-5)
+        # same optimizer update (up to accumulation-order float noise)
+        l1, l2 = jax.tree.leaves(p1), jax.tree.leaves(p2)
+        for a, b in zip(l1, l2):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       rtol=2e-3, atol=2e-4)
+
+    def test_compressed_training_still_converges(self):
+        cfg = get_reduced("qwen3-4b")
+        params = init_params(cfg, KEY)
+        opt = adamw_init(params)
+        step = jax.jit(make_train_step(cfg, lr=3e-3, remat=False,
+                                       compress="int8"))
+        batch = _batch(cfg)
+        losses = []
+        for _ in range(8):
+            params, opt, metrics = step(params, opt, batch)
+            losses.append(float(metrics["loss"]))
+        assert losses[-1] < losses[0] - 0.5, losses
+
+
+class TestCompression:
+    def test_int8_roundtrip_error_bounded(self):
+        x = jax.random.normal(KEY, (1024,), jnp.float32)
+        q, s = quantize_int8(x)
+        err = jnp.abs(dequantize_int8(q, s) - x).max()
+        assert float(err) <= float(s) * 0.5 + 1e-9
+
+    def test_small_tensors_exact(self):
+        g = {"tiny": jnp.array([1.234567]), "big": jnp.ones((64, 64)) * 0.37}
+        out = compress_grads(g)
+        np.testing.assert_array_equal(np.asarray(out["tiny"]),
+                                      np.asarray(g["tiny"]))
+
+
+class TestCheckpoint:
+    def test_save_restore_bitwise(self, tmp_path):
+        cfg = get_reduced("glm4-9b")
+        params = init_params(cfg, KEY)
+        opt = adamw_init(params)
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        state = {"params": params, "opt": opt}
+        mgr.save(3, state, extra={"data_cursor": 1234, "rng": [0, 7]})
+        restored, step, extra = mgr.restore(jax.eval_shape(lambda: state))
+        assert step == 3 and extra["data_cursor"] == 1234
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_keep_last_k_gc(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        state = {"x": jnp.arange(4)}
+        for s in [1, 2, 3, 4]:
+            mgr.save(s, state)
+        assert mgr.all_steps() == [3, 4]
+
+    def test_kill_and_resume_training(self, tmp_path):
+        """Train 4 steps; 'crash'; resume from step 2; states match a
+        continuous 4-step run bitwise."""
+        cfg = get_reduced("qwen3-4b")
+        params = init_params(cfg, KEY)
+        opt = adamw_init(params)
+        step = jax.jit(make_train_step(cfg, lr=1e-3, remat=False))
+        batches = [_batch(cfg, key=jax.random.fold_in(KEY, i))
+                   for i in range(4)]
+        mgr = CheckpointManager(str(tmp_path), keep=3)
+        # continuous run, checkpointing at step 2
+        p, o = params, opt
+        for i, b in enumerate(batches):
+            p, o, _ = step(p, o, b)
+            if i == 1:
+                mgr.save(i + 1, {"params": p, "opt": o})
+        # crash + resume
+        restored, at, _ = mgr.restore(
+            jax.eval_shape(lambda: {"params": params, "opt": opt}))
+        p2, o2 = restored["params"], restored["opt"]
+        for b in batches[at:]:
+            p2, o2, _ = step(p2, o2, b)
+        for a, b_ in zip(jax.tree.leaves(p), jax.tree.leaves(p2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+
+    def test_no_partial_checkpoint_visible(self, tmp_path):
+        """Atomicity: directory only ever contains complete step dirs."""
+        mgr = CheckpointManager(str(tmp_path), keep=3)
+        mgr.save(1, {"x": jnp.ones((128, 128))})
+        entries = [e for e in os.listdir(tmp_path) if not e.startswith(".")]
+        assert entries == ["step_0000000001"]
+        files = os.listdir(tmp_path / "step_0000000001")
+        assert set(files) == {"arrays.npz", "manifest.json"}
+
+
+class TestHeterogeneousBatch:
+    def test_faster_pods_get_more(self):
+        split = heterogeneous_batch_split(256, [1.0, 1.0, 0.5])
+        assert split.sum() == 256
+        assert split[2] > split[0] == split[1]
+        # water-filling: cost-balanced => c_i * b_i ~ const
+        assert abs(split[2] * 0.5 - split[0] * 1.0) <= 1.0
+
+    def test_memory_clamp(self):
+        split = heterogeneous_batch_split(256, [1.0, 0.25],
+                                          pod_mem_samples=[256, 64])
+        assert split.sum() == 256
+        assert split[1] == 64          # fast pod clamped by HBM
+        assert split[0] == 192
+
+    def test_infeasible_raises(self):
+        with pytest.raises(ValueError):
+            heterogeneous_batch_split(256, [1.0, 1.0],
+                                      pod_mem_samples=[16, 16])
+
+
+class TestExpertPlacement:
+    def _routing(self, E=16, toks=400, hot=4, seed=0):
+        rng = np.random.default_rng(seed)
+        # hot experts co-activate: tokens pick 2 experts, biased to hot set
+        a = rng.choice(hot, size=(toks // 2, 1))
+        b = rng.choice(hot, size=(toks // 2, 1))
+        cold = rng.choice(np.arange(hot, E), size=(toks - toks // 2, 2))
+        return np.concatenate([np.concatenate([a, b], 1), cold], 0)
+
+    def test_coactivation_graph(self):
+        r = self._routing()
+        edges, w, loads = coactivation_graph(r)
+        assert loads.sum() == r.size
+        assert (w > 0).all()
+
+    def test_placement_beats_round_robin(self):
+        E = 16
+        r = self._routing(E=E)
+        compute = [1.0, 1.0, 2.0]       # pod 2 slower
+        mem = [8, 8, 8]
+        link = [1.0, 1.0, 1.0]
+        place = place_experts(E, r, compute, mem, link)
+        assert place.shape == (E,)
+        assert all(np.bincount(place, minlength=3) <= np.array(mem) + 1)
+        rr = np.arange(E) % 3
+        assert placement_cost(place, r, compute, link) <= \
+            placement_cost(rr, r, compute, link)
