@@ -17,11 +17,18 @@ from repro.data import rmat, road_mesh
 _CACHE = {}
 
 
-def dataset(name: str, quick: bool = True):
-    """Proxy graphs: (name, paper dataset, family)."""
-    if (name, quick) in _CACHE:
-        return _CACHE[(name, quick)]
-    s = 0 if quick else 1          # +1 scale in --full mode
+def dataset(name: str, quick: bool = True, bump: int = 0):
+    """Proxy graphs: (name, paper dataset, family).
+
+    ``bump`` raises the scale by that many steps beyond the quick/full
+    baseline (rmat: +1 scale doubles |V|; mesh: side grows by 150 per
+    step) — the engine benchmarks use ``bump=1`` to compare at one step
+    past today's default.
+    """
+    key = (name, quick, bump)
+    if key in _CACHE:
+        return _CACHE[key]
+    s = (0 if quick else 1) + bump     # +1 scale in --full mode
     specs = {
         # paper dataset: (scale, edge_factor) or mesh side
         "TW": ("rmat", 13 + s, 29),   # Twitter: extreme skew, dense
@@ -34,7 +41,7 @@ def dataset(name: str, quick: bool = True):
     kind, a, b = specs[name]
     g = rmat(a, edge_factor=b, seed=42) if kind == "rmat" \
         else road_mesh(a, rewire=0.02, seed=42)
-    _CACHE[(name, quick)] = g
+    _CACHE[key] = g
     return g
 
 

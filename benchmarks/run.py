@@ -20,6 +20,7 @@ TABLES = {
     "fig13": scale_graphsize.run,     # graph-size scalability
     "fig14_15": scale_machines.run,   # machine count/types
     "tab11": partition_time.run,      # partitioning time
+    "engines": partition_time.run_engine_compare,  # heap vs batched expansion
     "tab1": tc_vs_runtime.run,        # TC ∝ runtime
     "tab15_16": bsp_runtime.run,      # distributed algorithm runtimes
 }

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from ..compat import shard_map
+
 MACHINES = "machines"
 
 
@@ -70,7 +72,7 @@ def make_step(superstep: Callable, static, *, mesh: Mesh | None = None):
             new_state, active = superstep(st, sa)
             return (jax.tree.map(lambda a: jnp.asarray(a)[None], new_state),
                     jnp.asarray(active)[None])
-        return jax.shard_map(
+        return shard_map(
             inner, mesh=mesh,
             in_specs=(state_spec_of(state), static_spec),
             out_specs=(state_spec_of(state), P(MACHINES)))(state, static)

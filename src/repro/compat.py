@@ -1,0 +1,77 @@
+"""Version compatibility for the jax API surface this repo touches.
+
+jaxlib 0.4.37 (the container's pin) predates several now-top-level APIs:
+
+* ``jax.shard_map``            -> ``jax.experimental.shard_map.shard_map``
+  (and the new ``check_vma=`` kwarg is the old ``check_rep=``);
+* ``jax.sharding.AbstractMesh(shape, axis_names)`` -> the 0.4.x ctor takes a
+  single ``((name, size), ...)`` shape tuple;
+* ``CompiledMemoryStats.peak_memory_in_bytes`` -> absent; the peak is
+  reconstructed from the per-category sizes.
+
+Import from here instead of sniffing versions at call sites.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "abstract_mesh", "make_mesh", "peak_memory_bytes"]
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None):
+    """``jax.make_mesh`` with a fallback for jaxlibs that predate it."""
+    if hasattr(jax, "make_mesh"):
+        if devices is not None:
+            return jax.make_mesh(tuple(axis_shapes), tuple(axis_names),
+                                 devices=devices)
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))
+    import math
+
+    import numpy as np
+    devs = list(devices if devices is not None else jax.devices())
+    n = math.prod(axis_shapes)
+    return jax.sharding.Mesh(
+        np.asarray(devs[:n]).reshape(tuple(axis_shapes)),
+        tuple(axis_names))
+
+
+if hasattr(jax, "shard_map"):                       # jax >= 0.6
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map_old
+
+    def shard_map(f, *, mesh, in_specs, out_specs, **kw):
+        """Old-namespace shard_map; translates ``check_vma`` -> ``check_rep``."""
+        if "check_vma" in kw:
+            kw["check_rep"] = kw.pop("check_vma")
+        return _shard_map_old(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, **kw)
+
+
+def abstract_mesh(axis_shapes, axis_names):
+    """``AbstractMesh`` across the 0.4 -> 0.5 constructor change."""
+    try:
+        return jax.sharding.AbstractMesh(tuple(axis_shapes),
+                                         tuple(axis_names))
+    except TypeError:  # 0.4.x: single ((name, size), ...) tuple
+        return jax.sharding.AbstractMesh(
+            tuple(zip(axis_names, axis_shapes)))
+
+
+def peak_memory_bytes(mem) -> int:
+    """Per-device peak from ``compiled.memory_analysis()``, any jax version.
+
+    Newer jaxlibs expose ``peak_memory_in_bytes`` directly; 0.4.x only
+    reports per-category sizes, whose sum upper-bounds the true live peak
+    (arguments + outputs + temps + generated code are all resident at the
+    end of the step on TPU's arena allocator).
+    """
+    direct = getattr(mem, "peak_memory_in_bytes", None)
+    if direct is not None:
+        return int(direct)
+    total = 0
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes"):
+        total += int(getattr(mem, attr, 0) or 0)
+    alias = int(getattr(mem, "alias_size_in_bytes", 0) or 0)
+    return max(0, total - alias)

@@ -3,10 +3,26 @@
 Each is adapted — exactly as the paper does for fairness — to heterogeneous
 machines by adding per-machine memory-capacity constraints; otherwise they
 optimize their original homogeneous objectives.
+
+``windgp_heap`` / ``windgp_batched`` expose the two WindGP expansion
+engines through the same ``(g, cluster) -> assign`` interface so the
+benchmark harnesses can sweep every method uniformly.
 """
 from .streaming import dbh, ebv, hdrf, powergraph_greedy, random_hash
 from .ne import ne
 from .metis_like import metis_like
+
+
+def _windgp_with(engine):
+    def run(g, cluster, **kw):
+        from ..windgp import windgp  # deferred: windgp imports this package
+        return windgp(g, cluster, engine=engine, **kw).assign
+    run.__name__ = f"windgp_{engine}"
+    return run
+
+
+windgp_heap = _windgp_with("heap")
+windgp_batched = _windgp_with("batched")
 
 PARTITIONERS = {
     "hash": random_hash,
@@ -16,7 +32,9 @@ PARTITIONERS = {
     "ebv": ebv,
     "ne": ne,
     "metis": metis_like,
+    "windgp_heap": windgp_heap,
+    "windgp_batched": windgp_batched,
 }
 
 __all__ = ["dbh", "ebv", "hdrf", "powergraph_greedy", "random_hash", "ne",
-           "metis_like", "PARTITIONERS"]
+           "metis_like", "windgp_heap", "windgp_batched", "PARTITIONERS"]

@@ -20,10 +20,24 @@ into S and assigns all unassigned edges between y and S.  Invariant: within
 one partition's expansion, every unassigned edge incident to S leads
 outside S.
 
-Complexity: O(|E_i| + |V_i| log |V_i|) per partition via a lazy min-heap
-(the paper's Min-Heap optimization); set membership via uint8 bitmaps (the
-paper's bitmap optimization).  Per-vertex neighborhood work is numpy-
-vectorized.
+Two engines implement the same expansion:
+
+* ``engine="heap"`` — the reference oracle: a per-vertex lazy min-heap
+  (the paper's Min-Heap optimization), O(|E_i| + |V_i| log |V_i|) per
+  partition, but interpreter-bound (one Python iteration per expansion
+  vertex, one ``heappush`` per touched neighbor).
+* ``engine="batched"`` — the production engine: Eq. 5 scores are quantized
+  to integers (``w·QUANT_SCALE`` with exactly-linear integer coefficients,
+  so the ordering matches the float heap whenever ``(1+α)·scale`` and
+  ``(α+β)·scale`` are integral), held in a monotone bucket queue (scores
+  only decrease within one partition's expansion), and whole best-score
+  frontier slices are expanded per step with fully vectorized AllocEdges —
+  no per-neighbor Python work.  ``strict_ties=True`` degrades the pop to
+  one vertex per step (min vertex id within the best bucket), which makes
+  the batched engine bit-identical to the heap oracle whenever the
+  quantization is exact — the equivalence tests rely on this.
+
+Set membership is uint8 bitmaps (the paper's bitmap optimization) in both.
 """
 from __future__ import annotations
 
@@ -34,6 +48,16 @@ import numpy as np
 
 from .graph import Graph
 
+#: Integer score quantization for the batched engine: q(v) =
+#: round((1+α)·S)·ext(v) − round((α+β·I_B(v))·S)·deg0(v).  64 keeps the
+#: coefficients exact for α, β that are multiples of 1/64 (incl. 0.25, 0.5)
+#: and within ~1% for the paper's α=0.1/0.3 — coefficient fidelity is what
+#: keeps the batched TC close to the oracle; bucket merging comes from the
+#: admission window, not from coarse quantization.
+QUANT_SCALE = 64
+
+ENGINES = ("heap", "batched")
+
 
 @dataclasses.dataclass
 class ExpansionState:
@@ -43,22 +67,44 @@ class ExpansionState:
     epoch: np.ndarray             # (E,) int32: partition that took e, -1 free
     rem_deg: np.ndarray           # (V,) int64: unassigned incident edges
     in_border: np.ndarray         # (V,) uint8: B, replicated-vertex set
-    seed_heap: list               # lazy (rem_deg, v) heap for vertexSelection
+    seed_heap: list | None        # lazy (rem_deg, v) heap for vertexSelection
     unassigned_edges: int
+    # Working CSR for the batched engine: the live (unassigned) slice of
+    # g's adjacency, recompacted geometrically as partitions consume edges.
+    # Dropping dead entries preserves adjacency order, so it changes no
+    # engine decision — only how much dead data each AllocEdges gathers.
+    w_indptr: np.ndarray | None = None
+    w_indices: np.ndarray | None = None
+    w_eids: np.ndarray | None = None
 
     @classmethod
     def fresh(cls, g: Graph) -> "ExpansionState":
         deg = g.degree().astype(np.int64)
-        heap = [(int(d), int(v)) for v, d in enumerate(deg) if d > 0]
-        heapq.heapify(heap)
         return cls(
             g=g,
             epoch=np.full(g.num_edges, -1, dtype=np.int32),
             rem_deg=deg.copy(),
             in_border=np.zeros(g.num_vertices, dtype=np.uint8),
-            seed_heap=heap,
+            seed_heap=None,   # built on first _vertex_selection call
             unassigned_edges=g.num_edges,
         )
+
+    def working_csr(self, compact_below: float = 0.75):
+        """(indptr, indices, eids) of the live adjacency, recompacting when
+        fewer than ``compact_below`` of the stored entries are still live."""
+        if self.w_indptr is None:
+            self.w_indptr = self.g.indptr
+            self.w_indices = self.g.indices
+            self.w_eids = self.g.edge_ids
+        stored = len(self.w_eids)
+        if stored and 2 * self.unassigned_edges < compact_below * stored:
+            live = self.epoch[self.w_eids] == -1
+            cum = np.concatenate(
+                [np.zeros(1, dtype=np.int64), np.cumsum(live)])
+            self.w_indptr = cum[self.w_indptr]
+            self.w_indices = self.w_indices[live]
+            self.w_eids = self.w_eids[live]
+        return self.w_indptr, self.w_indices, self.w_eids
 
     @property
     def assigned(self) -> np.ndarray:
@@ -67,6 +113,10 @@ class ExpansionState:
 
 def _vertex_selection(st: ExpansionState, in_s: np.ndarray) -> int:
     """Pick a fresh seed: minimum remaining degree among untouched vertices."""
+    if st.seed_heap is None:
+        st.seed_heap = [(int(d), int(v))
+                        for v, d in enumerate(st.rem_deg) if d > 0]
+        heapq.heapify(st.seed_heap)
     h = st.seed_heap
     while h:
         d, v = h[0]
@@ -92,13 +142,46 @@ def expand_partition(
     m_node: float = 1.0,
     m_edge: float = 2.0,
     record_order: list | None = None,
+    engine: str = "heap",
+    **engine_kw,
 ) -> np.ndarray:
     """Grow one partition of up to ``delta`` edges; returns its edge ids.
 
     If ``memory_limit`` is given, expansion stops early once the *actual*
     memory footprint m_node·|V_i| + m_edge·|E_i| would exceed it (the δ from
     preprocessing bounds it only through the |V|/|E| estimate).
+
+    ``engine`` selects the scalar heap oracle or the batched bucket-queue
+    engine (see module docstring); extra kwargs go to the batched engine.
     """
+    if engine == "batched":
+        return expand_partition_batched(
+            st, part_id, delta, alpha, beta, memory_limit=memory_limit,
+            m_node=m_node, m_edge=m_edge, record_order=record_order,
+            **engine_kw)
+    if engine != "heap":
+        raise ValueError(f"unknown expansion engine {engine!r}")
+    if engine_kw:
+        raise TypeError(
+            f"engine='heap' takes no engine kwargs; got {sorted(engine_kw)}")
+    return _expand_partition_heap(
+        st, part_id, delta, alpha, beta, memory_limit=memory_limit,
+        m_node=m_node, m_edge=m_edge, record_order=record_order)
+
+
+def _expand_partition_heap(
+    st: ExpansionState,
+    part_id: int,
+    delta: int,
+    alpha: float,
+    beta: float,
+    *,
+    memory_limit: float | None = None,
+    m_node: float = 1.0,
+    m_edge: float = 2.0,
+    record_order: list | None = None,
+) -> np.ndarray:
+    """The scalar lazy-min-heap reference engine (paper Algorithms 2-3)."""
     g, V = st.g, st.g.num_vertices
     indptr, indices, eids = g.indptr, g.indices, g.edge_ids
     epoch, rem_deg, in_border = st.epoch, st.rem_deg, st.in_border
@@ -188,6 +271,322 @@ def expand_partition(
     return np.asarray(edge_list, dtype=np.int64)
 
 
+# ---------------------------------------------------------------------------
+# batched engine
+# ---------------------------------------------------------------------------
+
+class _BucketQueue:
+    """Monotone integer bucket queue over quantized w(v).
+
+    Scores only decrease during one partition's expansion (ext(v) is
+    non-increasing, deg0 and I_B are frozen), so entries are append-only
+    arrays per distinct score with lazy invalidation at pop time (an entry
+    is live iff its vertex is frontier and its score equals the vertex's
+    current quantized score).  A small heap over the *distinct* score values
+    finds the next non-empty bucket; its size is the number of distinct
+    scores in flight, not the number of entries.
+    """
+
+    __slots__ = ("buckets", "score_heap")
+
+    def __init__(self):
+        self.buckets: dict[int, list[np.ndarray]] = {}
+        self.score_heap: list[int] = []
+
+    def push(self, scores: np.ndarray, verts: np.ndarray) -> None:
+        """Insert verts (already scored); both arrays are parallel."""
+        order = np.argsort(scores)
+        sc, vs = scores[order], verts[order]
+        uniq, starts = np.unique(sc, return_index=True)
+        bounds = np.append(starts[1:], len(sc))
+        for val, s0, s1 in zip(uniq.tolist(), starts.tolist(),
+                               bounds.tolist()):
+            lst = self.buckets.get(val)
+            if lst is None:
+                self.buckets[val] = [vs[s0:s1]]
+                heapq.heappush(self.score_heap, val)
+            else:
+                lst.append(vs[s0:s1])
+
+    def peek_score(self) -> int | None:
+        """Best score with a (possibly stale) non-empty bucket, or None."""
+        while self.score_heap:
+            s = self.score_heap[0]
+            if self.buckets.get(s):
+                return s
+            heapq.heappop(self.score_heap)
+            self.buckets.pop(s, None)
+        return None
+
+    def pop_bucket(self) -> tuple[int, np.ndarray] | None:
+        """Remove and return (score, entries) of the best bucket, or None."""
+        s = self.peek_score()
+        if s is None:
+            return None
+        heapq.heappop(self.score_heap)
+        lst = self.buckets.pop(s)
+        return s, (lst[0] if len(lst) == 1 else np.concatenate(lst))
+
+
+def expand_partition_batched(
+    st: ExpansionState,
+    part_id: int,
+    delta: int,
+    alpha: float,
+    beta: float,
+    *,
+    memory_limit: float | None = None,
+    m_node: float = 1.0,
+    m_edge: float = 2.0,
+    record_order: list | None = None,
+    scale: int = QUANT_SCALE,
+    strict_ties: bool = False,
+    batch_target: int = 512,
+    batch_frac: float = 0.5,
+    batch_window: float = 6.0,
+) -> np.ndarray:
+    """Batched AllocEdges over bucket-queue frontier slices.
+
+    Semantics match ``_expand_partition_heap`` with three deliberate
+    deviations: (1) all frontier vertices sharing the best quantized score
+    expand in one step (``strict_ties=True`` restores one-at-a-time pops
+    for oracle equivalence); (2) successive buckets are drained best-first
+    into one slice, bounded three ways — at most ``batch_target`` vertices,
+    at most ``batch_frac`` of the live frontier (admitting a large fraction
+    at once suppresses the cohesion feedback that makes best-first beat
+    BFS, which is what degrades TC on skewed graphs), and only while the
+    next bucket's score stays within ``batch_window`` w-units of the
+    slice's best (must exceed one ext step, (1+α), to batch across mesh
+    wavefronts at all); (3) under ``memory_limit`` the batched engine
+    truncates joins so the footprint never exceeds the limit (the heap
+    engine only pre-checks and may overshoot within one AllocEdges).
+    """
+    g, V = st.g, st.g.num_vertices
+    indptr, indices, eids = st.working_csr()
+    epoch, rem_deg, in_border = st.epoch, st.rem_deg, st.in_border
+    in_s = np.zeros(V, dtype=np.uint8)
+    in_c = np.zeros(V, dtype=np.uint8)
+    fr = np.zeros(V, dtype=bool)            # frontier bitmap: S \ C
+    # int32 score arithmetic is the fast path; fall back to int64 whenever
+    # coef·maxdeg could approach 2^31 (huge hubs or a large user scale) —
+    # a wrapped score would silently corrupt the best-first order.
+    ca = round((1.0 + alpha) * scale)
+    cd = round((alpha + beta) * scale)
+    maxdeg = int(rem_deg.max(initial=0))
+    qdtype = np.int32 if max(ca, cd) * max(1, maxdeg) < 2 ** 30 else np.int64
+    deg0 = rem_deg.astype(qdtype)           # |N(v)| in this partition's graph
+    ext = deg0.copy()                       # |N(v)\S|, starts at |N(v)|
+    coef_a = qdtype(ca)
+    coef_d = np.where(in_border != 0, qdtype(cd),
+                      qdtype(round(alpha * scale))).astype(qdtype)
+    qscore = np.zeros(V, dtype=qdtype)
+    bq = _BucketQueue()
+    rank_buf = np.full(V, -1, dtype=np.int32)   # batch rank scratch
+    big = max(64, V // 8)   # ufunc.at beats bincount below this size
+
+    def _dec(arr: np.ndarray, idx: np.ndarray) -> None:
+        """arr[idx] -= 1 with repeats; bincount for large index sets."""
+        if len(idx) > big:
+            arr -= np.bincount(idx, minlength=V).astype(arr.dtype)
+        else:
+            np.subtract.at(arr, idx, 1)
+    chunks: list[np.ndarray] = []
+    n_edges = 0
+    n_vertices = 0
+    n_core = 0
+    target = int(delta)
+    window_q = int(round(batch_window * scale))
+
+    def refresh(front: np.ndarray) -> None:
+        """Recompute quantized priorities for S\\C vertices and enqueue."""
+        q = coef_a * ext[front] - coef_d[front] * deg0[front]
+        qscore[front] = q
+        bq.push(q, front)
+
+    def gather_adj(verts: np.ndarray):
+        """Ragged gather of verts' adjacency slices from the working CSR.
+
+        Returns (nb, es, reps, offs): neighbor / edge-id arrays flattened
+        in verts order, the owner rank of each flat slot, and each owner's
+        start offset into the flat arrays.
+        """
+        starts = indptr[verts]
+        counts = indptr[verts + 1] - starts
+        total = int(counts.sum())
+        offs = np.cumsum(counts) - counts
+        reps = np.repeat(np.arange(len(verts), dtype=np.int32), counts)
+        flat = np.arange(total, dtype=np.int64) \
+            + np.repeat(starts - offs, counts)
+        return indices[flat], eids[flat], reps, offs
+
+    def batch_join(ys: np.ndarray) -> np.ndarray:
+        """Vectorized join_s over an *ordered* batch of non-S vertices.
+
+        Replicates the sequential heap semantics: y_j joins iff the edge
+        budget (and, batched-only, the memory budget) is not exhausted
+        before its turn; its S-incident edges (S = old S ∪ {y_i : i<j})
+        assign in adjacency order, truncated exactly at the budget.
+        Returns the vertices that actually joined.
+        """
+        nonlocal n_edges, n_vertices
+        k = len(ys)
+        if k == 0:
+            return ys
+        nb, es, reps, offs = gather_adj(ys)
+        live = epoch[es] == -1
+        rank_buf[ys] = np.arange(k, dtype=np.int32)
+        rnb = rank_buf[nb]
+        # assignable: live edge into old S, or into an earlier batch member
+        cand = live & ((in_s[nb] == 1) | ((rnb >= 0) & (rnb < reps)))
+        cum = np.cumsum(cand, dtype=np.int32)
+        # candidates strictly before each owner's adjacency slice
+        owner_before = cum[offs] - cand[offs]
+        room = target - n_edges
+        n_join = int(np.searchsorted(owner_before, room, side="left"))
+        e_allowed = room
+        if memory_limit is not None:
+            # vertex feasibility: owner j joins only while the footprint of
+            # (nv + j + 1) vertices plus the edges already taken fits.
+            fits = m_node * (n_vertices + np.arange(1, k + 1)) \
+                + m_edge * (n_edges + np.minimum(owner_before, room))
+            n_fit = int(np.searchsorted(fits, memory_limit + 1e-9,
+                                        side="right"))
+            n_join = min(n_join, n_fit)
+            if n_join > 0:
+                e_allowed = min(room, int(
+                    (memory_limit + 1e-9
+                     - m_node * (n_vertices + n_join)) // m_edge) - n_edges)
+        if n_join <= 0:
+            rank_buf[ys] = -1
+            return ys[:0]
+        jmask = reps < n_join
+        lj = live if n_join == k else live & jmask
+        sel = cand & (cum <= e_allowed) if n_join == k \
+            else cand & jmask & (cum <= e_allowed)
+        joined = ys[:n_join]
+        in_s[joined] = 1
+        fr[joined] = True
+        n_vertices += n_join
+        # y entering S: every live working-graph neighbor loses one ext link
+        nbl = nb[lj]
+        _dec(ext, nbl)
+        e_sel = es[sel]
+        z_sel = None
+        if len(e_sel):
+            z_sel = nb[sel]
+            y_sel = ys[reps[sel]]
+            epoch[e_sel] = part_id
+            _dec(rem_deg, z_sel)
+            _dec(rem_deg, y_sel)
+            st.unassigned_edges -= len(e_sel)
+            n_edges += len(e_sel)
+            chunks.append(e_sel)
+        # refresh every touched frontier vertex (joiners included).  On the
+        # fast path the frontier members whose ext changed are exactly the
+        # in-S endpoints of the assigned edges (an unassigned live edge
+        # into S only survives a *truncated* batch, which ends the
+        # partition); strict mode mirrors the heap's full-neighborhood
+        # refresh bit for bit.
+        if strict_ties:
+            front = np.concatenate([nbl, joined.astype(nbl.dtype)])
+        elif z_sel is not None:
+            front = np.concatenate([z_sel, joined.astype(z_sel.dtype)])
+        else:
+            front = joined
+        front = front[fr[front]]
+        rank_buf[ys] = -1
+        if len(front):
+            refresh(np.unique(front))
+        return joined
+
+    while n_edges < target and st.unassigned_edges > 0:
+        if memory_limit is not None and (
+                m_node * (n_vertices + 1) + m_edge * (n_edges + 1)
+                > memory_limit + 1e-9):
+            break
+        # --- select the expansion slice (Alg.2 L4-7, batched) -------------
+        X = None
+        slices: list[np.ndarray] = []
+        n_sel = 0
+        s_best: int | None = None
+        cap = 1 if strict_ties else max(
+            1, min(batch_target, int((n_vertices - n_core) * batch_frac)))
+        while n_sel < cap:
+            if s_best is not None and not strict_ties:
+                nxt = bq.peek_score()
+                if nxt is None or nxt > s_best + window_q:
+                    break              # next bucket too far from the best
+            popped = bq.pop_bucket()
+            if popped is None:
+                break
+            s, entries = popped
+            valid = entries[fr[entries] & (qscore[entries] == s)]
+            if len(valid) == 0:
+                continue
+            if s_best is None:
+                s_best = s
+            if strict_ties:
+                x = int(valid.min())
+                rest = valid[valid != x]
+                if len(rest):
+                    bq.push(np.full(len(rest), s, dtype=np.int64), rest)
+                valid = np.array([x], dtype=np.int64)
+            elif n_sel + len(valid) > cap:
+                # partial drain: hub tie-buckets can dwarf the frontier
+                # cap; admit lowest vertex ids, requeue the rest at s
+                valid = np.unique(valid)
+                take, rest = valid[:cap - n_sel], valid[cap - n_sel:]
+                bq.push(np.full(len(rest), s, dtype=np.int64), rest)
+                valid = take
+            slices.append(valid)
+            n_sel += len(valid)
+        if n_sel:
+            X = np.unique(np.concatenate(slices)) if len(slices) > 1 \
+                else np.unique(slices[0])
+        if X is None:
+            if strict_ties:
+                x = _vertex_selection(st, in_s)
+            else:
+                # vectorized seed scan: exact min (rem_deg, v); avoids
+                # materializing the shared lazy heap on the fast path
+                d = np.where((rem_deg > 0) & (in_s == 0), rem_deg,
+                             np.iinfo(np.int64).max)
+                x = int(d.argmin())
+                if d[x] == np.iinfo(np.int64).max:
+                    x = -1
+            if x == -1:
+                break                      # nothing expandable remains
+            X = np.array([x], dtype=np.int64)
+            batch_join(X)
+            if n_edges >= target:
+                in_c[X] = 1
+                fr[X] = False
+                n_core += 1
+                break
+        # --- AllocEdges over the whole slice (Alg.3, batched) -------------
+        in_c[X] = 1
+        fr[X] = False
+        n_core += len(X)
+        nbs, ess, _, _ = gather_adj(X)
+        open_nb = nbs[(epoch[ess] == -1) & (in_s[nbs] == 0)]
+        if len(open_nb):
+            # first-occurrence dedup keeps the heap engine's join order
+            _, first = np.unique(open_nb, return_index=True)
+            batch_join(open_nb[np.sort(first)])
+
+    # B ← B ∪ (S \ C); plus core vertices that still have remaining edges
+    # (they will replicate into later partitions).
+    touched = np.flatnonzero(in_s)
+    in_border[touched[in_c[touched] == 0]] = 1
+    core = touched[in_c[touched] == 1]
+    in_border[core[rem_deg[core] > 0]] = 1
+    edge_list = (np.concatenate(chunks).astype(np.int64) if chunks
+                 else np.zeros(0, dtype=np.int64))
+    if record_order is not None:
+        record_order.extend(edge_list.tolist())
+    return edge_list
+
+
 def run_expansion(
     g: Graph,
     deltas: np.ndarray,
@@ -199,6 +598,8 @@ def run_expansion(
     m_edge: float = 2.0,
     order: str = "asc_capacity",
     state: ExpansionState | None = None,
+    engine: str = "heap",
+    **engine_kw,
 ) -> tuple[np.ndarray, list[list[int]]]:
     """Run Algorithm 2 for every machine; returns (assign, per-part order).
 
@@ -206,6 +607,7 @@ def run_expansion(
     memory guard (callers must repair; WindGP's driver does).
     ``order`` controls the machine visit order; ascending capacity keeps the
     big-capacity machines for last so they absorb the irregular tail.
+    ``engine`` picks the expansion implementation (see module docstring).
     """
     p = len(deltas)
     st = state if state is not None else ExpansionState.fresh(g)
@@ -221,7 +623,8 @@ def run_expansion(
         rec: list[int] = []
         expand_partition(
             st, int(i), int(deltas[i]), alpha, beta,
-            memory_limit=lim, m_node=m_node, m_edge=m_edge, record_order=rec)
+            memory_limit=lim, m_node=m_node, m_edge=m_edge, record_order=rec,
+            engine=engine, **engine_kw)
         orders[int(i)] = rec
         if st.unassigned_edges == 0:
             break

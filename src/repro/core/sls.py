@@ -205,8 +205,14 @@ def destroy_repair(obj: IncrementalTC, orders: list[list[int]],
 
 def repartition(obj: IncrementalTC, orders: list[list[int]],
                 deltas: np.ndarray, k: int,
-                alpha: float, beta: float) -> IncrementalTC:
-    """Algorithm 7: re-run expansion over the worst machine + k-1 peers."""
+                alpha: float, beta: float,
+                engine: str = "heap", **engine_kw) -> IncrementalTC:
+    """Algorithm 7: re-run expansion over the worst machine + k-1 peers.
+
+    ``engine`` selects the expansion implementation (heap oracle or the
+    batched bucket-queue engine) — the same switch as ``run_expansion``;
+    ``engine_kw`` passes batched-engine knobs through unchanged.
+    """
     p = obj.cluster.p
     i = int(np.argmax(obj.t_total))
     # n_{i,j}: replica-node overlap with machine i.
@@ -240,7 +246,7 @@ def repartition(obj: IncrementalTC, orders: list[list[int]],
             st, int(j), int(deltas[j]), alpha, beta,
             memory_limit=float(mem[j]),
             m_node=obj.cluster.m_node, m_edge=obj.cluster.m_edge,
-            record_order=rec)
+            record_order=rec, engine=engine, **engine_kw)
         assign[sub_to_global[eids]] = j
         new_orders[j] = [int(x) for x in sub_to_global[eids]]
     # Any leftover edges in the pool: greedy repair below.
@@ -265,7 +271,8 @@ def sls(g: Graph, assign: np.ndarray, cluster: Cluster,
         orders: list[list[int]], deltas: np.ndarray, *,
         t0: int = 8, n0: int = 5, gamma: float = 0.9, theta: float = 0.01,
         k: int = 3, alpha: float = 0.3, beta: float = 0.3,
-        seed: int = 0) -> tuple[np.ndarray, float]:
+        seed: int = 0, engine: str = "heap",
+        **engine_kw) -> tuple[np.ndarray, float]:
     """Algorithm 4: the SLS driver.  Returns (best assignment, best TC)."""
     rng = np.random.default_rng(seed)
     obj = IncrementalTC.build(g, assign, cluster)
@@ -280,7 +287,8 @@ def sls(g: Graph, assign: np.ndarray, cluster: Cluster,
         if obj.tc < best_tc - 1e-9:
             best_assign, best_tc = obj.assign.copy(), obj.tc
         if n > n0:
-            obj = repartition(obj, orders, deltas, k, alpha, beta)
+            obj = repartition(obj, orders, deltas, k, alpha, beta,
+                              engine=engine, **engine_kw)
             if obj.tc < best_tc - 1e-9:
                 best_assign, best_tc = obj.assign.copy(), obj.tc
             n = 0

@@ -7,6 +7,17 @@ The three phases correspond to the paper's Figure 4.  Ablation levels:
 * ``windgp*``  : + heterogeneous capacities (Alg. 1), NE-style expansion
 * ``windgp+``  : + best-first search (α, β)             [no post-processing]
 * ``windgp``   : + subgraph-local search                [the full method]
+
+Expansion engines (the ``engine=`` switch, threaded through both the
+expansion phase and SLS's re-partition operator):
+
+* ``engine="batched"`` (default): the monotone bucket-queue engine —
+  quantized Eq. 5 scores, whole frontier slices admitted per step with
+  vectorized AllocEdges (≥5× faster partitioning at matching TC; see
+  ``core/expand.py``).  Extra knobs (``scale``, ``batch_frac``,
+  ``batch_window``, ``strict_ties``) pass through ``**engine_kw``.
+* ``engine="heap"``: the scalar lazy-min-heap reference oracle — exactly
+  the paper's Algorithms 2-3; keep for equivalence checks and debugging.
 """
 from __future__ import annotations
 
@@ -67,9 +78,12 @@ def windgp(
     k: int = 3,
     level: str = "windgp",
     seed: int = 0,
+    engine: str = "batched",
+    **engine_kw,
 ) -> WindGPResult:
     """Run WindGP (or one of its ablations) and evaluate the TC metric."""
     assert level in ("windgp-", "windgp*", "windgp+", "windgp")
+    assert engine in exp.ENGINES, engine
     t_start = time.perf_counter()
     phases = {}
 
@@ -104,7 +118,8 @@ def windgp(
         a, b = alpha, beta
     assign, orders = exp.run_expansion(
         g, deltas, a, b, memories=cluster.memory(),
-        m_node=cluster.m_node, m_edge=cluster.m_edge)
+        m_node=cluster.m_node, m_edge=cluster.m_edge,
+        engine=engine, **engine_kw)
     assign = _repair_unassigned(g, assign, cluster, orders)
     phases["expand"] = time.perf_counter() - t0_
 
@@ -113,7 +128,8 @@ def windgp(
     if level == "windgp":
         assign, _ = sls_mod.sls(
             g, assign, cluster, orders, deltas, t0=t0, n0=n0,
-            gamma=gamma, theta=theta, k=k, alpha=alpha, beta=beta, seed=seed)
+            gamma=gamma, theta=theta, k=k, alpha=alpha, beta=beta, seed=seed,
+            engine=engine, **engine_kw)
     phases["sls"] = time.perf_counter() - t0_
 
     stats = evaluate(g, assign, cluster)

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from ..compat import peak_memory_bytes
 from ..configs import ARCHS, SHAPES, cells, get_config
 from ..models import decode_step, forward, init_cache, init_params
 from ..sharding import (cache_specs, input_specs_for, logical_batch_spec,
@@ -227,7 +228,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
         "bytes_hlo_body_once": float(cost.get("bytes accessed", -1)),
         "argument_size_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
         "output_size_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
-        "peak_bytes_per_device": int(getattr(mem, "peak_memory_in_bytes", 0)),
+        "peak_bytes_per_device": peak_memory_bytes(mem),
         "collectives": coll,
     }
     return rec

@@ -17,6 +17,7 @@ import sys
 
 import numpy as np
 
+from ..compat import peak_memory_bytes
 from ..configs import ARCHS, SHAPES, get_config
 from . import dryrun
 from .mesh import make_production_mesh
@@ -71,7 +72,7 @@ def run_variant(arch: str, shape: str, overrides: dict,
         "mesh": "pod2x16x16" if multi_pod else "pod16x16",
         "devices": int(np.prod(list(mesh.shape.values()))),
         "collectives": coll,
-        "peak_bytes_per_device": int(getattr(mem, "peak_memory_in_bytes", 0)),
+        "peak_bytes_per_device": peak_memory_bytes(mem),
         "flops_hlo_body_once": -1,
     }
     out = roofline.analyze(rec)

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from ..compat import shard_map
 from .config import ModelConfig
 
 
@@ -94,7 +95,7 @@ def moe_ffn_ep(cfg: ModelConfig, params, x, mesh: Mesh,
         y = _combine_local(n_loc, d, back, book)
         return y.reshape(xs.shape)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         body, mesh=mesh,
         in_specs=(P(), P("model", None, None), P("model", None, None),
                   P("model", None, None), P("data", "model", None)),

@@ -49,17 +49,20 @@ def logical_batch_spec(mesh: Mesh, batch: int) -> P:
 # ---------------------------------------------------------------------------
 
 # name -> ordered dim preferences for the 'model' axis, by array *suffix*
-# shape (ignoring the stacked n_super leading dim inside blocks).
+# shape: prefs index the UNSTACKED layout (the stacked n_super leading dim
+# inside blocks is accounted for by the ``offset`` shift in _spec_for).
 _RULES = {
     # heads first, then the contracting d_model; NEVER head_dim — rope
     # slices it, and hd-sharding triggered a per-layer permute storm
     # (§Perf iteration log).
-    "wq": (2, 1), "wk": (2, 1), "wv": (2, 1), "wo": (1, 3),
-    "w_gate": (-1, 1), "w_up": (-1, 1), "w_down": (1, -1),
+    "wq": (1, 0), "wk": (1, 0), "wv": (1, 0),   # (d_model, heads, head_dim)
+    "wo": (0, 2),                               # (heads, head_dim, d_model)
+    "w_gate": (-1, 0), "w_up": (-1, 0),         # (d_model, d_ff)
+    "w_down": (0, -1),                          # (d_ff, d_model)
     "router": (-1,),
-    "in_proj": (2, 1), "out_proj": (1, 2), "conv_w": (), "conv_b": (),
-    "w_dkv": (2,), "w_uk": (2, 1), "w_uv": (2, 1), "w_kr": (),
-    "w_dq": (2,), "w_uq": (2, 1),
+    "in_proj": (1, 0), "out_proj": (0, 1), "conv_w": (), "conv_b": (),
+    "w_dkv": (1,), "w_uk": (1, 0), "w_uv": (1, 0), "w_kr": (),
+    "w_dq": (1,), "w_uq": (1, 0),
     "embed": (0, 1), "unembed": (1, 0),
 }
 _MOE_RULES = {  # TP-within-expert: shard f, tokens never cross devices.

@@ -1,0 +1,125 @@
+"""Hypothesis compat shim: property tests run even without `hypothesis`.
+
+When the real package is installed it is re-exported unchanged.  Otherwise a
+minimal fixed-seed sampler stands in: ``@given(...)`` draws
+``max_examples`` (default 20) pseudo-random examples per test from a
+deterministic PRNG, so CI without the dev extras still exercises the
+property suites (with less coverage and no shrinking).
+
+Only the strategy surface this repo uses is implemented: ``integers``,
+``floats``, ``booleans``, ``sampled_from``, ``lists``, ``tuples`` and
+``just``.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import inspect
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _SEED = 0x517D  # fixed: runs are reproducible
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+        def map(self, f):
+            return _Strategy(lambda rng: f(self._draw(rng)))
+
+        def filter(self, pred, _tries=100):
+            def draw(rng):
+                for _ in range(_tries):
+                    x = self._draw(rng)
+                    if pred(x):
+                        return x
+                raise ValueError("filter predicate too strict for shim")
+            return _Strategy(draw)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value=0, max_value=2 ** 31 - 1):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(
+                lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+        @staticmethod
+        def just(value):
+            return _Strategy(lambda rng: value)
+
+        @staticmethod
+        def lists(elems, min_size=0, max_size=10):
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                return [elems.example(rng) for _ in range(n)]
+            return _Strategy(draw)
+
+        @staticmethod
+        def tuples(*strats):
+            return _Strategy(lambda rng: tuple(s.example(rng)
+                                               for s in strats))
+
+    strategies = _Strategies()
+
+    def settings(max_examples=20, **_kw):
+        """Records max_examples on the test; other knobs are ignored."""
+        def deco(fn):
+            inner = getattr(fn, "__wrapped_by_given__", None)
+            if inner is not None:
+                inner.max_examples = max_examples
+            else:
+                fn.__shim_max_examples__ = max_examples
+            return fn
+        return deco
+
+    class _GivenState:
+        def __init__(self):
+            self.max_examples = None
+
+    def given(*strats, **kw_strats):
+        state = _GivenState()
+
+        def deco(fn):
+            default = getattr(fn, "__shim_max_examples__", 20)
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                rng = random.Random(f"{_SEED}:{fn.__qualname__}")
+                n = state.max_examples or default
+                for i in range(n):
+                    ex_args = tuple(s.example(rng) for s in strats)
+                    ex_kw = {k: s.example(rng) for k, s in kw_strats.items()}
+                    try:
+                        fn(*args, *ex_args, **kwargs, **ex_kw)
+                    except Exception as e:  # noqa: BLE001 - re-raise w/ context
+                        raise AssertionError(
+                            f"shim falsifying example #{i}: "
+                            f"args={ex_args} kwargs={ex_kw}") from e
+            # pytest reads the signature to collect fixtures: hide the
+            # example-supplied parameters (and functools' __wrapped__).
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())
+            keep = len(params) - len(strats) - len(kw_strats)
+            wrapper.__signature__ = sig.replace(parameters=params[:keep])
+            del wrapper.__wrapped__
+            wrapper.__wrapped_by_given__ = state
+            return wrapper
+        return deco

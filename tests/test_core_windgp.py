@@ -1,7 +1,7 @@
 """Unit + property tests for the WindGP core (paper Algorithms 1-7)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, strategies as st
 
 from repro.core import (Cluster, Machine, capacities, evaluate,
                         exact_capacity_relaxed, from_edge_list,

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.compat import peak_memory_bytes
 from repro.configs import get_reduced, SHAPES
 from repro.launch import dryrun
 from repro.models import init_params
@@ -40,7 +41,7 @@ for arch in %(archs)s:
         with mesh:
             compiled = fn.lower(*args).compile()
             mem = compiled.memory_analysis()
-        results[f"{arch}/{shape}"] = int(mem.peak_memory_in_bytes)
+        results[f"{arch}/{shape}"] = peak_memory_bytes(mem)
 print("RESULTS:" + json.dumps(results))
 """
 

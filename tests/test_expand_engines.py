@@ -1,0 +1,201 @@
+"""Expansion-core properties + heap↔batched engine equivalence.
+
+Runs under real hypothesis or the fixed-seed shim in ``tests/_hyp.py``.
+"""
+import numpy as np
+import pytest
+from _hyp import given, settings, strategies as st
+
+from repro.core import (Cluster, Machine, capacities, evaluate,
+                        from_edge_list, scaled_paper_cluster, windgp)
+from repro.core import expand as exp_mod
+from repro.data import rmat
+
+# α, β values whose quantized coefficients are exact at QUANT_SCALE, so
+# the integer bucket ordering matches the float heap ordering bit for bit.
+EXACT_AB = [0.0, 0.25, 0.5]
+
+
+def random_graph(rng, v_max=40):
+    V = int(rng.integers(6, v_max))
+    E = int(rng.integers(V, V * 4))
+    return from_edge_list(rng.integers(0, V, size=(E, 2)), num_vertices=V)
+
+
+def paper_example():
+    # Figure 2 / Section 2.1 running example: a-b-c, d-e-f, c-f
+    return from_edge_list(np.array(
+        [[0, 1], [1, 2], [3, 4], [4, 5], [2, 5]]), num_vertices=6)
+
+
+def paper_cluster():
+    return Cluster(machines=(
+        Machine(7, 0, 1, 1), Machine(7, 0, 2, 2), Machine(5, 0, 1, 1)),
+        m_node=1.0, m_edge=2.0)
+
+
+class TestExpansionProperties:
+    @given(st.integers(0, 2 ** 31), st.integers(1, 4),
+           st.sampled_from(exp_mod.ENGINES))
+    @settings(max_examples=20, deadline=None)
+    def test_every_edge_assigned_exactly_once(self, seed, p, engine):
+        rng = np.random.default_rng(seed)
+        g = random_graph(rng)
+        if g.num_edges == 0:
+            return
+        deltas = np.full(p, g.num_edges // p + 1)
+        assign, orders = exp_mod.run_expansion(g, deltas, 0.3, 0.3,
+                                               engine=engine)
+        # no memory guard + Σδ ≥ |E|: everything places, exactly once
+        assert (assign >= 0).all()
+        flat = [e for o in orders for e in o]
+        assert len(flat) == g.num_edges
+        assert len(set(flat)) == g.num_edges
+        for i, o in enumerate(orders):
+            assert np.all(assign[np.asarray(o, dtype=int)] == i)
+
+    @given(st.integers(0, 2 ** 31), st.sampled_from(exp_mod.ENGINES))
+    @settings(max_examples=20, deadline=None)
+    def test_delta_respected(self, seed, engine):
+        rng = np.random.default_rng(seed)
+        g = random_graph(rng)
+        if g.num_edges < 4:
+            return
+        p = 3
+        deltas = rng.integers(1, max(2, g.num_edges // 2), size=p)
+        assign, _ = exp_mod.run_expansion(g, deltas, 0.25, 0.25,
+                                          engine=engine)
+        placed = assign >= 0
+        sizes = np.bincount(assign[placed], minlength=p)
+        assert np.all(sizes <= deltas)
+
+    @given(st.integers(0, 2 ** 31))
+    @settings(max_examples=20, deadline=None)
+    def test_memory_guard_batched_never_exceeds(self, seed):
+        """The batched engine truncates joins: footprint ≤ limit, always."""
+        rng = np.random.default_rng(seed)
+        g = random_graph(rng)
+        if g.num_edges < 8:
+            return
+        p = 3
+        m_node, m_edge = 1.0, 2.0
+        memories = rng.integers(
+            int(0.3 * m_edge * g.num_edges),
+            int(1.2 * m_edge * g.num_edges), size=p).astype(float)
+        deltas = np.full(p, g.num_edges)
+        assign, _ = exp_mod.run_expansion(
+            g, deltas, 0.25, 0.25, memories=memories,
+            m_node=m_node, m_edge=m_edge, engine="batched")
+        for i in range(p):
+            mask = assign == i
+            e_i = int(mask.sum())
+            v_i = len(np.unique(g.edges[mask])) if e_i else 0
+            assert m_node * v_i + m_edge * e_i <= memories[i] + 1e-6, \
+                (i, v_i, e_i, memories[i])
+
+    @given(st.integers(0, 2 ** 31), st.sampled_from(exp_mod.ENGINES))
+    @settings(max_examples=15, deadline=None)
+    def test_border_contains_every_replicated_vertex(self, seed, engine):
+        """B must cover every vertex whose edges span ≥ 2 partitions."""
+        rng = np.random.default_rng(seed)
+        g = random_graph(rng)
+        if g.num_edges < 4:
+            return
+        p = 3
+        deltas = np.full(p, g.num_edges // p + 1)
+        st_ = exp_mod.ExpansionState.fresh(g)
+        exp_mod.run_expansion(g, deltas, 0.25, 0.25, engine=engine,
+                              state=st_)
+        assign = st_.epoch
+        holders = np.zeros((p, g.num_vertices), dtype=bool)
+        for i in range(p):
+            vs = np.unique(g.edges[assign == i])
+            holders[i, vs.astype(int)] = True
+        replicated = holders.sum(axis=0) >= 2
+        assert np.all(st_.in_border[replicated] == 1)
+
+
+class TestEngineEquivalence:
+    @given(st.integers(0, 2 ** 31), st.integers(1, 4),
+           st.sampled_from(EXACT_AB), st.sampled_from(EXACT_AB))
+    @settings(max_examples=25, deadline=None)
+    def test_strict_batched_matches_heap_exactly(self, seed, p, a, b):
+        """strict_ties + exact quantization ⇒ bit-identical to the oracle,
+        including per-partition assignment order."""
+        rng = np.random.default_rng(seed)
+        g = random_graph(rng)
+        if g.num_edges == 0:
+            return
+        deltas = np.full(p, g.num_edges // p + 1)
+        a1, o1 = exp_mod.run_expansion(g, deltas, a, b, engine="heap")
+        a2, o2 = exp_mod.run_expansion(g, deltas, a, b, engine="batched",
+                                       strict_ties=True)
+        np.testing.assert_array_equal(a1, a2)
+        assert o1 == o2
+
+    def test_strict_matches_on_rmat_and_uneven_deltas(self):
+        g = rmat(9, seed=3)
+        deltas = np.array([g.num_edges // 5, g.num_edges // 3,
+                           g.num_edges], dtype=np.int64)
+        a1, o1 = exp_mod.run_expansion(g, deltas, 0.25, 0.5, engine="heap")
+        a2, o2 = exp_mod.run_expansion(g, deltas, 0.25, 0.5,
+                                       engine="batched", strict_ties=True)
+        np.testing.assert_array_equal(a1, a2)
+        assert o1 == o2
+
+    def test_fast_batched_tc_close_on_rmat10(self):
+        """Default (fast) batched engine: TC within 2% of the heap oracle
+        in expectation over seeds, never beyond 8% on any instance."""
+        gaps = []
+        for seed in range(6):
+            g = rmat(10, seed=seed)
+            cl = scaled_paper_cluster(2, 4, g.num_edges)
+            th = windgp(g, cl, level="windgp+", engine="heap")
+            tb = windgp(g, cl, level="windgp+", engine="batched")
+            gap = (tb.stats.tc - th.stats.tc) / th.stats.tc
+            gaps.append(gap)
+            assert abs(gap) < 0.08, (seed, gap)
+        assert float(np.mean(gaps)) < 0.02, gaps
+
+
+class TestFigure2Golden:
+    """Pin the paper's Figure 2 / Section 2.1 TC numbers."""
+
+    def test_reference_partitions_evaluate_to_paper_numbers(self):
+        g = paper_example()
+        cl = paper_cluster()
+        eid = {tuple(e): i for i, e in enumerate(map(tuple, g.edges))}
+        good = np.zeros(5, dtype=np.int32)
+        good[eid[(0, 1)]] = 0
+        good[eid[(1, 2)]] = 0
+        good[eid[(3, 4)]] = 1
+        good[eid[(4, 5)]] = 1
+        good[eid[(2, 5)]] = 2
+        s = evaluate(g, good, cl)
+        assert s.t_cal.tolist() == [2, 4, 1]
+        assert s.t_com.tolist() == [2, 3, 5]
+        assert s.tc == 7
+        bad = np.zeros(5, dtype=np.int32)
+        bad[eid[(0, 1)]] = 0
+        bad[eid[(1, 2)]] = 1
+        bad[eid[(2, 5)]] = 1
+        bad[eid[(3, 4)]] = 2
+        bad[eid[(4, 5)]] = 2
+        assert evaluate(g, bad, cl).tc == 10
+
+    def test_batched_engine_reaches_paper_optimum(self):
+        """The batched driver lands exactly on Figure 2's best TC = 7."""
+        r = windgp(paper_example(), paper_cluster(), engine="batched")
+        assert r.stats.tc == 7.0
+
+    def test_heap_engine_pinned(self):
+        """Oracle regression pin on the same instance (currently TC = 10;
+        any drift means the reference engine changed behavior)."""
+        r = windgp(paper_example(), paper_cluster(), engine="heap")
+        assert r.stats.tc == 10.0
+
+
+def test_unknown_engine_rejected():
+    g = paper_example()
+    with pytest.raises(ValueError):
+        exp_mod.run_expansion(g, np.array([5]), 0.3, 0.3, engine="nope")

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, strategies as st
 
 from repro.data import rmat, road_mesh
 from repro.kernels.bsr_spmv import (bsr_from_edges, bsr_spmv, bsr_spmv_ref,

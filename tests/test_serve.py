@@ -4,6 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.compat import abstract_mesh
 from repro.configs import get_reduced
 from repro.models import decode_step, forward, init_cache, init_params
 from repro.serve import generate
@@ -71,6 +72,6 @@ class TestShardingSpecs:
 
     def test_batch_spec_handles_batch_one(self):
         """B=1 on a real DP axis must replicate (long_500k decode)."""
-        mesh = jax.sharding.AbstractMesh((2, 16), ("data", "model"))
+        mesh = abstract_mesh((2, 16), ("data", "model"))
         assert logical_batch_spec(mesh, 1) == jax.sharding.PartitionSpec(None)
         assert tuple(logical_batch_spec(mesh, 8))[0] in ("data", ("data",))
