@@ -11,6 +11,8 @@ from __future__ import annotations
 import sys
 import time
 
+import numpy as np
+
 from repro.core import Cluster, Machine, scaled_paper_cluster
 from repro.data import rmat, road_mesh
 
@@ -66,3 +68,29 @@ def timed(fn, *args, **kwargs):
     t0 = time.perf_counter()
     out = fn(*args, **kwargs)
     return out, time.perf_counter() - t0
+
+
+def repeat_timed(fn, repeats: int, *args, **kwargs):
+    """Run ``fn`` ``repeats`` times; returns (last result, list of seconds).
+
+    Container timing jitter is ±15%, so single-run numbers are not
+    comparable across sessions — report ``median_iqr`` of these instead.
+    """
+    out, times = None, []
+    for _ in range(max(1, repeats)):
+        out, dt = timed(fn, *args, **kwargs)
+        times.append(dt)
+    return out, times
+
+
+def median_iqr(times) -> tuple[float, float]:
+    """(median, interquartile range) of a sample of seconds."""
+    q1, med, q3 = np.percentile(np.asarray(times, dtype=np.float64),
+                                [25.0, 50.0, 75.0])
+    return float(med), float(q3 - q1)
+
+
+def spread_str(times) -> str:
+    """Human-readable ``median±IQR`` tag for CSV ``derived`` columns."""
+    med, iqr = median_iqr(times)
+    return f"median={med:.3f}s iqr={iqr:.3f}s n={len(times)}"

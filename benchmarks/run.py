@@ -8,6 +8,7 @@ graph scales (container default is laptop-scale, see DESIGN.md §7).
 from __future__ import annotations
 
 import argparse
+import inspect
 import time
 
 from . import (ablation, bsp_runtime, compare_tc, partition_time,
@@ -21,6 +22,7 @@ TABLES = {
     "fig14_15": scale_machines.run,   # machine count/types
     "tab11": partition_time.run,      # partitioning time
     "engines": partition_time.run_engine_compare,  # heap vs batched expansion
+    "sls": partition_time.run_sls_compare,  # scalar vs vectorized SLS repair
     "tab1": tc_vs_runtime.run,        # TC ∝ runtime
     "tab15_16": bsp_runtime.run,      # distributed algorithm runtimes
 }
@@ -31,6 +33,9 @@ def main(argv=None) -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated table keys")
+    ap.add_argument("--repeats", type=int, default=None,
+                    help="median-of-N repeats for the timing tables that "
+                         "support it (spread printed as IQR)")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else set(TABLES)
     t0 = time.perf_counter()
@@ -39,7 +44,11 @@ def main(argv=None) -> None:
         if key not in only:
             continue
         t = time.perf_counter()
-        fn(quick=not args.full)
+        kw = {"quick": not args.full}
+        if (args.repeats is not None
+                and "repeats" in inspect.signature(fn).parameters):
+            kw["repeats"] = args.repeats
+        fn(**kw)
         print(f"_meta/{key}_wall,{(time.perf_counter()-t)*1e6:.0f},done",
               flush=True)
     print(f"_meta/total_wall,{(time.perf_counter()-t0)*1e6:.0f},done")

@@ -55,22 +55,24 @@ class PartitionRuntime:
         if edge_weights is None:
             edge_weights = np.ones(g.num_edges, dtype=np.float32)
 
+        # Vertex membership / replica sets from the shared incidence counts
+        # (same accounting the partitioner's incremental layer maintains).
+        from ..core.partition_state import edge_incidence_counts
+        member = edge_incidence_counts(g, assign, p) > 0     # (p, V)
+
         locals_, edges_, weights_ = [], [], []
+        lut = np.full(g.num_vertices, -1, dtype=np.int64)
         for i in range(p):
             eids = np.flatnonzero(assign == i)
-            e = g.edges[eids]
-            verts = np.unique(e)
-            lut = np.full(g.num_vertices, -1, dtype=np.int64)
+            verts = np.flatnonzero(member[i])   # sorted endpoints of E_i
             lut[verts] = np.arange(len(verts))
             locals_.append(verts)
-            edges_.append(lut[e])
+            edges_.append(lut[g.edges[eids]])
             weights_.append(edge_weights[eids])
 
         vmax = max(1, max(len(v) for v in locals_))
         emax = max(1, max(len(e) for e in edges_))
-        member_count = np.zeros(g.num_vertices, dtype=np.int32)
-        for verts in locals_:
-            member_count[verts] += 1
+        member_count = member.sum(axis=0).astype(np.int32)
         rep_vertices = np.flatnonzero(member_count >= 2)
         rep_index = np.full(g.num_vertices, -1, dtype=np.int32)
         rep_index[rep_vertices] = np.arange(len(rep_vertices), dtype=np.int32)

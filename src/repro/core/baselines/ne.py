@@ -10,6 +10,8 @@ from .. import expand as exp_mod
 from ..capacity import _mem_cap
 from ..graph import Graph
 from ..machines import Cluster
+from ..partition_state import PartitionState
+from ..sls import repair_edges
 
 
 def ne(g: Graph, cluster: Cluster, seed: int = 0,
@@ -28,12 +30,11 @@ def ne(g: Graph, cluster: Cluster, seed: int = 0,
     assign, _ = exp_mod.run_expansion(
         g, deltas, 0.0, 0.0, memories=cluster.memory(),
         m_node=cluster.m_node, m_edge=cluster.m_edge, order="natural")
-    # place stragglers (memory-guard leftovers) in the emptiest machine
+    # place stragglers (memory-guard leftovers) through the shared
+    # incremental layer: one vectorized greedy-repair wave set, memory-aware
     left = np.flatnonzero(assign < 0)
     if len(left):
-        counts = np.bincount(assign[assign >= 0], minlength=p)
-        for e in left:
-            i = int(np.argmin(counts / np.maximum(1, caps)))
-            assign[e] = i
-            counts[i] += 1
+        obj = PartitionState.build(g, assign, cluster)
+        repair_edges(obj, left, [[] for _ in range(p)])
+        assign = obj.assign
     return assign

@@ -3,7 +3,11 @@
 All receive the same heterogeneous-memory adaptation the paper applies to
 its baselines: a per-machine edge-capacity cap derived from M_i (identical
 to the one WindGP's preprocessing uses), with overflow spilling to the
-best-scoring machine that still has room.
+best-scoring machine that still has room.  The hash-family overflow pass
+(hash, DBH) runs through the shared incremental layer
+(``core/partition_state.py``): overflow edges beyond each machine's cap
+are repaired in vectorized greedy waves instead of a per-edge Python scan
+over its own bincounts.
 """
 from __future__ import annotations
 
@@ -12,6 +16,8 @@ import numpy as np
 from ..capacity import _mem_cap
 from ..graph import Graph
 from ..machines import Cluster
+from ..partition_state import PartitionState, cumcount
+from ..sls import repair_edges
 
 
 def _caps(cluster: Cluster, g: Graph) -> np.ndarray:
@@ -27,46 +33,40 @@ def _spill(scores: np.ndarray, counts: np.ndarray, caps: np.ndarray) -> int:
     return int(np.argmax(masked))
 
 
+def _cap_spill(g: Graph, cluster: Cluster, assign: np.ndarray,
+               caps: np.ndarray) -> np.ndarray:
+    """Deterministic overflow pass for the hash-family partitioners.
+
+    Each machine keeps its first ``caps[i]`` edges in stream order; the
+    overflow is re-placed by the shared vectorized BalancedGreedyRepair
+    (memory-aware, TC-accounted) instead of the old per-edge count scan.
+    """
+    if np.all(np.bincount(assign, minlength=cluster.p) <= caps):
+        return assign
+    over = cumcount(assign) >= caps[assign]
+    assign = assign.copy()
+    assign[over] = -1
+    obj = PartitionState.build(g, assign, cluster)
+    repair_edges(obj, np.flatnonzero(over), [[] for _ in range(cluster.p)])
+    return obj.assign
+
+
 def random_hash(g: Graph, cluster: Cluster, seed: int = 0) -> np.ndarray:
     """f(e) = hash(e) % p with memory spill."""
     p = cluster.p
-    caps = _caps(cluster, g)
     h = (g.edges[:, 0].astype(np.uint64) * np.uint64(2654435761)
          ^ g.edges[:, 1].astype(np.uint64) * np.uint64(40503)) % np.uint64(p)
-    assign = h.astype(np.int32)
-    counts = np.bincount(assign, minlength=p)
-    if np.all(counts <= caps):
-        return assign
-    # deterministic spill pass
-    counts = np.zeros(p, dtype=np.int64)
-    for e in range(g.num_edges):
-        i = int(assign[e])
-        if counts[i] >= caps[i]:
-            i = _spill(np.zeros(p), counts, caps)
-            assign[e] = i
-        counts[i] += 1
-    return assign
+    return _cap_spill(g, cluster, h.astype(np.int32), _caps(cluster, g))
 
 
 def dbh(g: Graph, cluster: Cluster, seed: int = 0) -> np.ndarray:
     """Degree-Based Hashing [Xie et al. 2014]: hash the low-degree endpoint."""
     p = cluster.p
-    caps = _caps(cluster, g)
     deg = g.degree()
     u, v = g.edges[:, 0], g.edges[:, 1]
     low = np.where(deg[u] <= deg[v], u, v).astype(np.uint64)
     assign = ((low * np.uint64(2654435761)) % np.uint64(p)).astype(np.int32)
-    counts = np.bincount(assign, minlength=p)
-    if np.all(counts <= caps):
-        return assign
-    counts = np.zeros(p, dtype=np.int64)
-    for e in range(g.num_edges):
-        i = int(assign[e])
-        if counts[i] >= caps[i]:
-            i = _spill(np.zeros(p), counts, caps)
-            assign[e] = i
-        counts[i] += 1
-    return assign
+    return _cap_spill(g, cluster, assign, _caps(cluster, g))
 
 
 def powergraph_greedy(g: Graph, cluster: Cluster, seed: int = 0) -> np.ndarray:

@@ -29,13 +29,19 @@ Two engines implement the same expansion:
 * ``engine="batched"`` — the production engine: Eq. 5 scores are quantized
   to integers (``w·QUANT_SCALE`` with exactly-linear integer coefficients,
   so the ordering matches the float heap whenever ``(1+α)·scale`` and
-  ``(α+β)·scale`` are integral), held in a monotone bucket queue (scores
-  only decrease within one partition's expansion), and whole best-score
-  frontier slices are expanded per step with fully vectorized AllocEdges —
-  no per-neighbor Python work.  ``strict_ties=True`` degrades the pop to
-  one vertex per step (min vertex id within the best bucket), which makes
-  the batched engine bit-identical to the heap oracle whenever the
-  quantization is exact — the equivalence tests rely on this.
+  ``(α+β)·scale`` are integral) and kept *fresh* in a per-vertex array;
+  each step scans the live frontier (a duplicate-tolerant id buffer with
+  geometric compaction — see ``_FrontierBuffer``) and expands the whole
+  best-score-window slice with fully vectorized AllocEdges — no
+  per-neighbor Python work.  ``strict_ties=True`` degrades the slice to
+  one vertex per step (min id at the best score), which makes the batched
+  engine bit-identical to the heap oracle whenever the quantization is
+  exact — the equivalence tests rely on this.  Adjacency access is
+  degree-split (``hub_split``/``hub_degree``): a row gathered alone is a
+  zero-copy CSR view, and hub-dominated multi-row gathers copy dense
+  contiguous row slices while the tail keeps the ragged flat-index
+  gather — identical output, far less index arithmetic on power-law
+  graphs.
 
 Set membership is uint8 bitmaps (the paper's bitmap optimization) in both.
 """
@@ -47,6 +53,7 @@ import heapq
 import numpy as np
 
 from .graph import Graph
+from .partition_state import WorkingCSR
 
 #: Integer score quantization for the batched engine: q(v) =
 #: round((1+α)·S)·ext(v) − round((α+β·I_B(v))·S)·deg0(v).  64 keeps the
@@ -70,12 +77,9 @@ class ExpansionState:
     seed_heap: list | None        # lazy (rem_deg, v) heap for vertexSelection
     unassigned_edges: int
     # Working CSR for the batched engine: the live (unassigned) slice of
-    # g's adjacency, recompacted geometrically as partitions consume edges.
-    # Dropping dead entries preserves adjacency order, so it changes no
-    # engine decision — only how much dead data each AllocEdges gathers.
-    w_indptr: np.ndarray | None = None
-    w_indices: np.ndarray | None = None
-    w_eids: np.ndarray | None = None
+    # g's adjacency, recompacted geometrically as partitions consume edges
+    # (shared compaction machinery: ``partition_state.WorkingCSR``).
+    wcsr: WorkingCSR | None = None
 
     @classmethod
     def fresh(cls, g: Graph) -> "ExpansionState":
@@ -92,19 +96,11 @@ class ExpansionState:
     def working_csr(self, compact_below: float = 0.75):
         """(indptr, indices, eids) of the live adjacency, recompacting when
         fewer than ``compact_below`` of the stored entries are still live."""
-        if self.w_indptr is None:
-            self.w_indptr = self.g.indptr
-            self.w_indices = self.g.indices
-            self.w_eids = self.g.edge_ids
-        stored = len(self.w_eids)
-        if stored and 2 * self.unassigned_edges < compact_below * stored:
-            live = self.epoch[self.w_eids] == -1
-            cum = np.concatenate(
-                [np.zeros(1, dtype=np.int64), np.cumsum(live)])
-            self.w_indptr = cum[self.w_indptr]
-            self.w_indices = self.w_indices[live]
-            self.w_eids = self.w_eids[live]
-        return self.w_indptr, self.w_indices, self.w_eids
+        if self.wcsr is None:
+            self.wcsr = WorkingCSR.from_graph(self.g)
+        return self.wcsr.view(lambda: self.epoch == -1,
+                              self.unassigned_edges,
+                              compact_below=compact_below)
 
     @property
     def assigned(self) -> np.ndarray:
@@ -275,57 +271,44 @@ def _expand_partition_heap(
 # batched engine
 # ---------------------------------------------------------------------------
 
-class _BucketQueue:
-    """Monotone integer bucket queue over quantized w(v).
+class _FrontierBuffer:
+    """Duplicate-tolerant id buffer over the live frontier (S \\ C).
 
-    Scores only decrease during one partition's expansion (ext(v) is
-    non-increasing, deg0 and I_B are frozen), so entries are append-only
-    arrays per distinct score with lazy invalidation at pop time (an entry
-    is live iff its vertex is frontier and its score equals the vertex's
-    current quantized score).  A small heap over the *distinct* score values
-    finds the next non-empty bucket; its size is the number of distinct
-    scores in flight, not the number of entries.
+    The predecessor of this structure was a monotone bucket queue keyed by
+    exact quantized score; on skewed graphs the scores are near-unique, so
+    every refresh opened ~hundreds of distinct buckets (one dict + heap op
+    each) and the queue cost dominated the engine.  This buffer stores
+    vertex *ids only* — scores are always read fresh from ``qscore`` at
+    scan time, so there is no score staleness at all — and tolerates
+    duplicates and departed vertices, compacting geometrically: when the
+    live entries fall under half the buffer, or the buffer outgrows twice
+    the true frontier, it collapses to ``unique(live)``.  A best-first
+    admission step is then one vectorized scan of the live entries.
     """
 
-    __slots__ = ("buckets", "score_heap")
+    __slots__ = ("buf", "pend")
 
     def __init__(self):
-        self.buckets: dict[int, list[np.ndarray]] = {}
-        self.score_heap: list[int] = []
+        self.buf = np.zeros(0, dtype=np.int64)
+        self.pend: list[np.ndarray] = []
 
-    def push(self, scores: np.ndarray, verts: np.ndarray) -> None:
-        """Insert verts (already scored); both arrays are parallel."""
-        order = np.argsort(scores)
-        sc, vs = scores[order], verts[order]
-        uniq, starts = np.unique(sc, return_index=True)
-        bounds = np.append(starts[1:], len(sc))
-        for val, s0, s1 in zip(uniq.tolist(), starts.tolist(),
-                               bounds.tolist()):
-            lst = self.buckets.get(val)
-            if lst is None:
-                self.buckets[val] = [vs[s0:s1]]
-                heapq.heappush(self.score_heap, val)
-            else:
-                lst.append(vs[s0:s1])
+    def push(self, verts: np.ndarray) -> None:
+        self.pend.append(verts)
 
-    def peek_score(self) -> int | None:
-        """Best score with a (possibly stale) non-empty bucket, or None."""
-        while self.score_heap:
-            s = self.score_heap[0]
-            if self.buckets.get(s):
-                return s
-            heapq.heappop(self.score_heap)
-            self.buckets.pop(s, None)
-        return None
-
-    def pop_bucket(self) -> tuple[int, np.ndarray] | None:
-        """Remove and return (score, entries) of the best bucket, or None."""
-        s = self.peek_score()
-        if s is None:
-            return None
-        heapq.heappop(self.score_heap)
-        lst = self.buckets.pop(s)
-        return s, (lst[0] if len(lst) == 1 else np.concatenate(lst))
+    def live(self, fr: np.ndarray, frontier_size: int) -> np.ndarray:
+        """Current live entries (duplicates possible), compacting lazily."""
+        if self.pend:
+            arrs = ([self.buf] if len(self.buf) else []) + self.pend
+            self.buf = arrs[0] if len(arrs) == 1 else np.concatenate(arrs)
+            self.pend.clear()
+        if not len(self.buf):
+            return self.buf
+        live = self.buf[fr[self.buf]]
+        if (2 * len(live) < len(self.buf)
+                or len(self.buf) > 2 * frontier_size + 64):
+            self.buf = np.unique(live).astype(np.int64, copy=False)
+            return self.buf
+        return live
 
 
 def expand_partition_batched(
@@ -344,6 +327,8 @@ def expand_partition_batched(
     batch_target: int = 512,
     batch_frac: float = 0.5,
     batch_window: float = 6.0,
+    hub_split: bool = True,
+    hub_degree: int = 1024,
 ) -> np.ndarray:
     """Batched AllocEdges over bucket-queue frontier slices.
 
@@ -360,6 +345,15 @@ def expand_partition_batched(
     wavefronts at all); (3) under ``memory_limit`` the batched engine
     truncates joins so the footprint never exceeds the limit (the heap
     engine only pre-checks and may overshoot within one AllocEdges).
+
+    ``hub_split`` enables the degree-split gather: adjacency rows with
+    ≥ ``hub_degree`` stored entries (hubs) are materialized as dense
+    contiguous row slices — a memcpy, or a zero-copy view when a row is
+    gathered alone — while the tail keeps the ragged flat-index gather;
+    the split path engages only when hub rows dominate the gather, where
+    skipping their per-slot index arithmetic is a guaranteed win.  It is
+    bit-neutral: the assembled output is identical either way (slot order
+    preserved), so the split changes *no* engine decision, only its cost.
     """
     g, V = st.g, st.g.num_vertices
     indptr, indices, eids = st.working_csr()
@@ -380,7 +374,7 @@ def expand_partition_batched(
     coef_d = np.where(in_border != 0, qdtype(cd),
                       qdtype(round(alpha * scale))).astype(qdtype)
     qscore = np.zeros(V, dtype=qdtype)
-    bq = _BucketQueue()
+    fb = _FrontierBuffer()
     rank_buf = np.full(V, -1, dtype=np.int32)   # batch rank scratch
     big = max(64, V // 8)   # ufunc.at beats bincount below this size
 
@@ -396,12 +390,10 @@ def expand_partition_batched(
     n_core = 0
     target = int(delta)
     window_q = int(round(batch_window * scale))
-
     def refresh(front: np.ndarray) -> None:
         """Recompute quantized priorities for S\\C vertices and enqueue."""
-        q = coef_a * ext[front] - coef_d[front] * deg0[front]
-        qscore[front] = q
-        bq.push(q, front)
+        qscore[front] = coef_a * ext[front] - coef_d[front] * deg0[front]
+        fb.push(front)
 
     def gather_adj(verts: np.ndarray):
         """Ragged gather of verts' adjacency slices from the working CSR.
@@ -409,15 +401,48 @@ def expand_partition_batched(
         Returns (nb, es, reps, offs): neighbor / edge-id arrays flattened
         in verts order, the owner rank of each flat slot, and each owner's
         start offset into the flat arrays.
+
+        Degree-split: hub rows (≥ hub_degree entries) are copied as dense
+        contiguous slices, the tail through the flat-index gather; a lone
+        vertex returns zero-copy CSR views.  Output is identical in all
+        paths — only the assembly cost differs.
         """
         starts = indptr[verts]
         counts = indptr[verts + 1] - starts
         total = int(counts.sum())
         offs = np.cumsum(counts) - counts
+        if len(verts) == 1:             # dense row slice, no copy at all
+            s0, s1 = int(starts[0]), int(starts[0] + counts[0])
+            return (indices[s0:s1], eids[s0:s1],
+                    np.zeros(total, dtype=np.int32), offs)
         reps = np.repeat(np.arange(len(verts), dtype=np.int32), counts)
-        flat = np.arange(total, dtype=np.int64) \
-            + np.repeat(starts - offs, counts)
-        return indices[flat], eids[flat], reps, offs
+        hubs = (np.flatnonzero(counts >= hub_degree)
+                if hub_split and total >= 4096
+                else np.zeros(0, dtype=np.int64))
+        # The split pays ~3 index passes on the hub mass against ~1 extra
+        # pass on the tail, so engage it only when hub rows dominate.
+        if len(hubs) == 0 or 2 * int(counts[hubs].sum()) < total:
+            flat = np.arange(total, dtype=np.int64) \
+                + np.repeat(starts - offs, counts)
+            return indices[flat], eids[flat], reps, offs
+        nb = np.empty(total, dtype=indices.dtype)
+        es = np.empty(total, dtype=eids.dtype)
+        tail = np.ones(len(verts), dtype=bool)
+        tail[hubs] = False
+        tc, ts, to = counts[tail], starts[tail], offs[tail]
+        tt = int(tc.sum())
+        if tt:
+            w = np.arange(tt, dtype=np.int64) - np.repeat(
+                np.cumsum(tc) - tc, tc)
+            dest = np.repeat(to, tc) + w
+            src = np.repeat(ts, tc) + w
+            nb[dest] = indices[src]
+            es[dest] = eids[src]
+        for j in hubs.tolist():
+            o, s, c = int(offs[j]), int(starts[j]), int(counts[j])
+            nb[o:o + c] = indices[s:s + c]
+            es[o:o + c] = eids[s:s + c]
+        return nb, es, reps, offs
 
     def batch_join(ys: np.ndarray) -> np.ndarray:
         """Vectorized join_s over an *ordered* batch of non-S vertices.
@@ -505,44 +530,28 @@ def expand_partition_batched(
                 > memory_limit + 1e-9):
             break
         # --- select the expansion slice (Alg.2 L4-7, batched) -------------
+        # One scan of the live frontier (buffer + hub side array): take
+        # every vertex within ``window_q`` of the best current score, in
+        # (score, vertex id) order, capped.  Scores are read fresh from
+        # ``qscore``, so the admitted set equals what draining an exact
+        # best-first queue would admit — there is nothing stale to skip.
         X = None
-        slices: list[np.ndarray] = []
-        n_sel = 0
-        s_best: int | None = None
         cap = 1 if strict_ties else max(
             1, min(batch_target, int((n_vertices - n_core) * batch_frac)))
-        while n_sel < cap:
-            if s_best is not None and not strict_ties:
-                nxt = bq.peek_score()
-                if nxt is None or nxt > s_best + window_q:
-                    break              # next bucket too far from the best
-            popped = bq.pop_bucket()
-            if popped is None:
-                break
-            s, entries = popped
-            valid = entries[fr[entries] & (qscore[entries] == s)]
-            if len(valid) == 0:
-                continue
-            if s_best is None:
-                s_best = s
+        live = fb.live(fr, n_vertices - n_core)
+        if len(live):
+            ql = qscore[live]
+            s_best = int(ql.min())
+            thr = s_best if strict_ties else s_best + window_q
+            cand = np.unique(live[ql <= thr]).astype(np.int64, copy=False)
             if strict_ties:
-                x = int(valid.min())
-                rest = valid[valid != x]
-                if len(rest):
-                    bq.push(np.full(len(rest), s, dtype=np.int64), rest)
-                valid = np.array([x], dtype=np.int64)
-            elif n_sel + len(valid) > cap:
-                # partial drain: hub tie-buckets can dwarf the frontier
-                # cap; admit lowest vertex ids, requeue the rest at s
-                valid = np.unique(valid)
-                take, rest = valid[:cap - n_sel], valid[cap - n_sel:]
-                bq.push(np.full(len(rest), s, dtype=np.int64), rest)
-                valid = take
-            slices.append(valid)
-            n_sel += len(valid)
-        if n_sel:
-            X = np.unique(np.concatenate(slices)) if len(slices) > 1 \
-                else np.unique(slices[0])
+                X = cand[:1]           # all at s_best; sorted ⇒ min id,
+                                       # the heap oracle's tie-break
+            elif len(cand) > cap:
+                order = np.argsort(qscore[cand], kind="stable")
+                X = np.sort(cand[order[:cap]])
+            else:
+                X = cand
         if X is None:
             if strict_ties:
                 x = _vertex_selection(st, in_s)

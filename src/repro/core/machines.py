@@ -130,14 +130,8 @@ class PartitionStats:
 
 def vertex_partition_sets(graph, assign: np.ndarray, p: int):
     """Boolean (p, V) membership: vertex v in V_i iff it has an edge in E_i."""
-    V = graph.num_vertices
-    member = np.zeros((p, V), dtype=bool)
-    e = graph.edges
-    for i in range(p):
-        mask = assign == i
-        member[i, e[mask, 0]] = True
-        member[i, e[mask, 1]] = True
-    return member
+    from .partition_state import edge_incidence_counts
+    return edge_incidence_counts(graph, assign, p) > 0
 
 
 def evaluate(graph, assign: np.ndarray, cluster: Cluster) -> PartitionStats:
@@ -155,16 +149,12 @@ def evaluate(graph, assign: np.ndarray, cluster: Cluster) -> PartitionStats:
     t_cal = c_node * verts_per + c_edge * edges_per
 
     # T_i^com: for every replicated vertex v in V_i and every other machine j
-    # holding v, cost (C_i^com + C_j^com).
+    # holding v, cost (C_i^com + C_j^com) — one masked matmul, shared with
+    # the incremental layer.
+    from .partition_state import t_com_from_membership
     replicas = member.sum(axis=0)                     # (V,) |S(v)|
     com_sum = member.T.astype(np.float64) @ c_com      # (V,) Σ c_com over S(v)
-    # For machine i: sum over v in V_i of [ (|S(v)|-1) * C_i^com + (com_sum(v) - C_i^com) ]
-    t_com = np.zeros(p)
-    for i in range(p):
-        vs = member[i]
-        cnt = replicas[vs] - 1.0               # number of other machines with v
-        others = com_sum[vs] - c_com[i]         # sum_j!=i c_com[j] over S(v)
-        t_com[i] = (cnt * c_com[i] + others).sum()
+    t_com = t_com_from_membership(member, replicas, com_sum, c_com)
 
     rf = replicas[replicas > 0].sum() / max(1, (replicas > 0).sum())
     mem_need = cluster.m_node * verts_per + cluster.m_edge * edges_per

@@ -1,0 +1,378 @@
+"""Unified incremental per-(machine, vertex) accounting for edge partitions.
+
+One state layer shared by every phase that mutates or scores an edge
+assignment — expansion (``core/expand.py``), subgraph-local search
+(``core/sls.py``), the driver's repair pass (``core/windgp.py``), the
+baselines' capacity spill handling, and the BSP runtime packer
+(``bsp/partition_runtime.py``).  Historically the same bookkeeping was
+implemented twice (``ExpansionState`` plus the batched engine's private
+counters, and ``sls.IncrementalTC``); this module is the single home.
+
+Field ↔ paper-term map (Definition 4 / Eq. 3–5):
+
+* ``cnt[i, v]``     — number of partition-i edges incident on v.  ``cnt > 0``
+  is the vertex-membership matrix: v ∈ V_i ⇔ cnt[i, v] > 0 (Definition 3).
+* ``edges_per[i]``  — |E_i|, ``verts_per[i]`` — |V_i|: the two factors of the
+  computation cost  T_i^cal = C_i^node·|V_i| + C_i^edge·|E_i|   (Eq. 3).
+* ``replicas[v]``   — |S(v)|, the number of machines holding a replica of v.
+* ``com_sum[v]``    — Σ_{j ∈ S(v)} C_j^com, the communication mass of v's
+  replica set; together with ``replicas`` it closes the communication cost
+  T_i^com = Σ_{v ∈ V_i} Σ_{j ≠ i, v ∈ V_j} (C_i^com + C_j^com)    (Eq. 4)
+  in O(1) per membership change.
+* ``t_cal``/``t_com`` — the per-machine Eq. 3/Eq. 4 totals; ``tc`` is their
+  max (the TC objective).  ``delta_t_batch`` scores hypothetical edge
+  additions — the repair-side analogue of the expansion score w(v) (Eq. 5):
+  both charge a candidate by the new replicas it would create.
+
+All arrays hold integer-valued float64 (costs are integral in the paper's
+machine quantification), so the batch recount path and the scalar
+incremental path produce bit-identical state — the equivalence tests rely
+on this.
+
+Batch-first API: ``remove_edges``/``add_edges`` apply whole edge sets with
+an exact *wave-local recount* — membership-derived quantities of the
+touched vertex columns are recomputed from ``cnt`` rather than replayed
+edge by edge — and ``delta_t_batch``/``mem_after_batch`` score
+|edges| × |machines| hypothetical placements in one broadcast.  The scalar
+methods survive as the oracle path (and for one-off callers).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING
+
+import numpy as np
+
+if TYPE_CHECKING:  # avoid runtime cycles: machines.py imports the helpers
+    from .graph import Graph
+    from .machines import Cluster
+
+
+# ---------------------------------------------------------------------------
+# membership helpers (shared with machines.evaluate / bsp runtime)
+# ---------------------------------------------------------------------------
+
+def edge_incidence_counts(g: "Graph", assign: np.ndarray, p: int) -> np.ndarray:
+    """(p, V) int32 — partition-i edges incident on v (unassigned skipped)."""
+    cnt = np.zeros((p, g.num_vertices), dtype=np.int32)
+    ok = assign >= 0
+    np.add.at(cnt, (assign[ok], g.edges[ok, 0]), 1)
+    np.add.at(cnt, (assign[ok], g.edges[ok, 1]), 1)
+    return cnt
+
+
+def cumcount(a: np.ndarray) -> np.ndarray:
+    """Occurrence rank of each element among equal values, in array order."""
+    order = np.argsort(a, kind="stable")
+    sa = a[order]
+    fresh = np.concatenate([[True], sa[1:] != sa[:-1]])
+    starts = np.flatnonzero(fresh)
+    sizes = np.diff(np.append(starts, len(sa)))
+    rank_sorted = np.arange(len(sa)) - np.repeat(starts, sizes)
+    out = np.empty(len(a), dtype=np.int64)
+    out[order] = rank_sorted
+    return out
+
+
+def t_com_from_membership(member: np.ndarray, replicas: np.ndarray,
+                          com_sum: np.ndarray, c_com: np.ndarray) -> np.ndarray:
+    """Vectorized Eq. 4:  T_i^com = Σ_{v∈V_i} [(|S(v)|−1)·C_i^com
+    + (com_sum(v) − C_i^com)], as one masked matmul over [com_sum, |S|]."""
+    m = member.astype(np.float64)
+    cols = m @ np.stack([com_sum, replicas.astype(np.float64)], axis=1)
+    return cols[:, 0] + c_com * cols[:, 1] - 2.0 * c_com * m.sum(axis=1)
+
+
+# ---------------------------------------------------------------------------
+# compacting working-CSR view
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class WorkingCSR:
+    """The live slice of a graph's CSR adjacency.
+
+    As edges are consumed (assigned), dead entries accumulate; ``view``
+    recompacts geometrically once fewer than ``compact_below`` of the stored
+    entries are live.  Dropping dead entries preserves adjacency order, so
+    it changes no engine decision — only how much dead data each gather
+    touches.  Shared by the batched expansion engine and PartitionState.
+    """
+
+    indptr: np.ndarray
+    indices: np.ndarray
+    eids: np.ndarray
+
+    @classmethod
+    def from_graph(cls, g: "Graph") -> "WorkingCSR":
+        return cls(indptr=g.indptr, indices=g.indices, eids=g.edge_ids)
+
+    def view(self, edge_live, live_edges: int,
+             compact_below: float = 0.75):
+        """(indptr, indices, eids) of the live adjacency.
+
+        ``edge_live`` is a (E,) bool over canonical edge ids — or a zero-arg
+        callable producing it, evaluated only when compaction triggers;
+        ``live_edges`` is its popcount (each live edge stores two slots).
+        """
+        stored = len(self.eids)
+        if stored and 2 * live_edges < compact_below * stored:
+            if callable(edge_live):
+                edge_live = edge_live()
+            live = edge_live[self.eids]
+            cum = np.concatenate(
+                [np.zeros(1, dtype=np.int64), np.cumsum(live)])
+            self.indptr = cum[self.indptr]
+            self.indices = self.indices[live]
+            self.eids = self.eids[live]
+        return self.indptr, self.indices, self.eids
+
+
+# ---------------------------------------------------------------------------
+# the unified incremental state
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PartitionState:
+    """Incrementally-maintained per-machine costs for an edge assignment."""
+
+    g: "Graph"
+    cluster: "Cluster"
+    assign: np.ndarray            # (E,) int32, machine per edge (-1 = unassigned)
+    cnt: np.ndarray               # (p, V) int32: partition-i edges incident on v
+    edges_per: np.ndarray         # (p,)  |E_i|            (Eq. 3)
+    verts_per: np.ndarray         # (p,)  |V_i|            (Eq. 3)
+    t_cal: np.ndarray             # (p,)  Eq. 3 totals
+    t_com: np.ndarray             # (p,)  Eq. 4 totals
+    com_sum: np.ndarray           # (V,)  Σ_{i∈S(v)} C_i^com
+    replicas: np.ndarray          # (V,)  |S(v)|
+
+    def __post_init__(self):
+        # Cluster views are rebuilt per call; cache them once for hot loops.
+        self._c_node = self.cluster.c_node()
+        self._c_edge = self.cluster.c_edge()
+        self._c_com = self.cluster.c_com()
+        self._mem = self.cluster.memory()
+        self._wcsr: WorkingCSR | None = None
+
+    @classmethod
+    def build(cls, g: "Graph", assign: np.ndarray, cluster: "Cluster"):
+        """Build from scratch — the reference for every incremental path."""
+        p = cluster.p
+        cnt = edge_incidence_counts(g, assign, p)
+        member = cnt > 0
+        ok = assign >= 0
+        edges_per = np.bincount(assign[ok], minlength=p).astype(np.float64)
+        verts_per = member.sum(axis=1).astype(np.float64)
+        c_com = cluster.c_com()
+        replicas = member.sum(axis=0).astype(np.int64)
+        com_sum = member.T.astype(np.float64) @ c_com
+        t_cal = cluster.c_node() * verts_per + cluster.c_edge() * edges_per
+        t_com = t_com_from_membership(member, replicas, com_sum, c_com)
+        return cls(g=g, cluster=cluster, assign=np.asarray(assign, dtype=np.int32).copy(),
+                   cnt=cnt, edges_per=edges_per, verts_per=verts_per,
+                   t_cal=t_cal, t_com=t_com, com_sum=com_sum,
+                   replicas=replicas)
+
+    # -- objective views ----------------------------------------------------
+    @property
+    def p(self) -> int:
+        return self.cluster.p
+
+    @property
+    def t_total(self) -> np.ndarray:
+        return self.t_cal + self.t_com
+
+    @property
+    def tc(self) -> float:
+        return float(self.t_total.max())
+
+    def mem_used(self, i: int) -> float:
+        return (self.cluster.m_node * self.verts_per[i]
+                + self.cluster.m_edge * self.edges_per[i])
+
+    def mem_used_all(self) -> np.ndarray:
+        return (self.cluster.m_node * self.verts_per
+                + self.cluster.m_edge * self.edges_per)
+
+    @property
+    def mem_limits(self) -> np.ndarray:
+        """Per-machine memory caps M_i (cached cluster view)."""
+        return self._mem
+
+    def working_csr(self, compact_below: float = 0.75):
+        """Live (unassigned-edge) adjacency view, recompacted geometrically."""
+        if self._wcsr is None:
+            self._wcsr = WorkingCSR.from_graph(self.g)
+        return self._wcsr.view(self.assign < 0,
+                               int((self.assign < 0).sum()),
+                               compact_below=compact_below)
+
+    # -- scalar oracle path -------------------------------------------------
+    def _vertex_enter(self, i: int, v: int) -> None:
+        c_com = self._c_com
+        # v becomes present on i: pairs (i, j) for each j already holding v.
+        self.t_com[i] += self.replicas[v] * c_com[i] + self.com_sum[v]
+        holders = np.flatnonzero(self.cnt[:, v] > 0)
+        self.t_com[holders] += c_com[holders] + c_com[i]
+        self.replicas[v] += 1
+        self.com_sum[v] += c_com[i]
+        self.verts_per[i] += 1
+        self.t_cal[i] += self._c_node[i]
+
+    def _vertex_leave(self, i: int, v: int) -> None:
+        c_com = self._c_com
+        self.replicas[v] -= 1
+        self.com_sum[v] -= c_com[i]
+        self.t_com[i] -= self.replicas[v] * c_com[i] + self.com_sum[v]
+        holders = np.flatnonzero(self.cnt[:, v] > 0)
+        holders = holders[holders != i]
+        self.t_com[holders] -= c_com[holders] + c_com[i]
+        self.verts_per[i] -= 1
+        self.t_cal[i] -= self._c_node[i]
+
+    def remove_edge(self, e: int) -> None:
+        i = int(self.assign[e])
+        assert i >= 0
+        u, v = self.g.edges[e]
+        self.assign[e] = -1
+        self.edges_per[i] -= 1
+        self.t_cal[i] -= self._c_edge[i]
+        for x in (int(u), int(v)):
+            self.cnt[i, x] -= 1
+            if self.cnt[i, x] == 0:
+                self._vertex_leave(i, x)
+
+    def add_edge(self, e: int, i: int) -> None:
+        assert self.assign[e] == -1
+        u, v = self.g.edges[e]
+        for x in (int(u), int(v)):
+            if self.cnt[i, x] == 0:
+                self._vertex_enter(i, x)
+            self.cnt[i, x] += 1
+        self.assign[e] = i
+        self.edges_per[i] += 1
+        self.t_cal[i] += self._c_edge[i]
+
+    def delta_t_if_added(self, e: int, i: int) -> float:
+        """Resulting T_i if edge e were added to machine i (no mutation)."""
+        u, v = self.g.edges[e]
+        c_com = self._c_com
+        dt = self._c_edge[i]
+        for x in (int(u), int(v)):
+            if self.cnt[i, x] == 0:
+                dt += (self._c_node[i]
+                       + self.replicas[x] * c_com[i] + self.com_sum[x])
+        return float(self.t_total[i] + dt)
+
+    def mem_after(self, e: int, i: int) -> float:
+        u, v = self.g.edges[e]
+        new_v = sum(1 for x in (int(u), int(v)) if self.cnt[i, x] == 0)
+        return (self.cluster.m_node * (self.verts_per[i] + new_v)
+                + self.cluster.m_edge * (self.edges_per[i] + 1))
+
+    # -- batch-first API ----------------------------------------------------
+    def _tcom_contrib(self, member: np.ndarray, replicas: np.ndarray,
+                      com_sum: np.ndarray) -> np.ndarray:
+        return t_com_from_membership(member, replicas, com_sum, self._c_com)
+
+    def _recount_columns(self, A: np.ndarray, mutate_cnt) -> None:
+        """Exact wave-local recount: apply ``mutate_cnt`` (which edits the
+        vertex columns A of ``cnt``), then rebuild every membership-derived
+        quantity of those columns from scratch and apply the delta.  Exact
+        regardless of how the wave's edges interact (shared endpoints,
+        same-machine pileups), because Eq. 3/4 are separable per vertex."""
+        mem_old = self.cnt[:, A] > 0
+        old = self._tcom_contrib(mem_old, self.replicas[A], self.com_sum[A])
+        mutate_cnt()
+        mem_new = self.cnt[:, A] > 0
+        self.replicas[A] = mem_new.sum(axis=0)
+        self.com_sum[A] = mem_new.T.astype(np.float64) @ self._c_com
+        new = self._tcom_contrib(mem_new, self.replicas[A], self.com_sum[A])
+        self.t_com += new - old
+        dv = (mem_new.sum(axis=1) - mem_old.sum(axis=1)).astype(np.float64)
+        self.verts_per += dv
+        self.t_cal += self._c_node * dv
+
+    def remove_edges(self, es: np.ndarray) -> None:
+        """Batch ``remove_edge`` over an edge-id array (must be assigned)."""
+        es = np.asarray(es, dtype=np.int64)
+        if es.size == 0:
+            return
+        ms = self.assign[es].astype(np.int64)
+        assert (ms >= 0).all()
+        u = self.g.edges[es, 0].astype(np.int64)
+        v = self.g.edges[es, 1].astype(np.int64)
+        A = np.unique(np.concatenate([u, v]))
+
+        def mutate():
+            np.subtract.at(self.cnt, (ms, u), 1)
+            np.subtract.at(self.cnt, (ms, v), 1)
+
+        self._recount_columns(A, mutate)
+        self.assign[es] = -1
+        dm = np.bincount(ms, minlength=self.p).astype(np.float64)
+        self.edges_per -= dm
+        self.t_cal -= self._c_edge * dm
+
+    def add_edges(self, es: np.ndarray, ms: np.ndarray) -> None:
+        """Batch ``add_edge``: place es[j] on machine ms[j] (must be free)."""
+        es = np.asarray(es, dtype=np.int64)
+        if es.size == 0:
+            return
+        ms = np.asarray(ms, dtype=np.int64)
+        assert (self.assign[es] == -1).all()
+        u = self.g.edges[es, 0].astype(np.int64)
+        v = self.g.edges[es, 1].astype(np.int64)
+        A = np.unique(np.concatenate([u, v]))
+
+        def mutate():
+            np.add.at(self.cnt, (ms, u), 1)
+            np.add.at(self.cnt, (ms, v), 1)
+
+        self._recount_columns(A, mutate)
+        self.assign[es] = ms
+        dm = np.bincount(ms, minlength=self.p).astype(np.float64)
+        self.edges_per += dm
+        self.t_cal += self._c_edge * dm
+
+    def placement_scores(self, es: np.ndarray,
+                         cands: np.ndarray | None = None):
+        """One-gather scoring kernel for the repair waves.
+
+        Returns ``(T, mem, free_u, free_v)``, all (|es|, |cands|): the
+        resulting T and memory footprint of adding each edge to each
+        candidate (``delta_t_if_added``/``mem_after`` broadcast — every
+        entry scored *independently*; wave admission bounds the
+        staleness), plus the would-be-new-endpoint masks, so callers need
+        no second pass over the ``cnt`` columns (``share = ~free``).
+        """
+        es = np.asarray(es, dtype=np.int64)
+        cands = (np.arange(self.p, dtype=np.int64) if cands is None
+                 else np.asarray(cands, dtype=np.int64))
+        u = self.g.edges[es, 0].astype(np.int64)
+        v = self.g.edges[es, 1].astype(np.int64)
+        free_u = self.cnt[np.ix_(cands, u)] == 0          # (c, e)
+        free_v = self.cnt[np.ix_(cands, v)] == 0
+        c_node = self._c_node[cands][:, None]
+        c_com = self._c_com[cands][:, None]
+        # same summation order as the scalar oracle: c_edge, +u-term, +v-term
+        dt = (self._c_edge[cands][:, None]
+              + free_u * (c_node + self.replicas[u][None, :] * c_com
+                          + self.com_sum[u][None, :])
+              + free_v * (c_node + self.replicas[v][None, :] * c_com
+                          + self.com_sum[v][None, :]))
+        new_v = free_u.astype(np.float64) + free_v
+        mem = (self.cluster.m_node * (self.verts_per[cands][:, None] + new_v)
+               + self.cluster.m_edge * (self.edges_per[cands][:, None] + 1.0))
+        return ((self.t_total[cands][:, None] + dt).T, mem.T,
+                free_u.T, free_v.T)
+
+    def delta_t_batch(self, es: np.ndarray,
+                      cands: np.ndarray | None = None) -> np.ndarray:
+        """(|es|, |cands|) resulting T — ``delta_t_if_added`` broadcast."""
+        return self.placement_scores(es, cands)[0]
+
+    def mem_after_batch(self, es: np.ndarray,
+                        cands: np.ndarray | None = None) -> np.ndarray:
+        """(|es|, |cands|) memory footprint — ``mem_after`` broadcast."""
+        return self.placement_scores(es, cands)[1]

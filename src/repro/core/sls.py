@@ -4,7 +4,7 @@ Two operators over the current edge assignment:
 
 * **destroy-and-repair** (Alg. 5): machines with T_i above the γ-quantile
   threshold lose a θ-fraction of their edges (last-in-first-out, preserving
-  connectivity of what stays), which are greedily re-inserted by
+  connectivity of what stays), which are re-inserted by
   BalancedGreedyRepair (Alg. 6) preferring machines already holding both
   endpoints, then either endpoint, then anybody — always the feasible
   machine with the lowest resulting T.
@@ -12,140 +12,37 @@ Two operators over the current edge assignment:
   machine and its k-1 largest-replica-overlap peers are merged and re-expanded
   with Algorithm 2 to escape local optima.
 
-All objective updates are incremental via per-(machine, vertex) incident-edge
-counts, so one destroy-repair sweep is O(p·|destroyed|) as in the paper's
-analysis.
+All objective updates run through the shared incremental layer
+(``core/partition_state.py``).  The repair sweep is *vectorized*: every
+removed edge is scored against every machine in one broadcast
+(``delta_t_batch``) and repairs are admitted in waves — the best-scoring
+fraction of the pending edges per wave, with a conservative per-machine
+memory prefix so caps are never violated — mirroring the batched expansion
+engine's score-window admission.  State updates per wave are exact
+(wave-local recount); only the *scores* of not-yet-admitted edges go stale
+within a wave, which is the same deliberate approximation the batched
+engine makes.  ``strict=True`` degrades to one edge per wave in removal
+order, which reproduces the scalar oracle decision-for-decision (integer
+cost arithmetic makes both paths bit-exact) — the equivalence tests rely
+on this, like the expansion engine's ``strict_ties``.
 """
 from __future__ import annotations
-
-import dataclasses
 
 import numpy as np
 
 from . import expand
 from .graph import Graph, from_edge_list
 from .machines import Cluster
+from .partition_state import PartitionState, cumcount
+
+#: Backwards-compatible name: the accounting that used to live here.
+IncrementalTC = PartitionState
 
 
-@dataclasses.dataclass
-class IncrementalTC:
-    """Incrementally-maintained per-machine costs for an edge assignment."""
-
-    g: Graph
-    cluster: Cluster
-    assign: np.ndarray            # (E,) int32, machine per edge (-1 = unassigned)
-    cnt: np.ndarray               # (p, V) int32: partition-i edges incident on v
-    edges_per: np.ndarray         # (p,)
-    verts_per: np.ndarray         # (p,)
-    t_cal: np.ndarray             # (p,)
-    t_com: np.ndarray             # (p,)
-    com_sum: np.ndarray           # (V,) Σ_{i∈S(v)} c_com[i]
-    replicas: np.ndarray          # (V,) |S(v)|
-
-    @classmethod
-    def build(cls, g: Graph, assign: np.ndarray, cluster: Cluster):
-        p, V = cluster.p, g.num_vertices
-        cnt = np.zeros((p, V), dtype=np.int32)
-        ok = assign >= 0
-        np.add.at(cnt, (assign[ok], g.edges[ok, 0]), 1)
-        np.add.at(cnt, (assign[ok], g.edges[ok, 1]), 1)
-        member = cnt > 0
-        edges_per = np.bincount(assign[ok], minlength=p).astype(np.float64)
-        verts_per = member.sum(axis=1).astype(np.float64)
-        c_com = cluster.c_com()
-        replicas = member.sum(axis=0).astype(np.int64)
-        com_sum = member.T.astype(np.float64) @ c_com
-        t_cal = cluster.c_node() * verts_per + cluster.c_edge() * edges_per
-        t_com = np.zeros(p)
-        for i in range(p):
-            vs = member[i]
-            t_com[i] = ((replicas[vs] - 1) * c_com[i]
-                        + (com_sum[vs] - c_com[i])).sum()
-        obj = cls(g=g, cluster=cluster, assign=assign.copy(), cnt=cnt,
-                  edges_per=edges_per, verts_per=verts_per, t_cal=t_cal,
-                  t_com=t_com, com_sum=com_sum, replicas=replicas)
-        return obj
-
-    # -- helpers -----------------------------------------------------------
-    @property
-    def t_total(self) -> np.ndarray:
-        return self.t_cal + self.t_com
-
-    @property
-    def tc(self) -> float:
-        return float(self.t_total.max())
-
-    def mem_used(self, i: int) -> float:
-        return (self.cluster.m_node * self.verts_per[i]
-                + self.cluster.m_edge * self.edges_per[i])
-
-    def _vertex_enter(self, i: int, v: int) -> None:
-        c_com = self.cluster.c_com()
-        # v becomes present on i: pairs (i, j) for each j already holding v.
-        self.t_com[i] += self.replicas[v] * c_com[i] + self.com_sum[v]
-        holders = np.flatnonzero(self.cnt[:, v] > 0)
-        self.t_com[holders] += c_com[holders] + c_com[i]
-        self.replicas[v] += 1
-        self.com_sum[v] += c_com[i]
-        self.verts_per[i] += 1
-        self.t_cal[i] += self.cluster.c_node()[i]
-
-    def _vertex_leave(self, i: int, v: int) -> None:
-        c_com = self.cluster.c_com()
-        self.replicas[v] -= 1
-        self.com_sum[v] -= c_com[i]
-        self.t_com[i] -= self.replicas[v] * c_com[i] + self.com_sum[v]
-        holders = np.flatnonzero(self.cnt[:, v] > 0)
-        holders = holders[holders != i]
-        self.t_com[holders] -= c_com[holders] + c_com[i]
-        self.verts_per[i] -= 1
-        self.t_cal[i] -= self.cluster.c_node()[i]
-
-    def remove_edge(self, e: int) -> None:
-        i = int(self.assign[e])
-        assert i >= 0
-        u, v = self.g.edges[e]
-        self.assign[e] = -1
-        self.edges_per[i] -= 1
-        self.t_cal[i] -= self.cluster.c_edge()[i]
-        for x in (int(u), int(v)):
-            self.cnt[i, x] -= 1
-            if self.cnt[i, x] == 0:
-                self._vertex_leave(i, x)
-
-    def add_edge(self, e: int, i: int) -> None:
-        assert self.assign[e] == -1
-        u, v = self.g.edges[e]
-        for x in (int(u), int(v)):
-            if self.cnt[i, x] == 0:
-                self._vertex_enter(i, x)
-            self.cnt[i, x] += 1
-        self.assign[e] = i
-        self.edges_per[i] += 1
-        self.t_cal[i] += self.cluster.c_edge()[i]
-
-    def delta_t_if_added(self, e: int, i: int) -> float:
-        """Resulting T_i if edge e were added to machine i (no mutation)."""
-        u, v = self.g.edges[e]
-        c_com = self.cluster.c_com()
-        dt = self.cluster.c_edge()[i]
-        for x in (int(u), int(v)):
-            if self.cnt[i, x] == 0:
-                dt += (self.cluster.c_node()[i]
-                       + self.replicas[x] * c_com[i] + self.com_sum[x])
-        return float(self.t_total[i] + dt)
-
-    def mem_after(self, e: int, i: int) -> float:
-        u, v = self.g.edges[e]
-        new_v = sum(1 for x in (int(u), int(v)) if self.cnt[i, x] == 0)
-        return (self.cluster.m_node * (self.verts_per[i] + new_v)
-                + self.cluster.m_edge * (self.edges_per[i] + 1))
-
-
-def balanced_greedy_repair(obj: IncrementalTC, e: int, cands) -> int:
+def balanced_greedy_repair(obj: PartitionState, e: int, cands) -> int:
     """Algorithm 6: feasible candidate with the lowest resulting T, or -1."""
     best, best_t = -1, np.inf
-    mem = obj.cluster.memory()
+    mem = obj.mem_limits
     for i in cands:
         i = int(i)
         if obj.mem_after(e, i) > mem[i] + 1e-9:
@@ -156,14 +53,123 @@ def balanced_greedy_repair(obj: IncrementalTC, e: int, cands) -> int:
     return best
 
 
-def destroy_repair(obj: IncrementalTC, orders: list[list[int]],
+def _repair_edge_scalar(obj: PartitionState, e: int,
+                        orders: list[list[int]]) -> int:
+    """One edge through the Alg. 5 L11-20 cascade (the scalar oracle)."""
+    u, v = obj.g.edges[e]
+    a_u = np.flatnonzero(obj.cnt[:, u] > 0)
+    a_v = np.flatnonzero(obj.cnt[:, v] > 0)
+    both = np.intersect1d(a_u, a_v)
+    either = np.union1d(a_u, a_v)
+    i = -1
+    if len(both):
+        i = balanced_greedy_repair(obj, e, both)
+    if i < 0 and len(either):
+        i = balanced_greedy_repair(obj, e, either)
+    if i < 0:
+        i = balanced_greedy_repair(obj, e, range(obj.cluster.p))
+    if i < 0:
+        # No memory anywhere (should not happen when input feasible):
+        # force the machine with most free memory.
+        free = obj.cluster.memory() - obj.mem_used_all()
+        i = int(np.argmax(free))
+    obj.add_edge(e, int(i))
+    orders[int(i)].append(int(e))
+    return int(i)
+
+
+def _choose_machines(obj: PartitionState, es: np.ndarray):
+    """Vectorized Alg. 6 cascade for every pending edge at once.
+
+    Returns (best_m, best_t, best_mem, ok): per-edge chosen machine, its
+    resulting T, its exact post-add footprint, and whether any feasible
+    machine existed (rows with ok=False need the force-place fallback).
+    """
+    T, memA, free_u, free_v = obj.placement_scores(es)   # all (n, p)
+    feas = memA <= obj.mem_limits[None, :] + 1e-9
+    share_u, share_v = ~free_u, ~free_v
+    allowed = feas & share_u & share_v              # tier 1: both endpoints
+    need = ~allowed.any(axis=1)
+    if need.any():                                  # tier 2: either endpoint
+        allowed[need] = feas[need] & (share_u[need] | share_v[need])
+        need = ~allowed.any(axis=1)
+        if need.any():                              # tier 3: anybody feasible
+            allowed[need] = feas[need]
+    ok = allowed.any(axis=1)
+    masked = np.where(allowed, T, np.inf)
+    best_m = np.argmin(masked, axis=1)              # first-min = lowest id,
+    rows = np.arange(len(es))                       # same as the scalar scan
+    return best_m, masked[rows, best_m], memA[rows, best_m], ok
+
+
+def repair_edges(obj: PartitionState, es: np.ndarray,
+                 orders: list[list[int]], *,
+                 strict: bool = False, wave_frac: float = 0.5,
+                 wave_window: float | None = None) -> None:
+    """BalancedGreedyRepair over an edge set, in vectorized waves.
+
+    Each wave scores all pending edges × machines in one broadcast, then
+    admits the best-scoring ``wave_frac`` of them (optionally only within
+    ``wave_window`` T-units of the wave's best).  Per machine, wave-mates
+    are admitted in score order only while a *conservative* footprint bound
+    (each earlier mate adds ≤ 1 edge + 2 vertices) still fits — refused
+    edges simply stay pending for the next wave, where their scores are
+    fresh; the wave's best edge always passes (exact check), so every wave
+    makes progress.  ``strict=True``: one edge per wave in input order —
+    the scalar oracle.
+    """
+    pending = np.asarray(es, dtype=np.int64)
+    if strict:
+        for e in pending.tolist():
+            _repair_edge_scalar(obj, e, orders)
+        return
+    m_node, m_edge = obj.cluster.m_node, obj.cluster.m_edge
+    mem = obj.mem_limits
+    while len(pending):
+        best_m, best_t, best_mem, ok = _choose_machines(obj, pending)
+        if not ok.all():
+            # nothing feasible for these rows: force-place (rare), then
+            # rescore — the forced adds invalidate this wave's T/footprints
+            for e in pending[~ok].tolist():
+                free = mem - obj.mem_used_all()
+                i = int(np.argmax(free))
+                obj.add_edge(e, i)
+                orders[i].append(int(e))
+            pending = pending[ok]
+            continue
+        order = np.argsort(best_t, kind="stable")
+        sel = order[:max(1, int(np.ceil(wave_frac * len(pending))))]
+        if wave_window is not None and len(sel) > 1:
+            sel = sel[best_t[sel] <= best_t[sel[0]] + wave_window]
+        rank = cumcount(best_m[sel])
+        fits = (best_mem[sel] + rank * (2.0 * m_node + m_edge)
+                <= mem[best_m[sel]] + 1e-9)
+        adm = sel[fits]
+        adm_e, adm_m = pending[adm], best_m[adm]
+        obj.add_edges(adm_e, adm_m)
+        for i in np.unique(adm_m):
+            orders[int(i)].extend(adm_e[adm_m == i].tolist())
+        keep = np.ones(len(pending), dtype=bool)
+        keep[adm] = False
+        pending = pending[keep]
+
+
+def destroy_repair(obj: PartitionState, orders: list[list[int]],
                    gamma: float, theta: float,
-                   rng: np.random.Generator) -> bool:
-    """Algorithm 5. Returns True iff TC strictly improved."""
+                   rng: np.random.Generator | None = None, *,
+                   strict: bool = False, wave_frac: float = 0.5,
+                   wave_window: float | None = None) -> bool:
+    """Algorithm 5. Returns True iff TC strictly improved.
+
+    The destroy phase is unchanged (LIFO stacks per overloaded machine);
+    the repair phase runs through ``repair_edges`` — vectorized waves by
+    default, the scalar oracle under ``strict=True``.
+    """
     tc_before = obj.tc
     t = obj.t_total
     thd = t.min() + gamma * (t.max() - t.min())
     removed: list[int] = []
+    seen: set[int] = set()             # an edge can sit twice in one stack
     for i in range(obj.cluster.p):
         if t[i] < thd - 1e-12 or obj.edges_per[i] == 0:
             continue
@@ -173,40 +179,23 @@ def destroy_repair(obj: IncrementalTC, orders: list[list[int]],
         take = []
         while stack and len(take) < k:
             e = stack.pop()
-            if obj.assign[e] == i:     # may have moved since recorded
+            if obj.assign[e] == i and e not in seen:  # may have moved
                 take.append(e)
-        for e in take:
-            obj.remove_edge(e)
+                seen.add(e)
         removed.extend(take)
+    removed_arr = np.asarray(removed, dtype=np.int64)
+    obj.remove_edges(removed_arr)
     # Repair, endpoint-sharing machines first (Alg. 5 L11-20).
-    for e in removed:
-        u, v = obj.g.edges[e]
-        a_u = np.flatnonzero(obj.cnt[:, u] > 0)
-        a_v = np.flatnonzero(obj.cnt[:, v] > 0)
-        both = np.intersect1d(a_u, a_v)
-        either = np.union1d(a_u, a_v)
-        i = -1
-        if len(both):
-            i = balanced_greedy_repair(obj, e, both)
-        if i < 0 and len(either):
-            i = balanced_greedy_repair(obj, e, either)
-        if i < 0:
-            i = balanced_greedy_repair(obj, e, range(obj.cluster.p))
-        if i < 0:
-            # No memory anywhere (should not happen when input feasible):
-            # force the machine with most free memory.
-            free = obj.cluster.memory() - np.array(
-                [obj.mem_used(j) for j in range(obj.cluster.p)])
-            i = int(np.argmax(free))
-        obj.add_edge(e, i)
-        orders[i].append(e)
+    repair_edges(obj, removed_arr, orders,
+                 strict=strict, wave_frac=wave_frac, wave_window=wave_window)
     return obj.tc < tc_before - 1e-9
 
 
-def repartition(obj: IncrementalTC, orders: list[list[int]],
+def repartition(obj: PartitionState, orders: list[list[int]],
                 deltas: np.ndarray, k: int,
                 alpha: float, beta: float,
-                engine: str = "heap", **engine_kw) -> IncrementalTC:
+                engine: str = "heap", strict: bool = False,
+                **engine_kw) -> PartitionState:
     """Algorithm 7: re-run expansion over the worst machine + k-1 peers.
 
     ``engine`` selects the expansion implementation (heap oracle or the
@@ -252,17 +241,8 @@ def repartition(obj: IncrementalTC, orders: list[list[int]],
     # Any leftover edges in the pool: greedy repair below.
     left = sub_to_global[~st.assigned]
     assign[left] = -1
-    new_obj = IncrementalTC.build(obj.g, assign, obj.cluster)
-    for e in left.tolist():
-        u_, v_ = obj.g.edges[e]
-        cands = np.flatnonzero((new_obj.cnt[:, u_] > 0) | (new_obj.cnt[:, v_] > 0))
-        i2 = balanced_greedy_repair(new_obj, e, cands if len(cands) else range(p))
-        if i2 < 0:
-            i2 = balanced_greedy_repair(new_obj, e, range(p))
-        if i2 < 0:
-            i2 = int(np.argmax(mem - new_obj.cluster.m_edge * new_obj.edges_per))
-        new_obj.add_edge(e, i2)
-        new_orders[i2].append(e)
+    new_obj = PartitionState.build(obj.g, assign, obj.cluster)
+    repair_edges(new_obj, left, new_orders, strict=strict)
     orders[:] = new_orders
     return new_obj
 
@@ -271,16 +251,23 @@ def sls(g: Graph, assign: np.ndarray, cluster: Cluster,
         orders: list[list[int]], deltas: np.ndarray, *,
         t0: int = 8, n0: int = 5, gamma: float = 0.9, theta: float = 0.01,
         k: int = 3, alpha: float = 0.3, beta: float = 0.3,
-        seed: int = 0, engine: str = "heap",
+        seed: int = 0, engine: str = "heap", repair: str = "vectorized",
         **engine_kw) -> tuple[np.ndarray, float]:
-    """Algorithm 4: the SLS driver.  Returns (best assignment, best TC)."""
+    """Algorithm 4: the SLS driver.  Returns (best assignment, best TC).
+
+    ``repair`` selects the destroy-repair sweep implementation:
+    ``"vectorized"`` (wave admission, the default) or ``"scalar"`` (the
+    per-edge oracle — same decisions, interpreter-bound).
+    """
+    assert repair in ("vectorized", "scalar"), repair
+    strict = repair == "scalar"
     rng = np.random.default_rng(seed)
-    obj = IncrementalTC.build(g, assign, cluster)
+    obj = PartitionState.build(g, assign, cluster)
     best_assign, best_tc = obj.assign.copy(), obj.tc
     n = 0
     budget = t0
     while budget > 0:
-        if destroy_repair(obj, orders, gamma, theta, rng):
+        if destroy_repair(obj, orders, gamma, theta, rng, strict=strict):
             n = 0
         else:
             n += 1
@@ -288,7 +275,7 @@ def sls(g: Graph, assign: np.ndarray, cluster: Cluster,
             best_assign, best_tc = obj.assign.copy(), obj.tc
         if n > n0:
             obj = repartition(obj, orders, deltas, k, alpha, beta,
-                              engine=engine, **engine_kw)
+                              engine=engine, strict=strict, **engine_kw)
             if obj.tc < best_tc - 1e-9:
                 best_assign, best_tc = obj.assign.copy(), obj.tc
             n = 0

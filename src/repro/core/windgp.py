@@ -11,11 +11,13 @@ The three phases correspond to the paper's Figure 4.  Ablation levels:
 Expansion engines (the ``engine=`` switch, threaded through both the
 expansion phase and SLS's re-partition operator):
 
-* ``engine="batched"`` (default): the monotone bucket-queue engine —
-  quantized Eq. 5 scores, whole frontier slices admitted per step with
-  vectorized AllocEdges (≥5× faster partitioning at matching TC; see
+* ``engine="batched"`` (default): the frontier-scan engine — quantized
+  Eq. 5 scores kept fresh per vertex, whole best-window frontier slices
+  admitted per step with vectorized AllocEdges, degree-split hub/tail
+  frontier (≥5× faster partitioning at matching TC; see
   ``core/expand.py``).  Extra knobs (``scale``, ``batch_frac``,
-  ``batch_window``, ``strict_ties``) pass through ``**engine_kw``.
+  ``batch_window``, ``strict_ties``, ``hub_split``, ``hub_degree``) pass
+  through ``**engine_kw``.
 * ``engine="heap"``: the scalar lazy-min-heap reference oracle — exactly
   the paper's Algorithms 2-3; keep for equivalence checks and debugging.
 """
@@ -44,24 +46,16 @@ class WindGPResult:
 
 def _repair_unassigned(g: Graph, assign: np.ndarray, cluster: Cluster,
                        orders: list[list[int]]) -> np.ndarray:
-    """Safety net: greedily place any edge the expansion could not fit."""
+    """Safety net: greedily place any edge the expansion could not fit.
+
+    Runs the shared vectorized BalancedGreedyRepair waves over the whole
+    leftover set at once (``sls.repair_edges``).
+    """
     left = np.flatnonzero(assign < 0)
     if len(left) == 0:
         return assign
-    obj = sls_mod.IncrementalTC.build(g, assign, cluster)
-    for e in left.tolist():
-        u, v = g.edges[e]
-        cands = np.flatnonzero((obj.cnt[:, u] > 0) | (obj.cnt[:, v] > 0))
-        i = sls_mod.balanced_greedy_repair(
-            obj, e, cands if len(cands) else range(cluster.p))
-        if i < 0:
-            i = sls_mod.balanced_greedy_repair(obj, e, range(cluster.p))
-        if i < 0:
-            free = cluster.memory() - np.array(
-                [obj.mem_used(j) for j in range(cluster.p)])
-            i = int(np.argmax(free))
-        obj.add_edge(e, i)
-        orders[i].append(e)
+    obj = sls_mod.PartitionState.build(g, assign, cluster)
+    sls_mod.repair_edges(obj, left, orders)
     return obj.assign
 
 
@@ -79,9 +73,14 @@ def windgp(
     level: str = "windgp",
     seed: int = 0,
     engine: str = "batched",
+    repair: str = "vectorized",
     **engine_kw,
 ) -> WindGPResult:
-    """Run WindGP (or one of its ablations) and evaluate the TC metric."""
+    """Run WindGP (or one of its ablations) and evaluate the TC metric.
+
+    ``repair`` selects SLS's destroy-repair sweep: the vectorized wave
+    implementation (default) or the per-edge ``"scalar"`` oracle.
+    """
     assert level in ("windgp-", "windgp*", "windgp+", "windgp")
     assert engine in exp.ENGINES, engine
     t_start = time.perf_counter()
@@ -129,7 +128,7 @@ def windgp(
         assign, _ = sls_mod.sls(
             g, assign, cluster, orders, deltas, t0=t0, n0=n0,
             gamma=gamma, theta=theta, k=k, alpha=alpha, beta=beta, seed=seed,
-            engine=engine, **engine_kw)
+            engine=engine, repair=repair, **engine_kw)
     phases["sls"] = time.perf_counter() - t0_
 
     stats = evaluate(g, assign, cluster)

@@ -1,0 +1,334 @@
+"""Unified incremental PartitionState layer: batch↔scalar exactness and
+SLS destroy–repair / repartition invariants.
+
+Costs in the paper's machine quantification are integral, so every
+quantity PartitionState maintains is an integer-valued float64 — the
+batch recount path and the scalar incremental path must therefore agree
+*bit for bit*, not just within tolerance.  The clusters built here keep
+integer costs to exercise exactly that.
+"""
+import numpy as np
+import pytest
+from _hyp import given, settings, strategies as st
+
+from repro.core import (Cluster, Machine, capacities, evaluate,
+                        from_edge_list, scaled_paper_cluster)
+from repro.core import expand as exp_mod
+from repro.core import sls as sls_mod
+from repro.core.partition_state import (PartitionState, WorkingCSR, cumcount,
+                                        edge_incidence_counts,
+                                        t_com_from_membership)
+from repro.data import rmat
+
+
+def random_graph(rng, v_max=40):
+    V = int(rng.integers(6, v_max))
+    E = int(rng.integers(V, V * 4))
+    return from_edge_list(rng.integers(0, V, size=(E, 2)), num_vertices=V)
+
+
+def int_cluster(rng, p, num_edges):
+    """Integer-cost cluster with enough memory slack to stay feasible."""
+    machines = tuple(
+        Machine(memory=float(rng.integers(2 * num_edges, 6 * num_edges)),
+                c_node=float(rng.integers(0, 8)),
+                c_edge=float(rng.integers(1, 16)),
+                c_com=float(rng.integers(1, 16)))
+        for _ in range(p))
+    return Cluster(machines=machines)
+
+
+def random_state(rng, p=4, v_max=40):
+    g = random_graph(rng, v_max)
+    cl = int_cluster(rng, p, g.num_edges)
+    assign = rng.integers(0, p, size=g.num_edges).astype(np.int32)
+    return g, cl, assign
+
+
+def assert_states_equal(a: PartitionState, b: PartitionState, exact=True):
+    eq = (np.testing.assert_array_equal if exact
+          else np.testing.assert_allclose)
+    np.testing.assert_array_equal(a.assign, b.assign)
+    np.testing.assert_array_equal(a.cnt, b.cnt)
+    np.testing.assert_array_equal(a.replicas, b.replicas)
+    eq(a.com_sum, b.com_sum)
+    eq(a.edges_per, b.edges_per)
+    eq(a.verts_per, b.verts_per)
+    eq(a.t_cal, b.t_cal)
+    eq(a.t_com, b.t_com)
+
+
+class TestBuild:
+    @given(st.integers(0, 2 ** 31))
+    @settings(max_examples=25, deadline=None)
+    def test_build_matches_evaluate(self, seed):
+        """Vectorized Eq. 3/4 (one masked matmul) == the metric reference."""
+        rng = np.random.default_rng(seed)
+        g, cl, assign = random_state(rng)
+        obj = PartitionState.build(g, assign, cl)
+        ref = evaluate(g, assign, cl)
+        np.testing.assert_array_equal(obj.t_cal, ref.t_cal)
+        np.testing.assert_array_equal(obj.t_com, ref.t_com)
+        assert obj.tc == ref.tc
+
+    def test_t_com_from_membership_matches_loop(self):
+        rng = np.random.default_rng(0)
+        p, V = 5, 30
+        member = rng.random((p, V)) < 0.3
+        c_com = rng.integers(1, 9, size=p).astype(np.float64)
+        replicas = member.sum(axis=0)
+        com_sum = member.T.astype(np.float64) @ c_com
+        ref = np.zeros(p)
+        for i in range(p):           # the pre-vectorization reference
+            vs = member[i]
+            ref[i] = ((replicas[vs] - 1) * c_com[i]
+                      + (com_sum[vs] - c_com[i])).sum()
+        got = t_com_from_membership(member, replicas, com_sum, c_com)
+        np.testing.assert_array_equal(got, ref)
+
+    def test_edge_incidence_counts(self):
+        g = from_edge_list(np.array([[0, 1], [1, 2], [2, 3]]))
+        cnt = edge_incidence_counts(g, np.array([0, 0, 1]), 2)
+        assert cnt[0].tolist() == [1, 2, 1, 0]
+        assert cnt[1].tolist() == [0, 0, 1, 1]
+
+
+class TestBatchOps:
+    @given(st.integers(0, 2 ** 31))
+    @settings(max_examples=25, deadline=None)
+    def test_remove_add_batch_bitwise_equals_scalar(self, seed):
+        rng = np.random.default_rng(seed)
+        g, cl, assign = random_state(rng)
+        k = int(rng.integers(1, max(2, g.num_edges // 2)))
+        es = rng.choice(g.num_edges, size=k, replace=False)
+        ms = rng.integers(0, cl.p, size=k)
+        a = PartitionState.build(g, assign, cl)
+        b = PartitionState.build(g, assign, cl)
+        for e in es.tolist():
+            a.remove_edge(e)
+        b.remove_edges(es)
+        assert_states_equal(a, b)
+        for e, m in zip(es.tolist(), ms.tolist()):
+            a.add_edge(e, m)
+        b.add_edges(es, ms)
+        assert_states_equal(a, b)
+
+    @given(st.integers(0, 2 ** 31))
+    @settings(max_examples=25, deadline=None)
+    def test_delta_t_and_mem_batch_equal_scalar(self, seed):
+        rng = np.random.default_rng(seed)
+        g, cl, assign = random_state(rng)
+        k = int(rng.integers(1, max(2, g.num_edges // 3)))
+        es = rng.choice(g.num_edges, size=k, replace=False)
+        obj = PartitionState.build(g, assign, cl)
+        obj.remove_edges(es)
+        T = obj.delta_t_batch(es)
+        M = obj.mem_after_batch(es)
+        assert T.shape == M.shape == (k, cl.p)
+        for j, e in enumerate(es.tolist()):
+            for i in range(cl.p):
+                assert T[j, i] == obj.delta_t_if_added(e, i), (j, i)
+                assert M[j, i] == obj.mem_after(e, i), (j, i)
+
+    def test_mem_used_all(self):
+        rng = np.random.default_rng(3)
+        g, cl, assign = random_state(rng)
+        obj = PartitionState.build(g, assign, cl)
+        np.testing.assert_array_equal(
+            obj.mem_used_all(),
+            np.array([obj.mem_used(i) for i in range(cl.p)]))
+
+
+class TestWorkingCSR:
+    def test_view_compacts_to_live_adjacency(self):
+        g = rmat(8, seed=1)
+        alive = np.ones(g.num_edges, dtype=bool)
+        rng = np.random.default_rng(0)
+        dead = rng.choice(g.num_edges, size=int(0.8 * g.num_edges),
+                          replace=False)
+        alive[dead] = False
+        w = WorkingCSR.from_graph(g)
+        indptr, indices, eids = w.view(alive, int(alive.sum()))
+        assert len(eids) == 2 * int(alive.sum())    # compaction triggered
+        for v in range(g.num_vertices):             # order-preserving slices
+            sl = slice(g.indptr[v], g.indptr[v + 1])
+            keep = alive[g.edge_ids[sl]]
+            np.testing.assert_array_equal(
+                indices[indptr[v]:indptr[v + 1]], g.indices[sl][keep])
+            np.testing.assert_array_equal(
+                eids[indptr[v]:indptr[v + 1]], g.edge_ids[sl][keep])
+
+    def test_view_no_compaction_when_mostly_live(self):
+        g = rmat(7, seed=2)
+        w = WorkingCSR.from_graph(g)
+        called = []
+
+        def live():
+            called.append(1)
+            return np.ones(g.num_edges, dtype=bool)
+
+        indptr, indices, eids = w.view(live, g.num_edges)
+        assert not called                  # lazy mask never materialized
+        assert indices is g.indices
+
+    def test_partition_state_working_csr(self):
+        rng = np.random.default_rng(5)
+        g, cl, assign = random_state(rng, v_max=30)
+        # mostly assigned ⇒ few live (unassigned) edges ⇒ compaction fires
+        assign[rng.random(g.num_edges) < 0.1] = -1
+        obj = PartitionState.build(g, assign, cl)
+        indptr, indices, eids = obj.working_csr()
+        live = np.flatnonzero(assign < 0)
+        assert sorted(np.unique(eids).tolist()) == sorted(live.tolist())
+
+
+def test_cumcount():
+    a = np.array([3, 1, 3, 3, 1, 0])
+    assert cumcount(a).tolist() == [0, 0, 1, 2, 1, 0]
+
+
+# ---------------------------------------------------------------------------
+# SLS invariants on the new layer
+# ---------------------------------------------------------------------------
+
+def scalar_destroy_repair_reference(obj, orders, gamma, theta):
+    """PR-1's per-edge destroy–repair sweep, kept verbatim as the oracle."""
+    tc_before = obj.tc
+    t = obj.t_total
+    thd = t.min() + gamma * (t.max() - t.min())
+    removed, seen = [], set()
+    for i in range(obj.cluster.p):
+        if t[i] < thd - 1e-12 or obj.edges_per[i] == 0:
+            continue
+        k = max(1, int(np.ceil(theta * obj.edges_per[i])))
+        stack = orders[i]
+        take = []
+        while stack and len(take) < k:
+            e = stack.pop()
+            if obj.assign[e] == i and e not in seen:
+                take.append(e)
+                seen.add(e)
+        for e in take:
+            obj.remove_edge(e)
+        removed.extend(take)
+    for e in removed:
+        u, v = obj.g.edges[e]
+        a_u = np.flatnonzero(obj.cnt[:, u] > 0)
+        a_v = np.flatnonzero(obj.cnt[:, v] > 0)
+        both = np.intersect1d(a_u, a_v)
+        either = np.union1d(a_u, a_v)
+        i = -1
+        if len(both):
+            i = sls_mod.balanced_greedy_repair(obj, e, both)
+        if i < 0 and len(either):
+            i = sls_mod.balanced_greedy_repair(obj, e, either)
+        if i < 0:
+            i = sls_mod.balanced_greedy_repair(obj, e, range(obj.cluster.p))
+        if i < 0:
+            free = obj.cluster.memory() - obj.mem_used_all()
+            i = int(np.argmax(free))
+        obj.add_edge(e, i)
+        orders[i].append(e)
+    return obj.tc < tc_before - 1e-9
+
+
+def expanded_state(seed, scale=9):
+    g = rmat(scale, seed=seed)
+    cl = scaled_paper_cluster(2, 4, g.num_edges, slack=2.0)
+    d = capacities(cl, g.num_vertices, g.num_edges)
+    assign, orders = exp_mod.run_expansion(
+        g, d, 0.25, 0.25, memories=cl.memory(),
+        m_node=cl.m_node, m_edge=cl.m_edge, engine="batched")
+    obj = PartitionState.build(g, assign, cl)
+    sls_mod.repair_edges(obj, np.flatnonzero(assign < 0), orders)
+    return g, cl, obj, orders
+
+
+class TestDestroyRepair:
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_strict_flag_bitwise_equals_scalar_oracle(self, seed):
+        """``strict=True`` reproduces the per-edge oracle decision for
+        decision — same assignment, same incremental state, bit for bit
+        (like the expansion engine's ``strict_ties``)."""
+        g, cl, obj_a, orders_a = expanded_state(seed)
+        obj_b = PartitionState.build(g, obj_a.assign, cl)
+        orders_b = [list(o) for o in orders_a]
+        for _ in range(3):
+            ra = sls_mod.destroy_repair(obj_a, orders_a, 0.8, 0.05, None,
+                                        strict=True)
+            rb = scalar_destroy_repair_reference(obj_b, orders_b, 0.8, 0.05)
+            assert ra == rb
+        assert orders_a == orders_b
+        assert_states_equal(obj_a, obj_b)
+
+    @pytest.mark.parametrize("strict", [False, True])
+    @pytest.mark.parametrize("seed", [3, 4])
+    def test_invariants_after_sweeps(self, seed, strict):
+        """Edge-exactly-once, memory caps, incremental == rebuilt."""
+        g, cl, obj, orders = expanded_state(seed)
+        for _ in range(4):
+            sls_mod.destroy_repair(obj, orders, 0.9, 0.05, None,
+                                   strict=strict)
+        assert (obj.assign >= 0).all()
+        assert np.bincount(obj.assign, minlength=cl.p).sum() == g.num_edges
+        assert np.all(obj.mem_used_all() <= cl.memory() + 1e-6)
+        assert_states_equal(obj, PartitionState.build(g, obj.assign, cl))
+
+    def test_vectorized_tc_close_to_scalar(self):
+        """The wave approximation stays within 2% of the oracle's TC."""
+        gaps = []
+        for seed in range(4):
+            g, cl, obj_a, orders_a = expanded_state(seed, scale=10)
+            obj_b = PartitionState.build(g, obj_a.assign, cl)
+            orders_b = [list(o) for o in orders_a]
+            for _ in range(4):
+                sls_mod.destroy_repair(obj_a, orders_a, 0.9, 0.03, None,
+                                       strict=False)
+                sls_mod.destroy_repair(obj_b, orders_b, 0.9, 0.03, None,
+                                       strict=True)
+            gaps.append((obj_a.tc - obj_b.tc) / obj_b.tc)
+        assert float(np.mean(gaps)) < 0.02, gaps
+
+    def test_no_per_edge_python_loop_on_hot_path(self):
+        """The default repair path never calls the scalar per-edge kernel."""
+        g, cl, obj, orders = expanded_state(5)
+        calls = []
+        orig = sls_mod._repair_edge_scalar
+        sls_mod._repair_edge_scalar = (
+            lambda *a, **k: calls.append(1) or orig(*a, **k))
+        try:
+            sls_mod.destroy_repair(obj, orders, 0.9, 0.05, None)
+        finally:
+            sls_mod._repair_edge_scalar = orig
+        assert not calls
+
+
+class TestRepartition:
+    @pytest.mark.parametrize("engine", ["heap", "batched"])
+    def test_invariants_after_repartition(self, engine):
+        g, cl, obj, orders = expanded_state(6)
+        deltas = capacities(cl, g.num_vertices, g.num_edges)
+        new = sls_mod.repartition(obj, orders, deltas, k=3,
+                                  alpha=0.25, beta=0.25, engine=engine)
+        assert (new.assign >= 0).all()
+        assert np.bincount(new.assign, minlength=cl.p).sum() == g.num_edges
+        flat = [e for o in orders for e in o]
+        assert np.all(new.assign[np.asarray(flat, dtype=int)] >= 0)
+        assert_states_equal(new, PartitionState.build(g, new.assign, cl))
+
+
+class TestSLSDriver:
+    @pytest.mark.parametrize("repair", ["vectorized", "scalar"])
+    def test_sls_never_worsens(self, repair):
+        g = rmat(9, seed=7)
+        cl = scaled_paper_cluster(2, 4, g.num_edges, slack=2.0)
+        d = capacities(cl, g.num_vertices, g.num_edges)
+        assign, orders = exp_mod.run_expansion(
+            g, d, 0.25, 0.25, memories=cl.memory(),
+            m_node=cl.m_node, m_edge=cl.m_edge, engine="batched")
+        obj = PartitionState.build(g, assign, cl)
+        sls_mod.repair_edges(obj, np.flatnonzero(assign < 0), orders)
+        tc0 = obj.tc
+        _, best_tc = sls_mod.sls(g, obj.assign, cl, orders, d,
+                                 t0=6, repair=repair, engine="batched")
+        assert best_tc <= tc0 + 1e-9
