@@ -8,7 +8,7 @@ import time
 from repro.bsp import (PartitionRuntime, pagerank, simulate_runtime, sssp,
                        triangle_count)
 from repro.core import evaluate, windgp
-from repro.core.baselines import PARTITIONERS
+from repro.core.partitioners import get as partitioner
 
 from .common import CSV, cluster_for, dataset, timed
 
@@ -24,7 +24,7 @@ def run(quick: bool = True, datasets=("TW", "LJ", "CP", "RN")):
                 assign = windgp(g, cl, t0=20, theta=0.02,
                                 alpha=0.1, beta=0.1).assign
             else:
-                assign = PARTITIONERS[m](g, cl)
+                assign = partitioner(m)(g, cl)
             rt = PartitionRuntime.build(g, assign, cl.p)
             sim_pr = simulate_runtime(rt, cl, num_steps=10)
             _, act = sssp(rt, source=0, num_iters=12)

@@ -5,7 +5,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import evaluate, windgp
-from repro.core.baselines import PARTITIONERS
+from repro.core.partitioners import get as partitioner
 
 from .common import CSV, cluster_for, dataset, timed
 
@@ -21,7 +21,7 @@ def run(quick: bool = True):
         cl = cluster_for(ds, g)
         tcs = {}
         for m in METHODS:
-            assign, dt = timed(PARTITIONERS[m], g, cl)
+            assign, dt = timed(partitioner(m), g, cl)
             s = evaluate(g, assign, cl)
             tcs[m] = s.tc
             csv.row(f"{ds}/{m}", dt, f"TC={s.tc:.4e};RF={s.rf:.3f}")

@@ -14,8 +14,12 @@ Four sections:
 * ``sls_compare``         — scalar vs vectorized destroy–repair sweeps on
   the same initial partition (gate: ≥3× on LJ with TC within 2% of the
   scalar oracle).
+* ``streaming_compare``   — per-edge streaming oracles (greedy/HDRF/EBV)
+  vs the block-stream engine across block sizes (gate: ≥5× on LJ at the
+  default block with RF and TC within 2% of the stream-order oracle).
 * ``--smoke``             — tier-2 CI gate on a tiny proxy: asserts the
-  vectorized SLS lands within 2% TC of the scalar oracle.
+  vectorized SLS lands within 2% TC of the scalar oracle AND the block
+  engine within 2% RF/TC of each per-edge streaming oracle.
 
 Run directly:  PYTHONPATH=src python -m benchmarks.partition_time [--smoke]
 """
@@ -25,16 +29,83 @@ import time
 
 import numpy as np
 
-from repro.core import capacities, scaled_paper_cluster, windgp
+from repro.core import capacities, evaluate, scaled_paper_cluster, windgp
 from repro.core import expand as exp_mod
 from repro.core import sls as sls_mod
-from repro.core.baselines import PARTITIONERS
 from repro.core.partition_state import PartitionState
+from repro.core.partitioners import get as partitioner
 from repro.data import rmat
 
 from .common import CSV, cluster_for, dataset, median_iqr, spread_str, timed
 
 ENGINE_DATASETS = ("TW", "LJ", "RN")
+
+#: block-stream scorers with a per-edge reference loop
+STREAM_METHODS = ("greedy", "hdrf", "ebv")
+
+
+def _stream_compare_one(g, cl, csv: CSV, label: str, method: str, *,
+                        block_sizes=None, repeats: int = 3) -> dict:
+    """Per-edge oracle vs block engine on one graph; returns the metrics.
+
+    ``block_sizes=None`` sweeps the method's auto default plus a 4× -
+    coarser step (the staleness ablation)."""
+    if block_sizes is None:
+        b0 = _default_block(method, g.num_edges)
+        block_sizes = (b0, 4 * b0)
+    oracle = partitioner(f"{method}_oracle")
+    blocked = partitioner(method)
+    res = {}
+    timings = {"oracle": []}
+    timings.update({f"B{b}": [] for b in block_sizes})
+    runs = {}
+    for _ in range(max(1, repeats)):   # interleaved, like run_engine_compare
+        t0 = time.perf_counter()
+        runs["oracle"] = oracle(g, cl)
+        timings["oracle"].append(time.perf_counter() - t0)
+        for b in block_sizes:
+            t0 = time.perf_counter()
+            runs[f"B{b}"] = blocked(g, cl, block_size=b)
+            timings[f"B{b}"].append(time.perf_counter() - t0)
+    s_orc = evaluate(g, runs["oracle"], cl)
+    t_orc, _ = median_iqr(timings["oracle"])
+    csv.row(f"{label}/{method}/oracle", t_orc,
+            f"{spread_str(timings['oracle'])} tc={s_orc.tc:.0f} "
+            f"rf={s_orc.rf:.3f}")
+    res["oracle"] = {"seconds": t_orc, "tc": s_orc.tc, "rf": s_orc.rf}
+    for b in block_sizes:
+        s = evaluate(g, runs[f"B{b}"], cl)
+        t_b, _ = median_iqr(timings[f"B{b}"])
+        speed = t_orc / max(t_b, 1e-9)
+        d_tc = (s.tc - s_orc.tc) / s_orc.tc
+        d_rf = (s.rf - s_orc.rf) / s_orc.rf
+        csv.row(f"{label}/{method}/block{b}", t_b,
+                f"{spread_str(timings[f'B{b}'])} {speed:.2f}x "
+                f"tc={d_tc * 100:+.2f}% rf={d_rf * 100:+.2f}%")
+        res[b] = {"seconds": t_b, "speedup": speed,
+                  "tc_gap": d_tc, "rf_gap": d_rf}
+    return res
+
+
+def run_streaming_compare(quick: bool = True, datasets=ENGINE_DATASETS,
+                          block_sizes=None, repeats: int = 3):
+    """Per-edge oracles vs the block-stream engine across block sizes.
+
+    The acceptance gate lives on LJ at each method's default block size:
+    ≥ 5× the per-edge loop with RF and TC within 2% of the stream-order
+    oracle (``block_size=1`` bit-equality is a unit test, not a timing
+    table).
+    """
+    csv = CSV("streaming_compare")
+    out = {}
+    for ds in datasets:
+        g = dataset(ds, quick)
+        cl = cluster_for(ds, g)
+        out[ds] = {m: _stream_compare_one(g, cl, csv, ds, m,
+                                          block_sizes=block_sizes,
+                                          repeats=repeats)
+                   for m in STREAM_METHODS}
+    return out
 
 
 def run_engine_compare(quick: bool = True, datasets=ENGINE_DATASETS,
@@ -144,9 +215,15 @@ def run_sls_compare(quick: bool = True, datasets=("LJ", "TW"),
 
 
 def run_smoke() -> dict:
-    """Tier-2 CI gate: tiny LJ-family proxy; vectorized SLS must match the
-    scalar oracle's quality within 2% TC (and is expected to be faster,
-    printed but not asserted — CI wall-clock is too noisy to gate on)."""
+    """Tier-2 CI gate on a tiny LJ-family proxy, two assertions:
+
+    * vectorized SLS destroy–repair within 2% TC of the scalar oracle;
+    * the block-stream engine within 2% RF *and* TC of each per-edge
+      streaming oracle at the default block size.
+
+    Speedups are printed but not asserted — CI wall-clock is too noisy to
+    gate on.
+    """
     g = rmat(11, edge_factor=7, seed=42)
     cl = scaled_paper_cluster(3, 6, g.num_edges)
     csv = CSV("sls_smoke")
@@ -157,7 +234,33 @@ def run_smoke() -> dict:
     csv.row("tiny_lj/ok", 0,
             f"tc_gap={res['tc_gap'] * 100:+.2f}% "
             f"speedup={res['speedup']:.2f}x")
-    return res
+
+    scsv = CSV("stream_smoke")
+    out = {"sls": res}
+    for m in STREAM_METHODS:
+        b = _default_block(m, g.num_edges)
+        r = _stream_compare_one(g, cl, scsv, "tiny_lj", m,
+                                block_sizes=(b,), repeats=2)
+        assert r[b]["tc_gap"] <= 0.02 + 1e-9, (
+            f"block-stream {m} TC {r[b]['tc_gap'] * 100:+.2f}% > +2% vs "
+            f"the per-edge oracle")
+        assert r[b]["rf_gap"] <= 0.02 + 1e-9, (
+            f"block-stream {m} RF {r[b]['rf_gap'] * 100:+.2f}% > +2% vs "
+            f"the per-edge oracle")
+        scsv.row(f"tiny_lj/{m}/ok", 0,
+                 f"tc={r[b]['tc_gap'] * 100:+.2f}% "
+                 f"rf={r[b]['rf_gap'] * 100:+.2f}% "
+                 f"speedup={r[b]['speedup']:.2f}x")
+        out[m] = r
+    return out
+
+
+def _default_block(method: str, num_edges: int) -> int:
+    """The effective default ``block_size`` of a blocked method."""
+    from repro.core.baselines.streaming import (ENGINE_DEFAULTS,
+                                                auto_block_size)
+    return int(ENGINE_DEFAULTS[method]["block_size"]
+               or auto_block_size(num_edges))
 
 
 def run(quick: bool = True, datasets=("CO", "LJ", "PO", "CP", "RN")):
@@ -168,7 +271,7 @@ def run(quick: bool = True, datasets=("CO", "LJ", "PO", "CP", "RN")):
         cl = cluster_for(ds, g)
         times = {}
         for m in ("hdrf", "ne", "ebv", "metis"):
-            _, dt = timed(PARTITIONERS[m], g, cl)
+            _, dt = timed(partitioner(m), g, cl)
             times[m] = dt
             csv.row(f"{ds}/{m}", dt, f"{dt:.2f}s")
         _, dt = timed(windgp, g, cl, t0=8, alpha=0.1, beta=0.1)
@@ -186,7 +289,9 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="tier-2 CI gate: tiny proxy, asserts vectorized "
-                         "SLS TC within 2% of the scalar oracle")
+                         "SLS TC within 2% of the scalar oracle and the "
+                         "block-stream engine within 2% RF/TC of the "
+                         "per-edge streaming oracles")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--repeats", type=int, default=3)
     args = ap.parse_args()
@@ -197,3 +302,4 @@ if __name__ == "__main__":
         run(quick=not args.full)
         run_engine_compare(quick=not args.full, repeats=args.repeats)
         run_sls_compare(quick=not args.full, repeats=args.repeats)
+        run_streaming_compare(quick=not args.full, repeats=args.repeats)

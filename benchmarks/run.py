@@ -23,6 +23,8 @@ TABLES = {
     "tab11": partition_time.run,      # partitioning time
     "engines": partition_time.run_engine_compare,  # heap vs batched expansion
     "sls": partition_time.run_sls_compare,  # scalar vs vectorized SLS repair
+    "stream": partition_time.run_streaming_compare,  # oracle vs block engine
+    "wave": tuning.run_wave_sweep,    # SLS wave_frac/wave_window sweep
     "tab1": tc_vs_runtime.run,        # TC ∝ runtime
     "tab15_16": bsp_runtime.run,      # distributed algorithm runtimes
 }

@@ -4,7 +4,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import evaluate, scaled_paper_cluster, windgp
-from repro.core.baselines import PARTITIONERS
+from repro.core.partitioners import get as partitioner
 from repro.data import graph500
 
 from .common import CSV, timed
@@ -22,7 +22,7 @@ def run(quick: bool = True):
         csv.row(f"S{s}/windgp", dt,
                 f"E={g.num_edges};TC={res.stats.tc:.4e}")
         for m in ("ne", "hdrf"):
-            assign, dtm = timed(PARTITIONERS[m], g, cl)
+            assign, dtm = timed(partitioner(m), g, cl)
             st = evaluate(g, assign, cl)
             csv.row(f"S{s}/{m}", dtm, f"TC={st.tc:.4e}")
         tc_by_scale[s] = res.stats.tc

@@ -4,7 +4,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import Cluster, Machine, evaluate, scaled_paper_cluster, windgp
-from repro.core.baselines import PARTITIONERS
+from repro.core.partitioners import get as partitioner
 
 from .common import CSV, dataset, timed
 
@@ -18,7 +18,7 @@ def run(quick: bool = True):
         res, dt = timed(windgp, g, cl, t0=20, theta=0.02,
                         alpha=0.1, beta=0.1)
         csv.row(f"machines={p}/windgp", dt, f"TC={res.stats.tc:.4e}")
-        a, dtn = timed(PARTITIONERS["ne"], g, cl)
+        a, dtn = timed(partitioner("ne"), g, cl)
         csv.row(f"machines={p}/ne", dtn,
                 f"TC={evaluate(g, a, cl).tc:.4e}")
 
@@ -41,7 +41,7 @@ def run(quick: bool = True):
                         alpha=0.1, beta=0.1)
         csv.row(f"types={ntypes}/windgp", dt, f"TC={res.stats.tc:.4e}")
         for m in ("ne", "ebv"):
-            a, dtm = timed(PARTITIONERS[m], g, cl)
+            a, dtm = timed(partitioner(m), g, cl)
             csv.row(f"types={ntypes}/{m}", dtm,
                     f"TC={evaluate(g, a, cl).tc:.4e}")
     return None

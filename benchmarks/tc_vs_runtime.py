@@ -14,7 +14,7 @@ import numpy as np
 
 from repro.bsp import PartitionRuntime, bfs, pagerank, simulate_runtime, sssp
 from repro.core import evaluate, windgp
-from repro.core.baselines import PARTITIONERS
+from repro.core.partitioners import get as partitioner
 
 from .common import CSV, cluster_for, dataset, timed
 
@@ -29,7 +29,7 @@ def run(quick: bool = True, ds: str = "LJ"):
             assign = windgp(g, cl, t0=20, theta=0.02,
                             alpha=0.1, beta=0.1).assign
         else:
-            assign = PARTITIONERS[m](g, cl)
+            assign = partitioner(m)(g, cl)
         tc = evaluate(g, assign, cl).tc
         rt = PartitionRuntime.build(g, assign, cl.p)
 

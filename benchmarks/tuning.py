@@ -1,11 +1,18 @@
-"""Paper Tables 4-9: hyper-parameter tuning (α, β, γ, θ, N0, T0)."""
+"""Paper Tables 4-9: hyper-parameter tuning (α, β, γ, θ, N0, T0), plus the
+SLS wave-knob sweep (``wave_frac`` × ``wave_window`` of the vectorized
+destroy–repair admission)."""
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
-from repro.core import windgp
+from repro.core import capacities, windgp
+from repro.core import expand as exp_mod
+from repro.core import sls as sls_mod
+from repro.core.partition_state import PartitionState
 
-from .common import CSV, cluster_for, dataset, timed
+from .common import CSV, cluster_for, dataset, median_iqr, spread_str, timed
 
 GRIDS = {
     "alpha": [0, 0.1, 0.2, 0.3, 0.5, 0.7, 0.9],      # Table 4
@@ -45,4 +52,63 @@ def run(quick: bool = True, datasets=("TW", "LJ", "RN")):
             best = grid[int(np.argmin(tcs))]
             csv.row(f"{ds}/{pname}_best", 0, f"{best}")
             results[(ds, pname)] = (grid, tcs)
+    return results
+
+
+WAVE_FRACS = (0.25, 0.5, 0.75, 1.0)
+WAVE_WINDOWS = (None, 0.5, 0.25, 0.1)
+
+
+def run_wave_sweep(quick: bool = True, datasets=("TW", "LJ"),
+                   repeats: int = 2, sweeps: int = 5,
+                   gamma: float = 0.9, theta: float = 0.05):
+    """SLS wave-knob sweep (ROADMAP): ``wave_frac`` × ``wave_window``.
+
+    From one fixed post-expansion partition per proxy, time ``sweeps``
+    destroy–repair sweeps per knob setting and record the resulting TC —
+    the quality/speed surface the ``repair_edges`` defaults are picked
+    from.  The scalar oracle rides along as the quality reference.
+    """
+    csv = CSV("wave_sweep")
+    results = {}
+    for ds in datasets:
+        g = dataset(ds, quick)
+        cl = cluster_for(ds, g)
+        deltas = capacities(cl, g.num_vertices, g.num_edges)
+        assign, orders = exp_mod.run_expansion(
+            g, deltas, 0.1, 0.1, memories=cl.memory(),
+            m_node=cl.m_node, m_edge=cl.m_edge, engine="batched")
+        obj0 = PartitionState.build(g, assign, cl)
+        sls_mod.repair_edges(obj0, np.flatnonzero(assign < 0), orders)
+        base = obj0.assign.copy()
+
+        def one(wf=None, ww=None, strict=False):
+            times, tc = [], None
+            for _ in range(max(1, repeats)):
+                obj = PartitionState.build(g, base, cl)
+                ords = [list(o) for o in orders]
+                kw = {} if strict else {"wave_frac": wf, "wave_window": ww}
+                t0 = time.perf_counter()
+                for _ in range(sweeps):
+                    sls_mod.destroy_repair(obj, ords, gamma, theta, None,
+                                           strict=strict, **kw)
+                times.append(time.perf_counter() - t0)
+                tc = obj.tc
+            med, _ = median_iqr(times)
+            return med, tc, times
+
+        t_ref, tc_ref, ts = one(strict=True)
+        csv.row(f"{ds}/scalar", t_ref, f"{spread_str(ts)} tc={tc_ref:.0f}")
+        for wf in WAVE_FRACS:
+            for ww in WAVE_WINDOWS:
+                med, tc, ts = one(wf, ww)
+                gap = (tc - tc_ref) / tc_ref
+                csv.row(f"{ds}/wf={wf}/ww={ww}", med,
+                        f"{spread_str(ts)} tc={tc:.0f} "
+                        f"gap={gap * 100:+.2f}% "
+                        f"speedup={t_ref / max(med, 1e-9):.2f}x")
+                results[(ds, wf, ww)] = {"seconds": med, "tc": tc,
+                                         "tc_gap": gap,
+                                         "speedup": t_ref / max(med, 1e-9)}
+        results[(ds, "scalar")] = {"seconds": t_ref, "tc": tc_ref}
     return results

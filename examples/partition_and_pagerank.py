@@ -11,7 +11,7 @@ import numpy as np
 from repro.bsp import (PartitionRuntime, pagerank, ref, simulate_runtime,
                        sssp)
 from repro.core import evaluate, scaled_paper_cluster, windgp
-from repro.core.baselines import PARTITIONERS
+from repro.core.partitioners import get as partitioner
 from repro.data import rmat
 
 g = rmat(12, seed=3)
@@ -24,7 +24,7 @@ for method in ("hash", "ne", "windgp"):
         assign = windgp(g, cluster, alpha=0.1, beta=0.1,
                         t0=20, theta=0.02).assign
     else:
-        assign = PARTITIONERS[method](g, cluster)
+        assign = partitioner(method)(g, cluster)
     stats = evaluate(g, assign, cluster)
     rt = PartitionRuntime.build(g, assign, cluster.p)
 

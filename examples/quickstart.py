@@ -5,7 +5,7 @@
 import numpy as np
 
 from repro.core import (evaluate, scaled_paper_cluster, windgp)
-from repro.core.baselines import PARTITIONERS
+from repro.core.partitioners import get as partitioner
 from repro.data import rmat
 
 # 1. a power-law graph (R-MAT, Graph500 parameters)
@@ -25,7 +25,7 @@ print(f"\nWindGP : TC={res.stats.tc:.4e}  RF={res.stats.rf:.3f}  "
       f"feasible={res.stats.feasible}  ({res.seconds:.2f}s)")
 
 # 4. compare against the strongest homogeneous baseline (NE)
-a = PARTITIONERS["ne"](g, cluster)
+a = partitioner("ne")(g, cluster)
 s = evaluate(g, a, cluster)
 print(f"NE     : TC={s.tc:.4e}  RF={s.rf:.3f}")
 print(f"speedup: {s.tc / res.stats.tc:.2f}x on the TC metric")

@@ -102,6 +102,22 @@ class PartitionRuntime:
             verts_per_machine=np.array([len(v) for v in locals_]),
             edges_per_machine=np.array([len(e) for e in edges_]))
 
+    @classmethod
+    def from_partitioner(cls, g: Graph, cluster, method: str = "windgp",
+                         edge_weights: np.ndarray | None = None,
+                         **knobs) -> "PartitionRuntime":
+        """Partition ``g`` with a registered method and pack the runtime.
+
+        ``method`` resolves through the unified registry
+        (``repro.core.partitioners``); ``knobs`` pass through to it after
+        name validation, so e.g. ``block_size=...`` reaches the
+        block-stream scorers.  One-stop shop for the examples/benchmarks:
+        partition → fixed-shape per-machine arrays.
+        """
+        from ..core.partitioners import get
+        assign = get(method)(g, cluster, **knobs)
+        return cls.build(g, assign, cluster.p, edge_weights=edge_weights)
+
     def gather_global(self, local_values: np.ndarray,
                       fill: float = 0.0) -> np.ndarray:
         """Merge per-machine local vertex values into a (V,) global array.

@@ -4,37 +4,28 @@ Each is adapted — exactly as the paper does for fairness — to heterogeneous
 machines by adding per-machine memory-capacity constraints; otherwise they
 optimize their original homogeneous objectives.
 
-``windgp_heap`` / ``windgp_batched`` expose the two WindGP expansion
-engines through the same ``(g, cluster) -> assign`` interface so the
-benchmark harnesses can sweep every method uniformly.
+Every method lives in the unified registry (``core/partitioners.py``);
+``PARTITIONERS`` survives as a snapshot of it (per-edge ``*_oracle``
+reference loops excluded — they are test references, not benchmark
+entries), so legacy ``PARTITIONERS[name](g, cluster)`` call sites keep
+working unchanged.
 """
-from .streaming import dbh, ebv, hdrf, powergraph_greedy, random_hash
+from .streaming import (dbh, ebv, ebv_oracle, hdrf, hdrf_oracle,
+                        powergraph_greedy, powergraph_greedy_oracle,
+                        random_hash, stream_partition)
 from .ne import ne
 from .metis_like import metis_like
 
+from ..partitioners import get, partitioner_dict
 
-def _windgp_with(engine):
-    def run(g, cluster, **kw):
-        from ..windgp import windgp  # deferred: windgp imports this package
-        return windgp(g, cluster, engine=engine, **kw).assign
-    run.__name__ = f"windgp_{engine}"
-    return run
+# windgp's driver entries register on import of repro.core.windgp, which
+# ``partitioner_dict`` triggers via the registry's _ensure_builtin.
+PARTITIONERS = partitioner_dict(exclude={"oracle"})
 
-
-windgp_heap = _windgp_with("heap")
-windgp_batched = _windgp_with("batched")
-
-PARTITIONERS = {
-    "hash": random_hash,
-    "dbh": dbh,
-    "greedy": powergraph_greedy,
-    "hdrf": hdrf,
-    "ebv": ebv,
-    "ne": ne,
-    "metis": metis_like,
-    "windgp_heap": windgp_heap,
-    "windgp_batched": windgp_batched,
-}
+windgp_heap = PARTITIONERS["windgp_heap"]
+windgp_batched = PARTITIONERS["windgp_batched"]
 
 __all__ = ["dbh", "ebv", "hdrf", "powergraph_greedy", "random_hash", "ne",
-           "metis_like", "windgp_heap", "windgp_batched", "PARTITIONERS"]
+           "metis_like", "windgp_heap", "windgp_batched", "PARTITIONERS",
+           "ebv_oracle", "hdrf_oracle", "powergraph_greedy_oracle",
+           "stream_partition", "get", "partitioner_dict"]

@@ -157,3 +157,11 @@ def metis_like(g: Graph, cluster: Cluster, seed: int = 0,
             assign[e] = i
             counts[i] += 1
     return assign
+
+
+from ..partitioners import Partitioner, register  # noqa: E402
+
+register(Partitioner(
+    "metis", metis_like, "multilevel",
+    "METIS-like multilevel scheme, edge-assigned with memory caps",
+    frozenset(), ("seed", "coarsest")))

@@ -38,3 +38,11 @@ def ne(g: Graph, cluster: Cluster, seed: int = 0,
         repair_edges(obj, left, [[] for _ in range(p)])
         assign = obj.assign
     return assign
+
+
+from ..partitioners import Partitioner, register  # noqa: E402
+
+register(Partitioner(
+    "ne", ne, "expansion",
+    "Neighborhood Expansion [Zhang et al. 2017], memory-adapted",
+    frozenset(), ("seed", "balance")))

@@ -8,16 +8,61 @@ best-scoring machine that still has room.  The hash-family overflow pass
 (``core/partition_state.py``): overflow edges beyond each machine's cap
 are repaired in vectorized greedy waves instead of a per-edge Python scan
 over its own bincounts.
+
+The order-sensitive scorers (greedy, HDRF, EBV) run through the
+**block-stream engine**: edges are consumed in blocks of ``block_size``
+stream positions, each block is scored against *all* machines in one
+broadcast (the replication term reads the shared ``(p, V)`` membership
+matrix via ``PartitionState.endpoint_presence``; balance terms read its
+``edges_per``/``verts_per`` totals), and conflict-free within-block
+assignments are admitted in waves:
+
+* only the stream-first edge per endpoint may be admitted in a wave, so
+  every admitted edge's replication term is exact w.r.t. the pre-wave
+  state (wave-mates are pairwise endpoint-disjoint);
+* per machine, wave-mates are admitted in stream order only while the
+  capacity cap still fits (``counts + rank < cap``) and within a
+  ``ceil(candidates / p)`` spread quota, so the stale balance term cannot
+  pile a whole wave onto one machine — refused edges stay pending and are
+  rescored next wave against fresh state.
+
+``block_size=1`` degrades to one edge per wave, which reproduces the
+per-edge loops decision for decision (identical float arithmetic, same
+first-argmax tie-breaks) — those loops survive below as ``*_oracle``, the
+test reference rather than the implementation, mirroring the SLS repair
+waves' ``strict`` mode.  ``stream_partition`` runs the same engine over an
+edge-block iterator with the graph-free ``StreamMembership`` state, for
+graphs that never materialize as a single array.
 """
 from __future__ import annotations
+
+import dataclasses
 
 import numpy as np
 
 from ..capacity import _mem_cap
 from ..graph import Graph
 from ..machines import Cluster
-from ..partition_state import PartitionState, cumcount
+from ..partition_state import (PartitionState, StreamMembership, cumcount)
 from ..sls import repair_edges
+
+#: Fallback stream-block size (the public methods use ``auto_block_size``
+#: via the per-method ``ENGINE_DEFAULTS``): large enough that per-wave
+#: broadcasts amortize the Python dispatch, small enough that stale
+#: balance terms self-correct within a fraction of a machine's capacity.
+DEFAULT_BLOCK = 1024
+
+
+def auto_block_size(num_edges: int) -> int:
+    """Default block: ~1/48 of the stream, clamped to [256, 8192].
+
+    What degrades block quality is the *fraction* of the stream scored
+    against one membership snapshot, not the absolute block size — the
+    same 1024-edge block is a 2% slice of the LJ proxy but an 8% slice of
+    the CI smoke proxy.  E/48 reproduces the LJ-tuned 1024 at LJ scale
+    and shrinks/grows proportionally elsewhere.
+    """
+    return int(max(256, min(8192, num_edges // 48)))
 
 
 def _caps(cluster: Cluster, g: Graph) -> np.ndarray:
@@ -69,11 +114,16 @@ def dbh(g: Graph, cluster: Cluster, seed: int = 0) -> np.ndarray:
     return _cap_spill(g, cluster, assign, _caps(cluster, g))
 
 
-def powergraph_greedy(g: Graph, cluster: Cluster, seed: int = 0) -> np.ndarray:
-    """PowerGraph's greedy vertex-cut [Gonzalez et al. 2012].
+# ---------------------------------------------------------------------------
+# per-edge reference loops (the stream-order oracles)
+# ---------------------------------------------------------------------------
+
+def powergraph_greedy_oracle(g: Graph, cluster: Cluster,
+                             seed: int = 0) -> np.ndarray:
+    """PowerGraph's greedy vertex-cut [Gonzalez et al. 2012], per edge.
 
     Prefer machines holding both endpoints, then either, then least loaded;
-    ties broken by load.
+    ties broken by load.  Kept as the block engine's bit-exact reference.
     """
     p = cluster.p
     caps = _caps(cluster, g)
@@ -101,9 +151,9 @@ def powergraph_greedy(g: Graph, cluster: Cluster, seed: int = 0) -> np.ndarray:
     return assign
 
 
-def hdrf(g: Graph, cluster: Cluster, seed: int = 0,
-         lam: float = 1.0, eps: float = 1.0) -> np.ndarray:
-    """High-Degree Replicated First [Petroni et al. 2015]."""
+def hdrf_oracle(g: Graph, cluster: Cluster, seed: int = 0,
+                lam: float = 1.0, eps: float = 1.0) -> np.ndarray:
+    """High-Degree Replicated First [Petroni et al. 2015], per edge."""
     p = cluster.p
     caps = _caps(cluster, g)
     member = np.zeros((p, g.num_vertices), dtype=bool)
@@ -130,9 +180,9 @@ def hdrf(g: Graph, cluster: Cluster, seed: int = 0,
     return assign
 
 
-def ebv(g: Graph, cluster: Cluster, seed: int = 0,
-        w_e: float = 1.0, w_v: float = 1.0) -> np.ndarray:
-    """Efficient-and-Balanced Vertex-cut [Zhang et al. 2021].
+def ebv_oracle(g: Graph, cluster: Cluster, seed: int = 0,
+               w_e: float = 1.0, w_v: float = 1.0) -> np.ndarray:
+    """Efficient-and-Balanced Vertex-cut [Zhang et al. 2021], per edge.
 
     Streams edges sorted by end-degree sum ascending; score for machine i:
     I(u∉V_i) + I(v∉V_i) + w_e·p|E_i|/|E| + w_v·p|V_i|/|V|  (minimized).
@@ -160,3 +210,512 @@ def ebv(g: Graph, cluster: Cluster, seed: int = 0,
             vcounts[i] += 1
         counts[i] += 1
     return assign
+
+
+# ---------------------------------------------------------------------------
+# block-stream scorers: one (n, p) broadcast per wave, oracle float-for-float
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class GreedyScorer:
+    """PowerGraph-greedy score, vectorized row-per-edge."""
+
+    name = "greedy"
+
+    def stream_order(self, g: Graph, seed: int) -> np.ndarray:
+        return np.random.default_rng(seed).permutation(g.num_edges)
+
+    def block_aux(self, u: np.ndarray, v: np.ndarray) -> np.ndarray | None:
+        return None
+
+    def score(self, state, u, v, pres_u, pres_v, aux, caps,
+              nE: int, nV: int) -> np.ndarray:
+        base = -state.edges_per / np.maximum(1, caps)        # (p,)
+        both = pres_u & pres_v
+        either = pres_u | pres_v
+        s_both = np.where(both, base + 4, -np.inf)
+        s_either = np.where(either, base + 2, -np.inf)
+        s_base = np.broadcast_to(base, both.shape)
+        return np.where(both.any(axis=1)[:, None], s_both,
+                        np.where(either.any(axis=1)[:, None],
+                                 s_either, s_base))
+
+    def wave_penalty(self, state, caps, nE: int, nV: int) -> np.ndarray:
+        return 1.0 / np.maximum(1, caps)
+
+    def fresh_priority(self, state, caps, nE: int, nV: int):
+        c = np.maximum(1, caps)
+        return state.edges_per / c, 1.0 / c
+
+
+@dataclasses.dataclass
+class HDRFScorer:
+    """HDRF score; partial degrees are stream-position facts, so they are
+    computed exactly per block (running totals + within-block occurrence
+    ranks) regardless of how waves defer placements."""
+
+    lam: float = 1.0
+    eps: float = 1.0
+    name = "hdrf"
+
+    def __post_init__(self):
+        self._pdeg: np.ndarray | None = None
+
+    def reset(self, num_vertices: int) -> None:
+        self._pdeg = np.zeros(num_vertices, dtype=np.int64)
+
+    def stream_order(self, g: Graph, seed: int) -> np.ndarray:
+        return np.random.default_rng(seed).permutation(g.num_edges)
+
+    def block_aux(self, u: np.ndarray, v: np.ndarray) -> np.ndarray:
+        ends = np.empty(2 * len(u), dtype=np.int64)
+        ends[0::2] = u
+        ends[1::2] = v
+        occ = cumcount(ends)
+        du = self._pdeg[u] + occ[0::2] + 1
+        dv = self._pdeg[v] + occ[1::2] + 1
+        np.add.at(self._pdeg, ends, 1)
+        return np.stack([du, dv], axis=1)
+
+    def score(self, state, u, v, pres_u, pres_v, aux, caps,
+              nE: int, nV: int) -> np.ndarray:
+        du, dv = aux[:, 0], aux[:, 1]
+        theta_u = du / (du + dv)
+        theta_v = 1.0 - theta_u
+        g_u = np.where(pres_u, 1.0 + (1.0 - theta_u)[:, None], 0.0)
+        g_v = np.where(pres_v, 1.0 + (1.0 - theta_v)[:, None], 0.0)
+        counts = state.edges_per
+        maxs, mins = counts.max(), counts.min()
+        c_bal = self.lam * (maxs - counts) / (self.eps + maxs - mins)
+        return g_u + g_v + c_bal[None, :]
+
+    def wave_penalty(self, state, caps, nE: int, nV: int) -> np.ndarray:
+        counts = state.edges_per
+        spread = self.eps + counts.max() - counts.min()
+        return np.full(len(caps), self.lam / spread)
+
+    def fresh_priority(self, state, caps, nE: int, nV: int):
+        # c_bal is strictly decreasing in the own count and uniform
+        # otherwise, so fresh placement greedily fills the lowest count
+        return state.edges_per.copy(), np.ones(len(caps))
+
+
+@dataclasses.dataclass
+class EBVScorer:
+    """EBV score (minimized in the oracle; negated here, higher = better)."""
+
+    w_e: float = 1.0
+    w_v: float = 1.0
+    name = "ebv"
+
+    def stream_order(self, g: Graph, seed: int) -> np.ndarray:
+        deg = g.degree()
+        return np.argsort(deg[g.edges[:, 0]] + deg[g.edges[:, 1]],
+                          kind="stable")
+
+    def block_aux(self, u: np.ndarray, v: np.ndarray) -> np.ndarray | None:
+        return None
+
+    def score(self, state, u, v, pres_u, pres_v, aux, caps,
+              nE: int, nV: int) -> np.ndarray:
+        p = state.p
+        rep = (~pres_u).astype(np.float64) + (~pres_v)
+        score = (rep + self.w_e * p * state.edges_per / nE
+                 + self.w_v * p * state.verts_per / nV)
+        return -score
+
+    def wave_penalty(self, state, caps, nE: int, nV: int) -> np.ndarray:
+        # each admitted edge adds 1 to |E_i| and at most 2 to |V_i|
+        p = state.p
+        return np.full(len(caps),
+                       self.w_e * p / nE + 2.0 * self.w_v * p / nV)
+
+    def fresh_priority(self, state, caps, nE: int, nV: int):
+        p = state.p
+        a = (self.w_e * p * state.edges_per / nE
+             + self.w_v * p * state.verts_per / nV)
+        b = np.full(len(caps), self.w_e * p / nE + 2.0 * self.w_v * p / nV)
+        return a, b
+
+
+#: scorer factories by method name (the ``blocked`` capability surface)
+SCORERS = {
+    "greedy": GreedyScorer,
+    "hdrf": HDRFScorer,
+    "ebv": EBVScorer,
+}
+
+
+# ---------------------------------------------------------------------------
+# the block-stream engine
+# ---------------------------------------------------------------------------
+
+class _BlockEngine:
+    """Wave admission over a stream-ordered pending buffer with carry.
+
+    ``push`` appends one block (auxiliary stream facts — HDRF's partial
+    degrees — are stamped at arrival, so deferral never changes them) and
+    runs at most ``max_waves`` admission waves; unadmitted rows *carry*
+    into the next block's pending, where they ride along with its full
+    waves instead of draining through many tiny straggler waves — and see
+    membership several blocks ahead, which is what the replica throttle
+    needs.  ``flush`` drains to empty at stream end.  Rows keep stream
+    order throughout, so the leader/quota logic stays order-faithful.
+
+    Admission is the sum of three guards (the scalar oracles reduce to
+    the quota path at one row per wave):
+
+    * fresh edges → exact water-fill of the scorer's linear balance score;
+    * membership-tiered edges → per-machine rank quota anchored to the
+      block size, with a rank-*stability* override (the batched form of
+      the oracle's continuous balance steering) and a replica throttle
+      (creations wait a wave to see the membership just built);
+    * per-machine capacity prefix (each wave-mate adds exactly one edge).
+    """
+
+    def __init__(self, state, scorer, caps, nE, nV, *,
+                 block_size: int = 4096, max_waves: int = 3,
+                 replica_frac: float = 0.5, sink=None):
+        self.state, self.scorer, self.caps = state, scorer, caps
+        self.nE, self.nV, self.max_waves, self.sink = nE, nV, max_waves, sink
+        self.block_size = max(1, int(block_size))
+        self.replica_frac = replica_frac
+        self.u = np.empty(0, dtype=np.int64)
+        self.v = np.empty(0, dtype=np.int64)
+        self.eids: np.ndarray | None = None
+        self.aux: np.ndarray | None = None
+        self._scratch = np.full(max(1, nV), -1, dtype=np.int64)
+
+    def push(self, u, v, eids=None) -> None:
+        aux = self.scorer.block_aux(u, v)
+        self.u = np.concatenate([self.u, u])
+        self.v = np.concatenate([self.v, v])
+        if eids is not None:
+            self.eids = (eids if self.eids is None
+                         else np.concatenate([self.eids, eids]))
+        if aux is not None:
+            self.aux = (aux if self.aux is None
+                        else np.concatenate([self.aux, aux]))
+        self._drain(self.max_waves)
+
+    def flush(self) -> None:
+        self._drain(None)
+
+    def _emit(self, sel, ms, verts_delta=None) -> None:
+        e = None if self.eids is None else self.eids[sel]
+        self.state.admit_block(self.u[sel], self.v[sel], e, ms,
+                               verts_delta=verts_delta)
+        if self.sink is not None:
+            self.sink(np.stack([self.u[sel], self.v[sel]], axis=1), ms)
+
+    def _shrink(self, taken: np.ndarray) -> None:
+        keep = np.ones(len(self.u), dtype=bool)
+        keep[taken] = False
+        self.u, self.v = self.u[keep], self.v[keep]
+        if self.eids is not None:
+            self.eids = self.eids[keep]
+        if self.aux is not None:
+            self.aux = self.aux[keep]
+
+    def _drain(self, max_waves: int | None) -> None:
+        waves = 0
+        while len(self.u) and (max_waves is None or waves < max_waves):
+            waves += 1
+            if not self._wave():
+                break
+
+    def _wave(self) -> bool:
+        """One admission wave; returns False on the overflow fallback."""
+        state, scorer, caps = self.state, self.scorer, self.caps
+        nE, nV = self.nE, self.nV
+        u, v = self.u, self.v
+        n = len(u)
+        p = state.p
+        pres_u, pres_v = state.endpoint_presence(u, v)
+        scores = scorer.score(state, u, v, pres_u, pres_v,
+                              self.aux, caps, nE, nV)
+        counts = state.edges_per
+        ok = counts < caps
+        if not ok.any():
+            # Global overflow (least-overfull fallback): the argmin moves
+            # with every placement, so drain scalar — the oracle's path.
+            for j in range(n):
+                i = np.argmin(state.edges_per - caps)
+                self._emit(np.array([j]), np.array([i], dtype=np.int64))
+            self._shrink(np.arange(n))
+            return False
+        masked = np.where(ok[None, :], scores, -np.inf)
+        best = np.argmax(masked, axis=1)         # first-max = scalar _spill
+        # (1) endpoint leaders: the stream-first toucher of each vertex
+        # this wave, found by a reversed scatter-write (first write wins
+        # after reversal; stale scratch entries are never read because
+        # every slot is written before it is read).  An edge may join the
+        # wave iff each endpoint is steered to the same machine as that
+        # endpoint's leader — same-machine followers only reinforce the
+        # membership their leader creates, so hub edges co-admit in one
+        # wave; disagreeing edges defer and are rescored against fresh
+        # state.
+        ends = np.empty(2 * n, dtype=np.int64)
+        ends[0::2] = u
+        ends[1::2] = v
+        idx = np.arange(2 * n)
+        self._scratch[ends[::-1]] = idx[::-1]
+        lead_slot = self._scratch[ends]
+        is_first = lead_slot == idx
+        stream_first = is_first[0::2] & is_first[1::2]
+        any_u = pres_u.any(axis=1)
+        any_v = pres_v.any(axis=1)
+        fresh = ~(any_u | any_v)
+        # (2a) *fresh* edges — no endpoint present anywhere, so their score
+        # rows are identical and stale argmax would pile a whole wave onto
+        # one machine.  Their balance score is linear in the own-machine
+        # count (a_i + b_i·t), so the oracle's repeated-argmax placement
+        # sequence is exactly the ascending merge of the per-machine
+        # priority ladders — water-fill them in one argsort, capped by
+        # each machine's remaining room.  Only stream-first fresh edges
+        # join (followers defer one wave and return membership-tiered).
+        fcand = np.flatnonzero(fresh & stream_first)
+        falloc = np.zeros(p, dtype=np.int64)
+        take_parts = []
+        m_parts = []
+        lead_m = best.copy()                    # leaders' *actual* machines
+        if len(fcand) > 1:
+            a, b = scorer.fresh_priority(state, caps, nE, nV)
+            k = len(fcand)
+            room = np.where(ok, caps - counts.astype(np.int64), 0)
+            t = np.arange(min(k, int(room.max())), dtype=np.float64)
+            ladder = a[:, None] + b[:, None] * t[None, :]
+            ladder[t[None, :] >= room[:, None]] = np.inf
+            flat = np.argsort(ladder, axis=None, kind="stable")[:k]
+            seq = (flat // len(t)).astype(np.int64)
+            seq = seq[np.isfinite(ladder.ravel()[flat])]
+            fc = fcand[:len(seq)]        # room-limited leftovers defer
+            falloc = np.bincount(seq, minlength=p)
+            take_parts.append(fc)
+            m_parts.append(seq)
+            lead_m[fc] = seq
+            nfmask = ~fresh
+        else:
+            nfmask = ~fresh | stream_first
+        # follower agreement checks the machine its endpoint leader was
+        # actually sent to (water-filled fresh leaders included)
+        first_m = lead_m[lead_slot // 2]
+        nfmask &= (first_m[0::2] == best) & (first_m[1::2] == best)
+        # (2b) membership-tiered edges: cap + balance guard per machine in
+        # stream order.  Each earlier wave-mate (fresh water-fill included)
+        # adds exactly one edge (cap check).  The per-machine rank quota is
+        # anchored to the *block size*, not the pending size, so carried
+        # stragglers never coarsen admission.  Beyond the quota an edge
+        # needs rank-*stability*: after charging the scorer's per-edge
+        # balance penalty for every earlier wave-mate on its machine, its
+        # score must still beat the row's second-best allowed machine.
+        # Replica-*creating* placements (an endpoint present elsewhere but
+        # not on the chosen machine) additionally respect the quota as a
+        # global rate limit: deferring the rest one wave lets them see the
+        # membership the admitted edges just built — the oracle's
+        # continuously-discovered co-location at wave granularity.
+        cand = np.flatnonzero(nfmask)
+        if len(cand):
+            m = best[cand]
+            r = cumcount(m) + falloc[m]
+            quota = max(1, -(-min(len(cand), self.block_size) // p))
+            creating = ((any_u[cand] & ~pres_u[cand, m])
+                        | (any_v[cand] & ~pres_v[cand, m]))
+            rc = np.zeros(len(cand), dtype=np.int64)
+            rc[creating] = np.arange(int(creating.sum()))
+            rc_quota = max(1, int(self.replica_frac * quota))
+            in_quota = ((r - falloc[m] < quota)
+                        & (~creating | (rc < rc_quota)))
+            capok = counts[m] + r < caps[m]
+            keep_c = capok & in_quota
+            # stability override — non-fresh, non-creating rows only,
+            # computed lazily on the rows that actually need it
+            over = capok & ~in_quota & ~fresh[cand] & ~creating
+            if over.any() and p >= 2:
+                pen = scorer.wave_penalty(state, caps, nE, nV)
+                second = np.partition(masked[cand[over]], -2, axis=1)[:, -2]
+                stable = (masked[cand[over], m[over]]
+                          - r[over] * pen[m[over]] >= second)
+                keep_c[over] = stable
+            take_parts.append(cand[keep_c])
+            m_parts.append(m[keep_c])
+        take = np.concatenate(take_parts) if take_parts else \
+            np.empty(0, dtype=np.int64)
+        ms = np.concatenate(m_parts) if m_parts else \
+            np.empty(0, dtype=np.int64)
+        ms = ms.astype(np.int64)
+        # progress: the globally stream-first pending edge is either a
+        # fresh leader (water-fill places it first) or its own endpoint
+        # leader at rank 0 with a machine ``best`` knows has room — every
+        # wave admits at least one edge.
+        # exact |V_i| delta from admitted-set leader bits: all admitted
+        # touchers of a vertex share a machine, so the 0→1 cell events are
+        # exactly the admitted leaders landing where their endpoint is absent
+        et = np.empty(2 * len(take), dtype=np.int64)
+        et[0::2] = u[take]
+        et[1::2] = v[take]
+        it = np.arange(2 * len(take))
+        self._scratch[et[::-1]] = it[::-1]
+        lead_t = self._scratch[et] == it
+        new_u = lead_t[0::2] & ~pres_u[take, ms]
+        new_v = lead_t[1::2] & ~pres_v[take, ms]
+        dv = (np.bincount(ms[new_u], minlength=p)
+              + np.bincount(ms[new_v], minlength=p)).astype(np.float64)
+        self._emit(take, ms, verts_delta=dv)
+        self._shrink(take)
+        return True
+
+
+def block_stream_assign(g: Graph, cluster: Cluster, scorer, *,
+                        block_size: int = DEFAULT_BLOCK, seed: int = 0,
+                        order: np.ndarray | None = None,
+                        max_waves: int = 3,
+                        replica_frac: float = 0.5) -> np.ndarray:
+    """Run a block-stream scorer over an in-memory graph.
+
+    The shared ``(p, V)`` membership matrix and per-machine totals live in
+    ``PartitionState`` (built all-unassigned), so the engine's accounting is
+    the same layer expansion/SLS/overflow already use; ``order`` overrides
+    the scorer's stream order (tests use this to cross-check the graph-free
+    path).  ``block_size=1`` reproduces the ``*_oracle`` loops bit for bit.
+    """
+    state = PartitionState.build(
+        g, np.full(g.num_edges, -1, dtype=np.int32), cluster)
+    caps = _caps(cluster, g)
+    if order is None:
+        order = scorer.stream_order(g, seed)
+    if hasattr(scorer, "reset"):
+        scorer.reset(g.num_vertices)
+    B = max(1, int(block_size))
+    eu = g.edges[:, 0].astype(np.int64)
+    ev = g.edges[:, 1].astype(np.int64)
+    eng = _BlockEngine(state, scorer, caps, g.num_edges,
+                       max(1, g.num_vertices), block_size=B,
+                       max_waves=max_waves, replica_frac=replica_frac)
+    for lo in range(0, len(order), B):
+        blk = order[lo:lo + B]
+        eng.push(eu[blk], ev[blk], blk)
+    eng.flush()
+    return state.assign
+
+
+def stream_partition(blocks, num_vertices: int, num_edges: int,
+                     cluster: Cluster, method: str = "hdrf", *,
+                     block_size: int | None = None,
+                     max_waves: int | None = None,
+                     replica_frac: float | None = None, sink=None,
+                     **scorer_kw) -> StreamMembership:
+    """Partition an edge stream that never materializes as one array.
+
+    ``blocks`` yields (B, 2) int arrays (``data/io.iter_edge_blocks``);
+    stream order is arrival order (EBV's degree sort is not available
+    without a second pass — documented deviation).  ``num_vertices`` and
+    ``num_edges`` come from a counting pass (both are needed for the
+    memory caps; EBV also normalizes by them).  Each incoming block is
+    re-chunked to ``block_size`` and pushed through the same wave engine
+    as the in-memory path, over the graph-free ``StreamMembership`` state;
+    ``sink(edges, ms)`` receives ``((k, 2) endpoints, (k,) machines)``
+    slices as placements finalize — admission-wave order, not arrival
+    order, since deferred edges carry across blocks.  Returns the
+    end-of-stream membership state (RF, counts).
+    """
+    scorer = SCORERS[method](**scorer_kw)
+    if hasattr(scorer, "reset"):
+        scorer.reset(num_vertices)
+    state = StreamMembership.empty(num_vertices, cluster.p)
+    caps = np.floor(_mem_cap(cluster, num_vertices,
+                             num_edges)).astype(np.int64)
+    dflt = ENGINE_DEFAULTS[method]
+    if block_size is None:
+        block_size = dflt["block_size"] or auto_block_size(num_edges)
+    B = max(1, int(block_size))
+    eng = _BlockEngine(
+        state, scorer, caps, num_edges, max(1, num_vertices), block_size=B,
+        max_waves=dflt["max_waves"] if max_waves is None else max_waves,
+        replica_frac=(dflt["replica_frac"] if replica_frac is None
+                      else replica_frac), sink=sink)
+    for edges in blocks:
+        edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+        for lo in range(0, len(edges), B):
+            chunk = edges[lo:lo + B]
+            eng.push(chunk[:, 0].copy(), chunk[:, 1].copy())
+    eng.flush()
+    return state
+
+
+#: Per-method engine defaults, picked from the LJ-proxy grid
+#: (benchmarks/partition_time.run_streaming_compare): block size, waves
+#: per block before stragglers carry, and the replica-throttle fraction.
+#: EBV's binary-presence score is the staleness-sensitive one — it drains
+#: every block fully and throttles replica creation hard, trading speed
+#: for replication quality (see ROADMAP follow-up).
+ENGINE_DEFAULTS = {
+    "greedy": dict(block_size=None, max_waves=6, replica_frac=0.5),
+    "hdrf": dict(block_size=None, max_waves=3, replica_frac=1.0),
+    "ebv": dict(block_size=None, max_waves=1 << 30, replica_frac=0.25),
+}
+
+
+def _block_method(name, key, scorer_cls):
+    dflt = ENGINE_DEFAULTS[key]
+
+    def run(g: Graph, cluster: Cluster, seed: int = 0,
+            block_size: int | None = None, max_waves: int | None = None,
+            replica_frac: float | None = None, **scorer_kw) -> np.ndarray:
+        if block_size is None:
+            block_size = (dflt["block_size"]
+                          or auto_block_size(g.num_edges))
+        return block_stream_assign(
+            g, cluster, scorer_cls(**scorer_kw), seed=seed,
+            block_size=block_size,
+            max_waves=dflt["max_waves"] if max_waves is None else max_waves,
+            replica_frac=(dflt["replica_frac"] if replica_frac is None
+                          else replica_frac))
+    run.__name__ = name
+    run.__doc__ = (f"Block-stream {name} (see module docstring); "
+                   f"``block_size=1`` bit-reproduces ``{name}_oracle``.")
+    return run
+
+
+powergraph_greedy = _block_method("powergraph_greedy", "greedy", GreedyScorer)
+hdrf = _block_method("hdrf", "hdrf", HDRFScorer)
+ebv = _block_method("ebv", "ebv", EBVScorer)
+
+
+# ---------------------------------------------------------------------------
+# registry entries
+# ---------------------------------------------------------------------------
+
+from ..partitioners import Partitioner, register  # noqa: E402
+
+register(Partitioner(
+    "hash", random_hash, "streaming",
+    "random edge hash + memory spill", frozenset(), ("seed",)))
+register(Partitioner(
+    "dbh", dbh, "streaming",
+    "degree-based hashing [Xie et al. 2014]", frozenset(), ("seed",)))
+_ENGINE_KNOBS = ("seed", "block_size", "max_waves", "replica_frac")
+register(Partitioner(
+    "greedy", powergraph_greedy, "streaming",
+    "PowerGraph greedy vertex-cut, block-stream engine",
+    frozenset({"blocked"}), _ENGINE_KNOBS))
+register(Partitioner(
+    "hdrf", hdrf, "streaming",
+    "HDRF [Petroni et al. 2015], block-stream engine",
+    frozenset({"blocked"}), _ENGINE_KNOBS + ("lam", "eps")))
+register(Partitioner(
+    "ebv", ebv, "streaming",
+    "EBV [Zhang et al. 2021], block-stream engine",
+    frozenset({"blocked"}), _ENGINE_KNOBS + ("w_e", "w_v")))
+register(Partitioner(
+    "greedy_oracle", powergraph_greedy_oracle, "streaming",
+    "per-edge PowerGraph greedy (block-engine test reference)",
+    frozenset({"oracle"}), ("seed",)))
+register(Partitioner(
+    "hdrf_oracle", hdrf_oracle, "streaming",
+    "per-edge HDRF (block-engine test reference)",
+    frozenset({"oracle"}), ("seed", "lam", "eps")))
+register(Partitioner(
+    "ebv_oracle", ebv_oracle, "streaming",
+    "per-edge EBV (block-engine test reference)",
+    frozenset({"oracle"}), ("seed", "w_e", "w_v")))

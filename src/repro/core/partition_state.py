@@ -153,6 +153,7 @@ class PartitionState:
         self._c_com = self.cluster.c_com()
         self._mem = self.cluster.memory()
         self._wcsr: WorkingCSR | None = None
+        self._costs_stale = False       # set by light-path admit_block
 
     @classmethod
     def build(cls, g: "Graph", assign: np.ndarray, cluster: "Cluster"):
@@ -376,3 +377,119 @@ class PartitionState:
                         cands: np.ndarray | None = None) -> np.ndarray:
         """(|es|, |cands|) memory footprint — ``mem_after`` broadcast."""
         return self.placement_scores(es, cands)[1]
+
+    # -- block-streaming hooks ---------------------------------------------
+    def endpoint_presence(self, u: np.ndarray, v: np.ndarray):
+        """(|u|, p) bool pair: is each endpoint already present on machine i.
+
+        The replication term of every streaming scorer reads the shared
+        membership matrix (``cnt > 0``) through this one gather — the
+        block-stream engine's analogue of ``placement_scores``'s
+        ``free_u``/``free_v`` masks (``pres == ~free``).
+        """
+        u = np.asarray(u, dtype=np.int64)
+        v = np.asarray(v, dtype=np.int64)
+        return (self.cnt[:, u] > 0).T, (self.cnt[:, v] > 0).T
+
+    def admit_block(self, u: np.ndarray, v: np.ndarray,
+                    es: np.ndarray | None, ms: np.ndarray,
+                    verts_delta: np.ndarray | None = None) -> None:
+        """Admit one block-stream wave: edge ``es[j] = (u[j], v[j])`` onto
+        machine ``ms[j]``.
+
+        Without ``verts_delta`` this routes through ``add_edges`` (full
+        Eq. 3/4 accounting).  With it — the engine passes the exact
+        per-machine count of new (machine, vertex) cells, computed from
+        its wave-leader bits — the admission takes the *light* path: cnt,
+        assign, |E_i|/|V_i| and Eq. 3 update exactly, while the Eq. 4
+        replica quantities (replicas/com_sum/t_com) go stale until one
+        vectorized :meth:`refresh_costs` at stream end.  The streaming
+        scorers never read the stale fields mid-stream.
+        """
+        assert es is not None, "PartitionState admission needs edge ids"
+        if verts_delta is None:
+            self.add_edges(es, ms)
+            return
+        np.add.at(self.cnt, (ms, u), 1)
+        np.add.at(self.cnt, (ms, v), 1)
+        self.assign[es] = ms
+        dm = np.bincount(ms, minlength=self.p).astype(np.float64)
+        self.edges_per += dm
+        self.verts_per += verts_delta
+        self.t_cal += self._c_edge * dm + self._c_node * verts_delta
+        self._costs_stale = True
+
+    def refresh_costs(self) -> None:
+        """Rebuild the Eq. 4 quantities after light-path admissions."""
+        member = self.cnt > 0
+        self.replicas = member.sum(axis=0).astype(np.int64)
+        self.com_sum = member.T.astype(np.float64) @ self._c_com
+        self.t_com = t_com_from_membership(member, self.replicas,
+                                           self.com_sum, self._c_com)
+        self._costs_stale = False
+
+
+# ---------------------------------------------------------------------------
+# graph-free membership state for out-of-core edge streams
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StreamMembership:
+    """The membership slice of ``PartitionState`` without a ``Graph``.
+
+    Holds exactly the quantities the block-stream scorers read — the
+    ``(p, V)`` incidence counts plus |E_i| / |V_i| — so the same engine can
+    partition an edge stream that never materializes as a single array
+    (``data/io.iter_edge_blocks``).  Update semantics match
+    ``PartitionState`` bit for bit: a vertex is a member of machine i iff an
+    incident edge is assigned there, and the per-machine totals are float64
+    holding exact integers.
+    """
+
+    cnt: np.ndarray               # (p, V) int32 incidence counts
+    edges_per: np.ndarray         # (p,) float64 |E_i|
+    verts_per: np.ndarray         # (p,) float64 |V_i|
+
+    @classmethod
+    def empty(cls, num_vertices: int, p: int) -> "StreamMembership":
+        return cls(cnt=np.zeros((p, num_vertices), dtype=np.int32),
+                   edges_per=np.zeros(p, dtype=np.float64),
+                   verts_per=np.zeros(p, dtype=np.float64))
+
+    @property
+    def p(self) -> int:
+        return len(self.edges_per)
+
+    def endpoint_presence(self, u: np.ndarray, v: np.ndarray):
+        u = np.asarray(u, dtype=np.int64)
+        v = np.asarray(v, dtype=np.int64)
+        return (self.cnt[:, u] > 0).T, (self.cnt[:, v] > 0).T
+
+    def admit_block(self, u: np.ndarray, v: np.ndarray,
+                    es: np.ndarray | None, ms: np.ndarray,
+                    verts_delta: np.ndarray | None = None) -> None:
+        u = np.asarray(u, dtype=np.int64)
+        v = np.asarray(v, dtype=np.int64)
+        ms = np.asarray(ms, dtype=np.int64)
+        if verts_delta is None:         # recount the touched columns
+            A = np.unique(np.concatenate([u, v]))
+            before = (self.cnt[:, A] > 0).sum(axis=1)
+            np.add.at(self.cnt, (ms, u), 1)
+            np.add.at(self.cnt, (ms, v), 1)
+            after = (self.cnt[:, A] > 0).sum(axis=1)
+            verts_delta = (after - before).astype(np.float64)
+        else:                           # engine-supplied exact delta
+            np.add.at(self.cnt, (ms, u), 1)
+            np.add.at(self.cnt, (ms, v), 1)
+        self.verts_per += verts_delta
+        self.edges_per += np.bincount(ms, minlength=self.p).astype(np.float64)
+
+    @property
+    def replicas(self) -> np.ndarray:
+        """(V,) |S(v)| — derived, for end-of-stream RF reporting."""
+        return (self.cnt > 0).sum(axis=0)
+
+    def replication_factor(self) -> float:
+        r = self.replicas
+        covered = r > 0
+        return float(r[covered].sum() / max(1, covered.sum()))

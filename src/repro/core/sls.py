@@ -104,19 +104,21 @@ def _choose_machines(obj: PartitionState, es: np.ndarray):
 
 def repair_edges(obj: PartitionState, es: np.ndarray,
                  orders: list[list[int]], *,
-                 strict: bool = False, wave_frac: float = 0.5,
+                 strict: bool = False, wave_frac: float = 0.75,
                  wave_window: float | None = None) -> None:
     """BalancedGreedyRepair over an edge set, in vectorized waves.
 
     Each wave scores all pending edges × machines in one broadcast, then
-    admits the best-scoring ``wave_frac`` of them (optionally only within
-    ``wave_window`` T-units of the wave's best).  Per machine, wave-mates
-    are admitted in score order only while a *conservative* footprint bound
-    (each earlier mate adds ≤ 1 edge + 2 vertices) still fits — refused
-    edges simply stay pending for the next wave, where their scores are
-    fresh; the wave's best edge always passes (exact check), so every wave
-    makes progress.  ``strict=True``: one edge per wave in input order —
-    the scalar oracle.
+    admits the best-scoring ``wave_frac`` of them.  ``wave_window`` (in
+    (0, 1]) optionally tightens that to edges within the given fraction of
+    the selected wave's score spread above its best — a *relative* window,
+    so one setting transfers across graphs and cost scales.  Per machine,
+    wave-mates are admitted in score order only while a *conservative*
+    footprint bound (each earlier mate adds ≤ 1 edge + 2 vertices) still
+    fits — refused edges simply stay pending for the next wave, where
+    their scores are fresh; the wave's best edge always passes (exact
+    check), so every wave makes progress.  ``strict=True``: one edge per
+    wave in input order — the scalar oracle.
     """
     pending = np.asarray(es, dtype=np.int64)
     if strict:
@@ -140,7 +142,8 @@ def repair_edges(obj: PartitionState, es: np.ndarray,
         order = np.argsort(best_t, kind="stable")
         sel = order[:max(1, int(np.ceil(wave_frac * len(pending))))]
         if wave_window is not None and len(sel) > 1:
-            sel = sel[best_t[sel] <= best_t[sel[0]] + wave_window]
+            spread = best_t[sel[-1]] - best_t[sel[0]]
+            sel = sel[best_t[sel] <= best_t[sel[0]] + wave_window * spread]
         rank = cumcount(best_m[sel])
         fits = (best_mem[sel] + rank * (2.0 * m_node + m_edge)
                 <= mem[best_m[sel]] + 1e-9)
@@ -157,7 +160,7 @@ def repair_edges(obj: PartitionState, es: np.ndarray,
 def destroy_repair(obj: PartitionState, orders: list[list[int]],
                    gamma: float, theta: float,
                    rng: np.random.Generator | None = None, *,
-                   strict: bool = False, wave_frac: float = 0.5,
+                   strict: bool = False, wave_frac: float = 0.75,
                    wave_window: float | None = None) -> bool:
     """Algorithm 5. Returns True iff TC strictly improved.
 

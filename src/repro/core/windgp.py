@@ -135,3 +135,37 @@ def windgp(
     return WindGPResult(
         assign=assign, stats=stats, deltas=np.asarray(deltas),
         seconds=time.perf_counter() - t_start, phase_seconds=phases)
+
+
+# ---------------------------------------------------------------------------
+# registry entries: the driver and its two expansion engines
+# ---------------------------------------------------------------------------
+
+from .partitioners import Partitioner, register  # noqa: E402
+
+_DRIVER_KNOBS = ("alpha", "beta", "gamma", "theta", "t0", "n0", "k",
+                 "level", "seed", "repair", "scale", "batch_frac",
+                 "batch_window", "strict_ties", "hub_split", "hub_degree")
+
+
+def _windgp_assign(engine=None):
+    def run(g, cluster, **kw):
+        if engine is not None:
+            kw["engine"] = engine
+        return windgp(g, cluster, **kw).assign
+    run.__name__ = f"windgp_{engine}" if engine else "windgp"
+    return run
+
+
+register(Partitioner(
+    "windgp", _windgp_assign(), "driver",
+    "full WindGP driver (default batched engine)",
+    frozenset({"driver", "heterogeneous"}), _DRIVER_KNOBS + ("engine",)))
+register(Partitioner(
+    "windgp_heap", _windgp_assign("heap"), "driver",
+    "WindGP with the scalar heap expansion oracle",
+    frozenset({"driver", "heterogeneous"}), _DRIVER_KNOBS))
+register(Partitioner(
+    "windgp_batched", _windgp_assign("batched"), "driver",
+    "WindGP with the batched frontier-scan engine",
+    frozenset({"driver", "heterogeneous"}), _DRIVER_KNOBS))

@@ -1,6 +1,8 @@
 """Graph generators and IO (R-MAT / road mesh / SNAP edge lists)."""
 from .generators import rmat, road_mesh, erdos_renyi, graph500
-from .io import read_edge_list, write_edge_list
+from .io import (canonicalize_block, count_edge_list, iter_edge_blocks,
+                 read_edge_list, write_edge_list)
 
 __all__ = ["rmat", "road_mesh", "erdos_renyi", "graph500",
-           "read_edge_list", "write_edge_list"]
+           "read_edge_list", "write_edge_list", "iter_edge_blocks",
+           "count_edge_list", "canonicalize_block"]

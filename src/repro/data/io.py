@@ -1,14 +1,127 @@
-"""SNAP-style edge-list IO (whitespace-separated ``u v`` per line, # comments)."""
+"""SNAP-style edge-list IO (whitespace-separated ``u v`` per line, # comments).
+
+``iter_edge_blocks`` is the chunked reader behind the block-stream
+partitioning path (``core/baselines/streaming.stream_partition``): it
+yields ``(B, 2)`` int64 blocks without ever materializing the whole edge
+list, transparently handles gzip (``.gz`` suffix), tolerates empty and
+comment-only files, and applies ``from_edge_list``'s canonicalization
+blockwise — ``u < v`` swap, self-loop drop, within-block dedup (cross-block
+duplicates would need global state; callers that must dedup globally read
+through ``read_edge_list``, which routes every block into
+``from_edge_list``'s exact global dedup).
+"""
 from __future__ import annotations
+
+import gzip
+from typing import Iterator
 
 import numpy as np
 
 from ..core.graph import Graph, from_edge_list
 
+#: Default lines-per-block for the chunked reader.
+DEFAULT_BLOCK_LINES = 65536
+
+
+def _open_text(path: str):
+    if str(path).endswith(".gz"):
+        return gzip.open(path, "rt")
+    return open(path, "r")
+
+
+def _parse_lines(lines: list[str], comments: str) -> np.ndarray:
+    """Parse one buffered chunk of lines into an (n, 2) int64 array.
+
+    Comment/blank tolerance is pre-filtered cheaply; the numeric parse runs
+    through ``np.loadtxt`` (C tokenizer) — this is the hot path of the
+    out-of-core reader, so no per-edge Python loop.
+    """
+    kept = [ln for ln in lines
+            if ln.strip() and not ln.lstrip().startswith(comments)]
+    if not kept:
+        return np.empty((0, 2), dtype=np.int64)
+    try:
+        edges = np.loadtxt(kept, dtype=np.int64, comments=comments,
+                           usecols=(0, 1), ndmin=2)
+    except (ValueError, IndexError) as e:
+        raise ValueError(f"malformed edge-list block: {e}") from None
+    return edges.reshape(-1, 2)
+
+
+def canonicalize_block(edges: np.ndarray, dedup: bool = True) -> np.ndarray:
+    """``from_edge_list``'s edge canonicalization, applied to one block.
+
+    Swaps to ``u < v``, drops self loops, and (``dedup``) keeps the first
+    occurrence of each within-block duplicate, preserving arrival order.
+    """
+    edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    u = np.minimum(edges[:, 0], edges[:, 1])
+    v = np.maximum(edges[:, 0], edges[:, 1])
+    keep = u != v
+    u, v = u[keep], v[keep]
+    if dedup and len(u):
+        key = np.stack([u, v], axis=1)
+        _, first = np.unique(key, axis=0, return_index=True)
+        first.sort()                       # keep arrival order
+        u, v = u[first], v[first]
+    return np.stack([u, v], axis=1)
+
+
+def iter_edge_blocks(path: str, block_size: int = DEFAULT_BLOCK_LINES, *,
+                     comments: str = "#",
+                     canonicalize: bool = True) -> Iterator[np.ndarray]:
+    """Yield ``(<=block_size, 2)`` int64 edge blocks from a (gzipped) file.
+
+    Empty and comment-only files simply yield nothing (``np.loadtxt``
+    raises on them).  With ``canonicalize`` each block is normalized like
+    ``from_edge_list`` normalizes the whole array (u<v, no self loops,
+    within-block dedup), so downstream per-block consumers see the same
+    edge representation the in-memory path does.
+    """
+    block_size = max(1, int(block_size))
+    with _open_text(path) as f:
+        while True:
+            lines = []
+            for ln in f:
+                lines.append(ln)
+                if len(lines) >= block_size:
+                    break
+            if not lines:
+                return
+            edges = _parse_lines(lines, comments)
+            if canonicalize:
+                edges = canonicalize_block(edges)
+            if len(edges):
+                yield edges
+
+
+def count_edge_list(path: str, block_size: int = DEFAULT_BLOCK_LINES, *,
+                    comments: str = "#") -> tuple[int, int]:
+    """(num_vertices, num_edges) of a file, in one chunked pass.
+
+    ``num_vertices`` is ``max id + 1``; ``num_edges`` counts the
+    canonicalized per-block edges (the same stream ``iter_edge_blocks``
+    will later yield).  The counting pass the stream partitioner needs for
+    its memory caps (and EBV's normalization).
+    """
+    n_v = 0
+    n_e = 0
+    for blk in iter_edge_blocks(path, block_size, comments=comments):
+        n_v = max(n_v, int(blk.max()) + 1)
+        n_e += len(blk)
+    return n_v, n_e
+
 
 def read_edge_list(path: str, num_vertices: int | None = None) -> Graph:
-    edges = np.loadtxt(path, dtype=np.int64, comments="#", ndmin=2)
-    return from_edge_list(edges[:, :2], num_vertices=num_vertices)
+    """Read a whole edge list into a :class:`Graph` (exact global dedup)."""
+    blocks = list(iter_edge_blocks(path, canonicalize=False))
+    if blocks:
+        edges = np.concatenate(blocks, axis=0)
+    else:
+        edges = np.empty((0, 2), dtype=np.int64)
+    if num_vertices is None and len(edges) == 0:
+        num_vertices = 0
+    return from_edge_list(edges, num_vertices=num_vertices)
 
 
 def write_edge_list(g: Graph, path: str) -> None:

@@ -3,6 +3,10 @@
   PYTHONPATH=src python -m repro.launch.partition \
       --graph rmat:13 --super 3 --normal 6 --method windgp --out part.npz
   PYTHONPATH=src python -m repro.launch.partition --graph edges.txt ...
+
+Methods resolve through the unified partitioner registry
+(``repro.core.partitioners``); ``--block-size`` reaches every method with
+the ``blocked`` capability (the block-stream scorers).
 """
 from __future__ import annotations
 
@@ -14,7 +18,7 @@ import time
 import numpy as np
 
 from ..core import evaluate, scaled_paper_cluster, windgp
-from ..core.baselines import PARTITIONERS
+from ..core import partitioners as registry
 from ..data import graph500, read_edge_list, rmat, road_mesh
 
 
@@ -32,16 +36,18 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--graph", required=True,
                     help="rmat:<scale> | graph500:<scale> | mesh:<side> | "
-                         "path to an edge list")
+                         "path to an edge list (.gz ok)")
     ap.add_argument("--super", type=int, default=3)
     ap.add_argument("--normal", type=int, default=6)
     ap.add_argument("--slack", type=float, default=1.8)
     ap.add_argument("--method", default="windgp",
-                    choices=["windgp"] + sorted(PARTITIONERS))
+                    choices=registry.names(exclude={"oracle"}))
     ap.add_argument("--alpha", type=float, default=0.3)
     ap.add_argument("--beta", type=float, default=0.3)
     ap.add_argument("--t0", type=int, default=8)
     ap.add_argument("--theta", type=float, default=0.01)
+    ap.add_argument("--block-size", type=int, default=None,
+                    help="stream-block size for 'blocked' methods")
     ap.add_argument("--out", default=None, help=".npz output path")
     args = ap.parse_args(argv)
 
@@ -56,7 +62,15 @@ def main(argv=None):
                      t0=args.t0, theta=args.theta)
         assign, stats = res.assign, res.stats
     else:
-        assign = PARTITIONERS[args.method](g, cl)
+        part = registry.get(args.method)
+        kw = {}
+        if args.block_size is not None:
+            if not part.supports("blocked"):
+                ap.error(f"--block-size: method {part.name!r} is not a "
+                         f"block-stream method (capabilities: "
+                         f"{sorted(part.capabilities)})")
+            kw["block_size"] = args.block_size
+        assign = part(g, cl, **kw)
         stats = evaluate(g, assign, cl)
     dt = time.perf_counter() - t0
     report = {

@@ -1,0 +1,289 @@
+"""Block-stream scorer engine + partitioner registry + chunked IO.
+
+The engine's contract has three layers, each tested here:
+
+* ``block_size=1`` reproduces the per-edge streaming oracles decision for
+  decision — bitwise-equal assignments (integer/IEEE-identical arithmetic,
+  same first-argmax tie-breaks);
+* at production block sizes the invariants hold: every edge placed exactly
+  once, memory caps respected, and the light-path PartitionState
+  accounting is exact (equal to a from-scratch rebuild after
+  ``refresh_costs``);
+* the graph-free stream path (``stream_partition`` over
+  ``iter_edge_blocks``) makes the same decisions as the in-memory path on
+  the same arrival order — ``StreamMembership`` ↔ ``PartitionState``
+  cross-check.
+"""
+import gzip
+
+import numpy as np
+import pytest
+
+from repro.core import evaluate, from_edge_list, scaled_paper_cluster
+from repro.core import partitioners as registry
+from repro.core.baselines import PARTITIONERS
+from repro.core.baselines import streaming as S
+from repro.core.partition_state import PartitionState, StreamMembership
+from repro.data import (canonicalize_block, count_edge_list,
+                        iter_edge_blocks, read_edge_list, rmat)
+
+ORACLES = {"greedy": S.powergraph_greedy_oracle,
+           "hdrf": S.hdrf_oracle,
+           "ebv": S.ebv_oracle}
+BLOCKED = {"greedy": S.powergraph_greedy,
+           "hdrf": S.hdrf,
+           "ebv": S.ebv}
+
+
+@pytest.fixture(scope="module")
+def small():
+    g = rmat(8, edge_factor=8, seed=1)
+    cl = scaled_paper_cluster(3, 6, g.num_edges, slack=2.0)
+    return g, cl
+
+
+class TestBlockOracleEquivalence:
+    @pytest.mark.parametrize("method", sorted(ORACLES))
+    def test_block1_bitwise_equals_oracle(self, small, method):
+        g, cl = small
+        a_blk = BLOCKED[method](g, cl, seed=3, block_size=1)
+        a_orc = ORACLES[method](g, cl, seed=3)
+        np.testing.assert_array_equal(a_blk, a_orc)
+
+    @pytest.mark.parametrize("method", sorted(ORACLES))
+    def test_block1_bitwise_on_random_graph(self, method):
+        rng = np.random.default_rng(7)
+        g = from_edge_list(rng.integers(0, 60, size=(400, 2)),
+                           num_vertices=60)
+        cl = scaled_paper_cluster(2, 4, g.num_edges, slack=2.0)
+        np.testing.assert_array_equal(
+            BLOCKED[method](g, cl, seed=0, block_size=1),
+            ORACLES[method](g, cl, seed=0))
+
+
+class TestBlockInvariants:
+    @pytest.mark.parametrize("method", sorted(BLOCKED))
+    @pytest.mark.parametrize("block_size", [64, 512, 10 ** 6])
+    def test_every_edge_exactly_once_and_caps(self, small, method,
+                                              block_size):
+        g, cl = small
+        a = BLOCKED[method](g, cl, seed=0, block_size=block_size)
+        assert a.shape == (g.num_edges,)
+        assert a.min() >= 0 and a.max() < cl.p
+        assert np.bincount(a, minlength=cl.p).sum() == g.num_edges
+        caps = S._caps(cl, g)
+        assert np.all(np.bincount(a, minlength=cl.p) <= caps)
+        assert evaluate(g, a, cl).feasible
+
+    @pytest.mark.parametrize("method", sorted(BLOCKED))
+    def test_light_path_state_is_exact(self, small, method):
+        """Engine-final PartitionState == from-scratch rebuild, bit for
+        bit, once the deferred Eq. 4 quantities are refreshed."""
+        g, cl = small
+        scorer = S.SCORERS[method]()
+        state = PartitionState.build(
+            g, np.full(g.num_edges, -1, dtype=np.int32), cl)
+        caps = S._caps(cl, g)
+        order = scorer.stream_order(g, 0)
+        if hasattr(scorer, "reset"):
+            scorer.reset(g.num_vertices)
+        eng = S._BlockEngine(state, scorer, caps, g.num_edges,
+                             g.num_vertices, block_size=128, max_waves=3)
+        eu = g.edges[:, 0].astype(np.int64)
+        ev = g.edges[:, 1].astype(np.int64)
+        for lo in range(0, len(order), 128):
+            blk = order[lo:lo + 128]
+            eng.push(eu[blk], ev[blk], blk)
+        eng.flush()
+        state.refresh_costs()
+        ref = PartitionState.build(g, state.assign, cl)
+        for field in ("cnt", "edges_per", "verts_per", "t_cal", "t_com",
+                      "replicas", "com_sum"):
+            np.testing.assert_array_equal(getattr(state, field),
+                                          getattr(ref, field), err_msg=field)
+
+
+class TestStreamPath:
+    @pytest.mark.parametrize("method", ["greedy", "hdrf"])
+    def test_stream_matches_in_memory_on_same_order(self, tmp_path, method):
+        """Graph-free StreamMembership path ≡ PartitionState path when both
+        consume the identical arrival order."""
+        g = rmat(7, edge_factor=6, seed=4)
+        cl = scaled_paper_cluster(2, 4, g.num_edges, slack=2.0)
+        path = tmp_path / "edges.txt"
+        np.savetxt(path, g.edges, fmt="%d")
+
+        order = np.arange(g.num_edges)
+        a_mem = S.block_stream_assign(g, cl, S.SCORERS[method](),
+                                      block_size=128, seed=0, order=order,
+                                      max_waves=3, replica_frac=0.5)
+
+        got = {}
+        def sink(edges, ms):
+            for (u, v), m in zip(edges.tolist(), ms.tolist()):
+                got[(u, v)] = m
+        state = S.stream_partition(
+            iter_edge_blocks(path, 128), g.num_vertices, g.num_edges, cl,
+            method=method, block_size=128, max_waves=3, replica_frac=0.5,
+            sink=sink)
+
+        assert len(got) == g.num_edges          # every edge exactly once
+        a_stream = np.array([got[(int(u), int(v))] for u, v in g.edges])
+        np.testing.assert_array_equal(a_mem, a_stream)
+        np.testing.assert_array_equal(
+            state.edges_per, np.bincount(a_mem, minlength=cl.p))
+        assert state.replication_factor() == pytest.approx(
+            evaluate(g, a_mem, cl).rf)
+
+    def test_stream_partition_ebv_runs(self, tmp_path):
+        g = rmat(7, edge_factor=6, seed=5)
+        cl = scaled_paper_cluster(2, 4, g.num_edges, slack=2.0)
+        path = tmp_path / "edges.txt"
+        np.savetxt(path, g.edges, fmt="%d")
+        placed = []
+        S.stream_partition(iter_edge_blocks(path, 256), g.num_vertices,
+                           g.num_edges, cl, method="ebv", block_size=256,
+                           sink=lambda e, m: placed.append(len(e)))
+        assert sum(placed) == g.num_edges
+
+
+class TestRegistry:
+    def test_every_registered_partitioner_round_trips(self, small):
+        """Registry round-trip: each method yields a valid assignment."""
+        g, cl = small
+        for name in registry.names():
+            a = registry.get(name)(g, cl)
+            assert a.shape == (g.num_edges,), name
+            assert a.min() >= 0 and a.max() < cl.p, name
+
+    def test_unknown_knob_raises(self, small):
+        g, cl = small
+        with pytest.raises(TypeError, match="unknown"):
+            registry.get("hdrf")(g, cl, bogus_knob=3)
+
+    def test_unknown_name_raises(self):
+        with pytest.raises(KeyError, match="registered"):
+            registry.get("nope")
+
+    def test_capability_filters(self):
+        blocked = registry.names(require={"blocked"})
+        assert set(blocked) == {"greedy", "hdrf", "ebv"}
+        assert all(n.endswith("_oracle")
+                   for n in registry.names(require={"oracle"}))
+        assert "windgp" in registry.names(require={"driver"})
+
+    def test_partitioners_dict_excludes_oracles(self):
+        assert not any(n.endswith("_oracle") for n in PARTITIONERS)
+        assert {"hash", "dbh", "greedy", "hdrf", "ebv", "ne", "metis",
+                "windgp_heap", "windgp_batched"} <= set(PARTITIONERS)
+
+    def test_bsp_runtime_from_partitioner(self, small):
+        from repro.bsp.partition_runtime import PartitionRuntime
+        g, cl = small
+        rt = PartitionRuntime.from_partitioner(g, cl, "dbh")
+        assert rt.p == cl.p
+        assert int(rt.edges_per_machine.sum()) == g.num_edges
+
+
+class TestChunkedIO:
+    def test_iter_blocks_and_gzip(self, tmp_path):
+        edges = np.array([[0, 1], [2, 1], [3, 4], [1, 0], [5, 5], [4, 3]])
+        txt = "# comment\n" + "\n".join(f"{u} {v}" for u, v in edges) + "\n"
+        plain = tmp_path / "e.txt"
+        plain.write_text(txt)
+        gz = tmp_path / "e.txt.gz"
+        with gzip.open(gz, "wt") as f:
+            f.write(txt)
+        for path in (plain, gz):
+            blocks = list(iter_edge_blocks(path, block_size=3))
+            all_edges = np.concatenate(blocks)
+            # canonicalized: u<v, no self loops; dedup is per-block only,
+            # so the cross-block (1,0) duplicate survives (5 not 4)
+            assert (all_edges[:, 0] < all_edges[:, 1]).all()
+            assert len(all_edges) == 5
+        # whole-file read dedups globally, like from_edge_list
+        g = read_edge_list(str(plain))
+        ref = from_edge_list(edges)
+        np.testing.assert_array_equal(g.edges, ref.edges)
+
+    def test_empty_and_comment_only_files(self, tmp_path):
+        empty = tmp_path / "empty.txt"
+        empty.write_text("")
+        comments = tmp_path / "c.txt"
+        comments.write_text("# a\n# b\n\n")
+        for path in (empty, comments):
+            assert list(iter_edge_blocks(path)) == []
+            g = read_edge_list(str(path))
+            assert g.num_edges == 0
+        assert count_edge_list(empty) == (0, 0)
+
+    def test_malformed_line_raises(self, tmp_path):
+        bad = tmp_path / "bad.txt"
+        bad.write_text("1 2\n3\n")
+        with pytest.raises(ValueError, match="malformed"):
+            list(iter_edge_blocks(bad))
+
+    def test_canonicalize_block_matches_from_edge_list(self):
+        rng = np.random.default_rng(0)
+        edges = rng.integers(0, 20, size=(200, 2))
+        blk = canonicalize_block(edges)
+        ref = from_edge_list(edges, num_vertices=20)
+        # same edge *set* (canonicalize keeps arrival order, graph sorts)
+        assert (set(map(tuple, blk.tolist()))
+                == set(map(tuple, ref.edges.tolist())))
+
+    def test_count_edge_list(self, tmp_path):
+        g = rmat(6, edge_factor=4, seed=9)
+        path = tmp_path / "g.txt"
+        np.savetxt(path, g.edges, fmt="%d")
+        n_v, n_e = count_edge_list(path, block_size=7)
+        assert n_e == g.num_edges
+        assert n_v == int(g.edges.max()) + 1
+
+
+class TestExampleCLI:
+    @pytest.mark.parametrize("method", ["hdrf", "dbh"])
+    def test_partition_edgelist_end_to_end(self, tmp_path, method):
+        import importlib.util, pathlib, sys
+        spec = importlib.util.spec_from_file_location(
+            "partition_edgelist",
+            pathlib.Path(__file__).parent.parent / "examples"
+            / "partition_edgelist.py")
+        mod = importlib.util.module_from_spec(spec)
+        spec.loader.exec_module(mod)
+        g = rmat(6, edge_factor=4, seed=2)
+        path = tmp_path / "edges.txt"
+        np.savetxt(path, g.edges, fmt="%d")
+        out = tmp_path / "parts"
+        assert mod.main([str(path), "--part-method", method,
+                         "--num-parts", "4", "--block-size", "64",
+                         "--out-dir", str(out)]) == 0
+        total = 0
+        for i in range(4):
+            f = out / f"part{i}.edges"
+            assert f.exists()
+            lines = [ln for ln in f.read_text().splitlines()
+                     if ln and not ln.startswith("#")]
+            total += len(lines)
+        assert total == g.num_edges
+        assert (out / "meta.json").exists()
+
+
+class TestWaveWindow:
+    def test_relative_wave_window_keeps_invariants(self):
+        from repro.core import capacities
+        from repro.core import expand as exp_mod
+        from repro.core import sls as sls_mod
+        g = rmat(8, seed=3)
+        cl = scaled_paper_cluster(2, 4, g.num_edges, slack=2.0)
+        d = capacities(cl, g.num_vertices, g.num_edges)
+        assign, orders = exp_mod.run_expansion(
+            g, d, 0.25, 0.25, memories=cl.memory(),
+            m_node=cl.m_node, m_edge=cl.m_edge, engine="batched")
+        obj = PartitionState.build(g, assign, cl)
+        sls_mod.repair_edges(obj, np.flatnonzero(assign < 0), orders,
+                             wave_frac=0.5, wave_window=0.25)
+        assert (obj.assign >= 0).all()
+        assert np.all(obj.mem_used_all() <= cl.memory() + 1e-6)
+        ref = PartitionState.build(g, obj.assign, cl)
+        np.testing.assert_array_equal(obj.t_com, ref.t_com)
