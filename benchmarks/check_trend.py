@@ -1,0 +1,106 @@
+"""Gate smoke-benchmark metrics against the checked-in trend baseline.
+
+The tier-2 CI jobs emit flat ``{"table/metric": value}`` JSON
+(``BENCH_smoke.json``, uploaded as an artifact on every push); this script
+compares those numbers against ``benchmarks/trend_baseline.json`` and
+fails the job when a gated metric drifts past its bound — the repo's
+perf-trajectory tracking.
+
+Baseline schema, per metric::
+
+    "stream/hdrf/tc_gap": {"max": 0.02}            # fail if value > max
+    "oocore/peak_ratio":  {"max": 0.6, "min": 0}   # and/or a floor
+
+Metrics in the report but absent from the baseline are listed as
+untracked (new metrics start untracked; add bounds once their value has a
+trajectory).  Baseline entries absent from the report are skipped — the
+tier-2 matrix jobs each emit a different subset against the one shared
+baseline.
+
+Usage:
+    python -m benchmarks.check_trend BENCH_smoke.json [--baseline PATH]
+    python -m benchmarks.check_trend BENCH_smoke.json --update  # reseed
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+DEFAULT_BASELINE = pathlib.Path(__file__).parent / "trend_baseline.json"
+
+#: headroom applied by ``--update`` when reseeding a max bound
+UPDATE_SLACK = 1.25
+
+
+def check(report: dict, baseline: dict) -> list[str]:
+    """Return the list of violations (empty == all gates hold)."""
+    bad = []
+    for name, bounds in sorted(baseline.items()):
+        if name not in report:
+            print(f"  skip      {name} (not in this report)")
+            continue
+        v = report[name]
+        lo, hi = bounds.get("min"), bounds.get("max")
+        if hi is not None and v > hi:
+            bad.append(f"{name} = {v:.6g} > max {hi:.6g}")
+        elif lo is not None and v < lo:
+            bad.append(f"{name} = {v:.6g} < min {lo:.6g}")
+        else:
+            span = " ".join(f"{k}={b:.6g}" for k, b in
+                            (("min", lo), ("max", hi)) if b is not None)
+            print(f"  ok        {name} = {v:.6g}  ({span})")
+    for name in sorted(set(report) - set(baseline)):
+        print(f"  untracked {name} = {report[name]:.6g}")
+    return bad
+
+
+def update(report: dict, baseline: dict) -> dict:
+    """Reseed: keep existing bounds, add max-bounds for untracked gaps."""
+    out = dict(baseline)
+    for name, v in sorted(report.items()):
+        if name in out or not isinstance(v, (int, float)):
+            continue
+        if name.endswith(("_gap", "_frac", "_ratio")):
+            out[name] = {"max": round(max(v, 0.0) * UPDATE_SLACK + 0.01, 4)}
+            print(f"  seeded    {name}: max={out[name]['max']}")
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("reports", nargs="+",
+                    help="BENCH_smoke.json file(s) to gate")
+    ap.add_argument("--baseline", default=str(DEFAULT_BASELINE))
+    ap.add_argument("--update", action="store_true",
+                    help="seed bounds for untracked gap/frac/ratio "
+                         "metrics instead of gating")
+    args = ap.parse_args(argv)
+
+    baseline = (json.loads(pathlib.Path(args.baseline).read_text())
+                if pathlib.Path(args.baseline).exists() else {})
+    violations = []
+    merged = {}
+    for rp in args.reports:
+        report = json.loads(pathlib.Path(rp).read_text())
+        merged.update(report)
+        print(f"{rp}: {len(report)} metrics vs {args.baseline}")
+        violations += check(report, baseline)
+    if args.update:
+        pathlib.Path(args.baseline).write_text(
+            json.dumps(update(merged, baseline), indent=2, sort_keys=True)
+            + "\n")
+        print(f"updated {args.baseline}")
+        return 0
+    if violations:
+        print("\nTREND GATE FAILED:", file=sys.stderr)
+        for v in violations:
+            print(f"  {v}", file=sys.stderr)
+        return 1
+    print("trend gates hold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

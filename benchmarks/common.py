@@ -64,6 +64,26 @@ class CSV:
         print(f"{self.table}/{name},{seconds*1e6:.0f},{derived}", flush=True)
 
 
+def write_bench_json(path: str, metrics: dict) -> None:
+    """Persist a flat ``{"table/metric": value}`` dict for CI trend gating.
+
+    The tier-2 smoke jobs write their gateable numbers here
+    (``BENCH_smoke.json``); ``benchmarks/check_trend.py`` compares them
+    against the checked-in ``benchmarks/trend_baseline.json`` and the CI
+    workflow uploads the file as an artifact — the repo's perf trajectory,
+    one point per push.
+    """
+    import json
+    flat = {}
+    for k, v in metrics.items():
+        if isinstance(v, (np.floating, np.integer)):
+            v = v.item()
+        flat[k] = v
+    with open(path, "w") as f:
+        json.dump(flat, f, indent=2, sort_keys=True)
+    print(f"wrote {path} ({len(flat)} metrics)", flush=True)
+
+
 def timed(fn, *args, **kwargs):
     t0 = time.perf_counter()
     out = fn(*args, **kwargs)

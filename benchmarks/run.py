@@ -11,7 +11,7 @@ import argparse
 import inspect
 import time
 
-from . import (ablation, bsp_runtime, compare_tc, partition_time,
+from . import (ablation, bsp_runtime, compare_tc, oocore, partition_time,
                scale_graphsize, scale_machines, tc_vs_runtime, tuning)
 
 TABLES = {
@@ -24,6 +24,7 @@ TABLES = {
     "engines": partition_time.run_engine_compare,  # heap vs batched expansion
     "sls": partition_time.run_sls_compare,  # scalar vs vectorized SLS repair
     "stream": partition_time.run_streaming_compare,  # oracle vs block engine
+    "oocore": oocore.run,             # out-of-core vs in-memory pipeline
     "wave": tuning.run_wave_sweep,    # SLS wave_frac/wave_window sweep
     "tab1": tc_vs_runtime.run,        # TC ∝ runtime
     "tab15_16": bsp_runtime.run,      # distributed algorithm runtimes

@@ -1,4 +1,4 @@
-"""Partition a SNAP edge list into per-machine edge files.
+"""Partition a SNAP edge list into per-machine shards — then run on them.
 
 A dgl/graphstorm-style partitioning CLI over the unified registry and the
 chunked edge-list reader:
@@ -13,8 +13,31 @@ edge file as placements finalize; the graph is never materialized as a
 single array.  Every other registered method (``--part-method ne``,
 ``metis``, ``windgp``, ...) falls back to an in-memory graph build.
 
-Output layout: ``<out-dir>/part<i>.edges`` (one ``u v`` line per edge)
-plus ``<out-dir>/meta.json`` with counts and the replication factor.
+Output layout: ``<out-dir>/part<i>.edges`` (one ``u v`` line per edge),
+``<out-dir>/assignment/`` (the binary ``StreamAssignment`` the BSP runtime
+consumes — streaming methods only), plus ``<out-dir>/meta.json`` with
+counts and the replication factor.  ``meta.json`` is written last, via
+tmp + atomic rename, and only after every shard verified its flushed byte
+length — a crash can never leave a directory that parses as complete.
+
+Out-of-core workflow
+--------------------
+The full partition→compute pipeline on a list that never materializes:
+
+    PYTHONPATH=src python examples/partition_edgelist.py edges.txt.gz \
+        --part-method hdrf --num-parts 8 --two-pass --pagerank \
+        --out-dir parts/
+
+``--two-pass`` replaces the single-pass per-block dedup with the exact
+spill-to-disk dedup (``repro.data.TwoPassDedup``): pass one hashes
+canonicalized edges into bounded disk buckets, pass two streams each
+bucket back globally deduplicated in first-occurrence order, so the
+partitioner sees every edge exactly once while peak edge residency stays
+bounded by the spill-bucket accounting (reported in meta.json under
+``spill``).  ``--pagerank`` then packs the streamed shards into the BSP
+runtime (``PartitionRuntime.from_stream`` — reads one machine's shard at
+a time, never the raw list) and runs distributed PageRank supersteps on
+the partition it just built — the paper's end-to-end claim, out of core.
 """
 from __future__ import annotations
 
@@ -26,10 +49,89 @@ import time
 
 import numpy as np
 
-from repro.core import evaluate, scaled_paper_cluster
+from repro.bsp import (PartitionRuntime, StreamAssignment, pagerank,
+                       write_json_atomic)
+from repro.core import evaluate, evaluate_membership, scaled_paper_cluster
 from repro.core import partitioners as registry
-from repro.core.baselines.streaming import stream_partition
-from repro.data import count_edge_list, iter_edge_blocks, read_edge_list
+from repro.data import TwoPassDedup, count_edge_list, read_edge_list
+
+
+def _partition_streaming(args, part, out: pathlib.Path):
+    """Graph-free path: count → (optional two-pass dedup) → stream.
+
+    Returns (num_v, num_e, stats, StreamAssignment, spill_stats).
+    """
+    source: object
+    if args.two_pass:
+        print(f"spilling+deduplicating {args.edge_list} ...", flush=True)
+        source = TwoPassDedup(args.edge_list, block_size=args.block_size,
+                              bucket_rows=args.bucket_rows)
+        num_v, num_e = source.prepare()
+    else:
+        print(f"counting {args.edge_list} ...", flush=True)
+        # same block size as the partitioning pass, so both passes see the
+        # identical canonicalized stream (dedup is per-block)
+        num_v, num_e = count_edge_list(args.edge_list, args.block_size)
+        source = args.edge_list
+    n_super = args.n_super or max(1, args.num_parts // 3)
+    cl = scaled_paper_cluster(n_super, args.num_parts - n_super, num_e,
+                              slack=args.slack)
+    print(f"V={num_v} E={num_e} p={cl.p} method={part.name} "
+          f"(kind={part.kind}, caps={sorted(part.capabilities)})")
+
+    sa = StreamAssignment(out / "assignment", cl.p, num_v)
+    files = [open(out / f"part{i}.edges", "w") for i in range(cl.p)]
+    try:
+        def sink(edges, ms):
+            sa.sink(edges, ms)
+            for i in np.unique(ms):
+                np.savetxt(files[int(i)], edges[ms == i], fmt="%d")
+
+        state = part.stream(
+            source, num_v, num_e, cl,
+            dedup="two_pass" if args.two_pass else "block",
+            block_size=args.block_size, sink=sink)
+    except BaseException:
+        sa.close()          # abort: drop shard handles, publish nothing
+        raise
+    finally:
+        for f in files:
+            f.close()
+        if args.two_pass:
+            source.close()
+    stats = evaluate_membership(state.cnt > 0, state.edges_per, cl)
+    sa.finalize(state, {"method": part.name,
+                        "dedup": "two_pass" if args.two_pass else "block"})
+    return num_v, num_e, stats, sa, state.spill_stats
+
+
+def _partition_in_memory(args, part, out: pathlib.Path):
+    """Fallback for non-streamable methods: materialize the graph."""
+    g = read_edge_list(args.edge_list)
+    num_v, num_e = g.num_vertices, g.num_edges
+    n_super = args.n_super or max(1, args.num_parts // 3)
+    cl = scaled_paper_cluster(n_super, args.num_parts - n_super, num_e,
+                              slack=args.slack)
+    print(f"V={num_v} E={num_e} p={cl.p} method={part.name} "
+          f"(kind={part.kind}, caps={sorted(part.capabilities)})")
+    assign = part(g, cl)
+    stats = evaluate(g, assign, cl)
+    sa = StreamAssignment(out / "assignment", cl.p, num_v)
+    files = [open(out / f"part{i}.edges", "w") for i in range(cl.p)]
+    try:
+        sa.sink(g.edges.astype(np.int64), assign.astype(np.int64))
+        for i in range(cl.p):
+            np.savetxt(files[i], g.edges[assign == i], fmt="%d")
+    except BaseException:
+        sa.close()
+        raise
+    finally:
+        for f in files:
+            f.close()
+    from repro.core.machines import vertex_partition_sets
+    sa.finalize(vertex_partition_sets(g, assign, cl.p),
+                {"method": part.name, "dedup": "in_memory"})
+    return num_v, num_e, stats, sa, None
 
 
 def main(argv=None):
@@ -43,66 +145,74 @@ def main(argv=None):
                          "(0 = one in three, the paper's default mix)")
     ap.add_argument("--block-size", type=int, default=4096)
     ap.add_argument("--slack", type=float, default=1.8)
+    ap.add_argument("--two-pass", action="store_true",
+                    help="exact out-of-core dedup via spill buckets "
+                         "(streaming methods; default is per-block dedup)")
+    ap.add_argument("--bucket-rows", type=int, default=1 << 16,
+                    help="--two-pass spill-bucket row target (bounds peak "
+                         "edge residency)")
+    ap.add_argument("--pagerank", action="store_true",
+                    help="after partitioning, pack the BSP runtime from "
+                         "the shards and run distributed PageRank")
+    ap.add_argument("--pagerank-iters", type=int, default=30)
     ap.add_argument("--out-dir", default="parts")
     args = ap.parse_args(argv)
 
     part = registry.get(args.part_method)
+    if args.two_pass and not part.supports("streamable"):
+        ap.error(f"--two-pass: {part.name!r} is not streamable "
+                 f"(in-memory methods dedup exactly already)")
     out = pathlib.Path(args.out_dir)
     out.mkdir(parents=True, exist_ok=True)
 
-    print(f"counting {args.edge_list} ...", flush=True)
-    # same block size as the partitioning pass, so both passes see the
-    # identical canonicalized stream (dedup is per-block)
-    num_v, num_e = count_edge_list(args.edge_list, args.block_size)
-    n_super = args.n_super or max(1, args.num_parts // 3)
-    cl = scaled_paper_cluster(n_super, args.num_parts - n_super, num_e,
-                              slack=args.slack)
-    print(f"V={num_v} E={num_e} p={cl.p} method={part.name} "
-          f"(kind={part.kind}, caps={sorted(part.capabilities)})")
-
-    files = [open(out / f"part{i}.edges", "w") for i in range(cl.p)]
-    counts = np.zeros(cl.p, dtype=np.int64)
     t0 = time.perf_counter()
-    try:
-        if part.supports("blocked"):
-            # true streaming path: the graph never materializes
-            def sink(edges, ms):
-                counts[:] = counts + np.bincount(ms, minlength=cl.p)
-                for i in np.unique(ms):
-                    np.savetxt(files[int(i)], edges[ms == i], fmt="%d")
-
-            state = stream_partition(
-                iter_edge_blocks(args.edge_list, args.block_size),
-                num_v, num_e, cl, method=part.name,
-                block_size=args.block_size, sink=sink)
-            rf = state.replication_factor()
-        else:
-            g = read_edge_list(args.edge_list)
-            # global dedup can shrink the edge count vs the per-block
-            # counting pass; the written total must match the graph
-            num_e = g.num_edges
-            assign = part(g, cl)
-            stats = evaluate(g, assign, cl)
-            rf = stats.rf
-            for i in range(cl.p):
-                sel = g.edges[assign == i]
-                counts[i] = len(sel)
-                np.savetxt(files[i], sel, fmt="%d")
-    finally:
-        for f in files:
-            f.close()
+    if part.supports("streamable"):
+        num_v, num_e, stats, sa, spill = _partition_streaming(args, part, out)
+    else:
+        num_v, num_e, stats, sa, spill = _partition_in_memory(args, part, out)
     dt = time.perf_counter() - t0
 
+    counts = sa.edges_per
     meta = {
-        "method": part.name, "num_parts": cl.p, "num_vertices": num_v,
-        "num_edges": num_e, "block_size": args.block_size,
-        "seconds": round(dt, 3), "replication_factor": round(float(rf), 4),
+        "method": part.name, "num_parts": sa.p, "num_vertices": num_v,
+        "num_edges": int(counts.sum()), "block_size": args.block_size,
+        "dedup": sa.meta["dedup"],
+        "seconds": round(dt, 3),
+        "TC": stats.tc,
+        "replication_factor": round(float(stats.rf), 4),
         "edges_per_part": counts.tolist(),
-        "files": [f"part{i}.edges" for i in range(cl.p)],
+        "files": [f"part{i}.edges" for i in range(sa.p)],
+        "assignment_dir": "assignment",
     }
-    (out / "meta.json").write_text(json.dumps(meta, indent=2))
+    if spill is not None:
+        meta["spill"] = {
+            "num_buckets": spill.num_buckets,
+            "bucket_rows": spill.bucket_rows,
+            "spilled_rows": spill.spilled_rows,
+            "duplicate_rows": spill.duplicate_rows,
+            "max_bucket_rows": spill.max_bucket_rows,
+            "peak_resident_rows": spill.peak_resident_rows,
+        }
+    # every edge exactly once: the written total must equal the
+    # *independently counted* stream size (exact dedup count in two-pass
+    # mode, the same-window per-block count otherwise)
+    assert int(counts.sum()) == num_e, \
+        f"wrote {int(counts.sum())} edges, counted {num_e}"
+    # shards were verified in sa.finalize(); only now publish the manifest,
+    # atomically — readers either see no meta.json or a complete one
+    write_json_atomic(out / "meta.json", meta)
     print(json.dumps(meta, indent=2))
-    assert int(counts.sum()) == num_e, "every edge exactly once"
+
+    if args.pagerank:
+        t0 = time.perf_counter()
+        rt = PartitionRuntime.from_stream(sa)
+        pr, _ = pagerank(rt, num_iters=args.pagerank_iters)
+        dt_pr = time.perf_counter() - t0
+        top = np.argsort(pr)[::-1][:5]
+        print(f"pagerank: {args.pagerank_iters} supersteps on p={rt.p} "
+              f"machines (R={rt.num_replicas} replicas) in {dt_pr:.2f}s; "
+              f"mass={pr.sum():.6f}")
+        print("top-5:", {int(v): round(float(pr[v]), 6) for v in top})
     return 0
 
 

@@ -6,11 +6,13 @@ vertex synchronization is a fixed-shape collective over the replicated-
 vertex table — TPU-native, and its size shrinks with partition quality.
 """
 from .partition_runtime import PartitionRuntime
+from .stream_assignment import StreamAssignment, write_json_atomic
 from .apps import (pagerank, sssp, bfs, triangle_count,
                    connected_components)
 from . import ref
 from .simulate import simulate_superstep_times, simulate_runtime
 
-__all__ = ["PartitionRuntime", "pagerank", "sssp", "bfs", "triangle_count",
+__all__ = ["PartitionRuntime", "StreamAssignment", "write_json_atomic",
+           "pagerank", "sssp", "bfs", "triangle_count",
            "connected_components",
            "ref", "simulate_superstep_times", "simulate_runtime"]

@@ -103,6 +103,65 @@ class PartitionRuntime:
             edges_per_machine=np.array([len(e) for e in edges_]))
 
     @classmethod
+    def from_stream(cls, assignment,
+                    edge_weights=None) -> "PartitionRuntime":
+        """Pack the BSP runtime from an on-disk :class:`StreamAssignment`.
+
+        The out-of-core counterpart of :meth:`build`: no ``Graph`` and no
+        global edge array — vertex membership, global degrees, and the
+        replica table come from the assignment's streamed state, and each
+        machine's shard is read one at a time, so peak residency during
+        packing is one machine's edge set plus the fixed-shape output.
+        ``edge_weights`` may be a callable ``(edges_i, i) -> (k_i,)`` (the
+        global edge-id order of :meth:`build` does not exist here).
+        """
+        from .stream_assignment import StreamAssignment
+        if not isinstance(assignment, StreamAssignment):
+            assignment = StreamAssignment.open(assignment)
+        p, V = assignment.p, assignment.num_vertices
+        member = assignment.membership()
+        deg = assignment.degree.astype(np.int32)
+
+        member_count = member.sum(axis=0).astype(np.int32)
+        rep_vertices = np.flatnonzero(member_count >= 2)
+        rep_index = np.full(V, -1, dtype=np.int32)
+        rep_index[rep_vertices] = np.arange(len(rep_vertices), dtype=np.int32)
+
+        verts_per = member.sum(axis=1).astype(np.int64)
+        edges_per = assignment.edges_per.astype(np.int64)
+        vmax = max(1, int(verts_per.max(initial=0)))
+        emax = max(1, int(edges_per.max(initial=0)))
+
+        lv = np.full((p, vmax), -1, dtype=np.int32)
+        vv = np.zeros((p, vmax), dtype=bool)
+        le = np.zeros((p, emax, 2), dtype=np.int32)
+        ev = np.zeros((p, emax), dtype=bool)
+        ew = np.zeros((p, emax), dtype=np.float32)
+        gd = np.ones((p, vmax), dtype=np.int32)
+        rs = np.full((p, vmax), -1, dtype=np.int32)
+        lut = np.full(V, -1, dtype=np.int64)
+        for i in range(p):
+            verts = np.flatnonzero(member[i])
+            lut[verts] = np.arange(len(verts))
+            edges_i = assignment.machine_edges(i)     # one shard at a time
+            nv, ne = len(verts), len(edges_i)
+            assert ne == edges_per[i], (i, ne, edges_per[i])
+            lv[i, :nv] = verts
+            vv[i, :nv] = True
+            gd[i, :nv] = deg[verts]
+            rs[i, :nv] = rep_index[verts]
+            if ne:
+                le[i, :ne] = lut[edges_i]
+                ev[i, :ne] = True
+                ew[i, :ne] = (1.0 if edge_weights is None
+                              else edge_weights(edges_i, i))
+        return cls(
+            p=p, num_vertices=V, num_replicas=len(rep_vertices),
+            local_vertex_gid=lv, vertex_valid=vv, local_edges=le,
+            edge_valid=ev, edge_weight=ew, global_degree=gd, rep_slot=rs,
+            verts_per_machine=verts_per, edges_per_machine=edges_per)
+
+    @classmethod
     def from_partitioner(cls, g: Graph, cluster, method: str = "windgp",
                          edge_weights: np.ndarray | None = None,
                          **knobs) -> "PartitionRuntime":

@@ -1,0 +1,222 @@
+"""Compact on-disk product of a streaming partition: the BSP hand-off.
+
+``stream_partition`` finalizes placements through a sink callback; before
+this module the sink's output dead-ended in ad-hoc per-machine text files —
+no runtime could consume them without re-reading (and re-deduplicating) the
+raw edge list.  :class:`StreamAssignment` is the DistDGL-style durable
+artifact in between: per-machine binary edge shards plus the vertex
+membership/degree state, built *incrementally* as the stream runs, that
+``PartitionRuntime.from_stream`` packs into the fixed-shape BSP arrays one
+machine at a time — the raw list is never read again and the full edge set
+never materializes in one array.
+
+Layout under ``dir/``::
+
+    shard<i>.edges    raw int64 (k_i, 2) endpoint pairs, appended in
+                      admission order (placement order, not arrival order)
+    state.npz         packed (p, V) membership bits, (V,) global degrees,
+                      (p,) per-machine edge counts
+    meta.json         counts, replication factor, method provenance —
+                      written atomically (tmp + rename), last, and only
+                      after every shard verifies against its byte length
+
+The write protocol makes partial products detectable: a directory with no
+``meta.json`` is unfinished by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pathlib
+
+import numpy as np
+
+#: bytes per on-disk edge row (two little-endian int64 endpoints)
+_ROW_BYTES = 16
+
+_FORMAT_VERSION = 1
+
+
+@dataclasses.dataclass
+class StreamAssignment:
+    """Per-machine edge shards + membership, streamed to disk incrementally.
+
+    Writer life-cycle: construct with ``p``/``num_vertices``, hand
+    :meth:`sink` to ``stream_partition``, then :meth:`finalize` with the
+    end-of-stream ``StreamMembership``.  Reader life-cycle:
+    :meth:`StreamAssignment.open` on a finalized directory, then
+    :meth:`machine_edges`/:meth:`membership` (or hand the whole object to
+    ``PartitionRuntime.from_stream``).
+    """
+
+    dir: pathlib.Path
+    p: int
+    num_vertices: int
+    edges_per: np.ndarray            # (p,) int64 edges appended per shard
+    degree: np.ndarray               # (V,) int64 degree in the deduped graph
+    meta: dict | None = None         # populated on finalize/open
+
+    def __init__(self, out_dir, p: int, num_vertices: int):
+        self.dir = pathlib.Path(out_dir)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.p = int(p)
+        self.num_vertices = int(num_vertices)
+        self.edges_per = np.zeros(self.p, dtype=np.int64)
+        self.degree = np.zeros(self.num_vertices, dtype=np.int64)
+        self.meta = None
+        self._member: np.ndarray | None = None
+        self._files = [open(self._shard_path(i), "wb")
+                       for i in range(self.p)]
+
+    def _shard_path(self, i: int) -> pathlib.Path:
+        return self.dir / f"shard{i}.edges"
+
+    # -- incremental build (the stream sink) --------------------------------
+    def sink(self, edges: np.ndarray, ms: np.ndarray) -> None:
+        """Append one finalized placement wave: ``edges[j] -> ms[j]``.
+
+        Matches ``stream_partition``'s sink contract; each edge arrives
+        exactly once, so the running degree counts equal the deduplicated
+        graph's degrees at stream end.
+        """
+        edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+        ms = np.asarray(ms, dtype=np.int64)
+        np.add.at(self.degree, edges.ravel(), 1)
+        order = np.argsort(ms, kind="stable")
+        rows, srt = edges[order], ms[order]
+        bounds = np.searchsorted(srt, np.arange(self.p + 1))
+        for i in range(self.p):
+            lo, hi = bounds[i], bounds[i + 1]
+            if hi > lo:
+                rows[lo:hi].tofile(self._files[i])
+        self.edges_per += np.bincount(ms, minlength=self.p)
+
+    def close(self) -> None:
+        """Close the shard handles without publishing (abort path).
+
+        Idempotent; safe after :meth:`finalize` (which closes them
+        itself).  The directory is left as an unfinished product — no
+        ``meta.json``, so readers reject it — instead of leaking ``p``
+        open file descriptors when the stream raises mid-run.
+        """
+        for f in self._files:
+            if not f.closed:
+                f.close()
+
+    def __enter__(self) -> "StreamAssignment":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def finalize(self, membership, extra_meta: dict | None = None) -> dict:
+        """Flush + verify every shard, persist state, then write meta.
+
+        ``membership`` is the end-of-stream ``StreamMembership`` (or a
+        raw ``(p, V)`` bool matrix).  Verification is byte-accurate: each
+        shard's on-disk length must equal ``edges_per[i]`` rows, and the
+        membership totals must agree with what the sink saw — only then is
+        ``meta.json`` written (tmp + ``os.replace``), so a crash mid-write
+        can never leave a directory that parses as complete.
+        """
+        for f in self._files:
+            if not f.closed:
+                f.flush()
+                os.fsync(f.fileno())
+                f.close()
+        for i in range(self.p):
+            want = int(self.edges_per[i]) * _ROW_BYTES
+            got = self._shard_path(i).stat().st_size
+            if got != want:
+                raise IOError(
+                    f"shard {i} short-flushed: {got} bytes on disk, "
+                    f"expected {want} ({int(self.edges_per[i])} edges)")
+        member = (membership if isinstance(membership, np.ndarray)
+                  else membership.cnt > 0)
+        member = np.asarray(member, dtype=bool)
+        if member.shape != (self.p, self.num_vertices):
+            raise ValueError(f"membership shape {member.shape} != "
+                             f"{(self.p, self.num_vertices)}")
+        sunk = np.flatnonzero(self.degree > 0)
+        held = np.flatnonzero(member.any(axis=0))
+        if not np.array_equal(sunk, held):
+            raise ValueError("membership disagrees with the sunk edges: "
+                             "a vertex is held iff an incident edge placed")
+        self._member = member
+        np.savez_compressed(
+            self.dir / "state.npz",
+            member_bits=np.packbits(member, axis=1),
+            degree=self.degree, edges_per=self.edges_per)
+        replicas = member.sum(axis=0)
+        covered = replicas > 0
+        rf = float(replicas[covered].sum() / max(1, covered.sum()))
+        meta = {
+            "format_version": _FORMAT_VERSION,
+            "p": self.p, "num_vertices": self.num_vertices,
+            "num_edges": int(self.edges_per.sum()),
+            "edges_per_machine": self.edges_per.tolist(),
+            "verts_per_machine": member.sum(axis=1).astype(int).tolist(),
+            "replication_factor": round(rf, 6),
+            "shards": [self._shard_path(i).name for i in range(self.p)],
+        }
+        meta.update(extra_meta or {})
+        write_json_atomic(self.dir / "meta.json", meta)
+        self.meta = meta
+        return meta
+
+    # -- reader surface ------------------------------------------------------
+    @classmethod
+    def open(cls, out_dir) -> "StreamAssignment":
+        """Open a finalized assignment directory (meta.json required)."""
+        d = pathlib.Path(out_dir)
+        meta_path = d / "meta.json"
+        if not meta_path.exists():
+            raise FileNotFoundError(
+                f"{d} has no meta.json — unfinished StreamAssignment "
+                f"(finalize() never completed)")
+        meta = json.loads(meta_path.read_text())
+        if meta["format_version"] != _FORMAT_VERSION:
+            raise ValueError(f"unsupported StreamAssignment format "
+                             f"{meta['format_version']}")
+        sa = cls.__new__(cls)
+        sa.dir = d
+        sa.p = int(meta["p"])
+        sa.num_vertices = int(meta["num_vertices"])
+        sa.meta = meta
+        sa._files = []
+        with np.load(d / "state.npz") as z:
+            sa.degree = z["degree"]
+            sa.edges_per = z["edges_per"]
+            bits = z["member_bits"]
+        sa._member = np.unpackbits(
+            bits, axis=1, count=sa.num_vertices).astype(bool)
+        np.testing.assert_array_equal(
+            sa.edges_per, np.asarray(meta["edges_per_machine"]))
+        return sa
+
+    def membership(self) -> np.ndarray:
+        """(p, V) bool — vertex v held by machine i (v ∈ V_i)."""
+        if self._member is None:
+            raise RuntimeError("membership unavailable before finalize()")
+        return self._member
+
+    def machine_edges(self, i: int) -> np.ndarray:
+        """(k_i, 2) int64 endpoints of machine i's shard (one machine's
+        worth of memory, read on demand)."""
+        return np.fromfile(self._shard_path(i),
+                           dtype=np.int64).reshape(-1, 2)
+
+    def replication_factor(self) -> float:
+        member = self.membership()
+        r = member.sum(axis=0)
+        covered = r > 0
+        return float(r[covered].sum() / max(1, covered.sum()))
+
+
+def write_json_atomic(path, payload: dict) -> None:
+    """Write JSON via tmp + ``os.replace`` so readers never see a torn file."""
+    path = pathlib.Path(path)
+    tmp = path.with_name(path.name + ".tmp")
+    tmp.write_text(json.dumps(payload, indent=2))
+    os.replace(tmp, path)

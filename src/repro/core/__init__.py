@@ -1,14 +1,15 @@
 """WindGP core: heterogeneous-machine edge partitioning (the paper's contribution)."""
 from .graph import Graph, from_edge_list
 from .machines import (Cluster, Machine, PartitionStats, evaluate,
-                       paper_cluster, quantify_machines, replication_factor,
-                       scaled_paper_cluster)
+                       evaluate_membership, paper_cluster, quantify_machines,
+                       replication_factor, scaled_paper_cluster)
 from .capacity import capacities, exact_capacity_relaxed, effective_cost
 from .windgp import WindGPResult, windgp
 
 __all__ = [
     "Graph", "from_edge_list", "Cluster", "Machine", "PartitionStats",
-    "evaluate", "paper_cluster", "scaled_paper_cluster", "quantify_machines",
+    "evaluate", "evaluate_membership", "paper_cluster",
+    "scaled_paper_cluster", "quantify_machines",
     "replication_factor", "capacities", "exact_capacity_relaxed",
     "effective_cost", "WindGPResult", "windgp",
 ]

@@ -599,26 +599,86 @@ def block_stream_assign(g: Graph, cluster: Cluster, scorer, *,
     return state.assign
 
 
-def stream_partition(blocks, num_vertices: int, num_edges: int,
-                     cluster: Cluster, method: str = "hdrf", *,
+def _resolve_stream_source(source, num_vertices, num_edges, *,
+                           dedup: str, spill_dir, bucket_rows, io_block):
+    """Normalize ``stream_partition``'s edge source to (blocks, |V|, |E|).
+
+    ``source`` may be a block iterable (the historical contract), an
+    edge-list path, or a prepared :class:`repro.data.TwoPassDedup`.  With
+    ``dedup="two_pass"`` a path is spilled/deduplicated out of core first
+    (exact counts come back from the spill accounting); with
+    ``dedup="block"`` a path streams through ``iter_edge_blocks`` with
+    per-block dedup only, counting once when counts were not supplied.
+    Returns ``(blocks, num_vertices, num_edges, spill, owned)`` — ``spill``
+    is the TwoPassDedup in play (for its accounting), ``owned`` marks that
+    it was created here and must be closed at stream end.
+    """
+    import os
+    from ...data import io as _io
+    if dedup not in ("block", "two_pass"):
+        raise ValueError(f"dedup must be 'block' or 'two_pass', got {dedup!r}")
+    if isinstance(source, _io.TwoPassDedup):
+        nv, ne = source.prepare()
+        return source, nv, ne, source, False
+    if isinstance(source, (str, os.PathLike)):
+        if dedup == "two_pass":
+            tp = _io.TwoPassDedup(source, spill_dir,
+                                  bucket_rows=bucket_rows)
+            nv, ne = tp.prepare()
+            return tp, nv, ne, tp, True
+        io_block = io_block or _io.DEFAULT_BLOCK_LINES
+        if num_vertices is None or num_edges is None:
+            num_vertices, num_edges = _io.count_edge_list(source, io_block)
+        return _io.iter_edge_blocks(source, io_block), \
+            num_vertices, num_edges, None, False
+    if dedup == "two_pass":
+        raise ValueError(
+            "dedup='two_pass' needs a re-readable edge-list path (or a "
+            "prepared TwoPassDedup), not an exhaustible block iterator")
+    if num_vertices is None or num_edges is None:
+        raise ValueError("block iterables need explicit num_vertices/"
+                         "num_edges (use a path to let the stream count)")
+    return source, num_vertices, num_edges, None, False
+
+
+def stream_partition(source, num_vertices: int | None = None,
+                     num_edges: int | None = None,
+                     cluster: Cluster = None, method: str = "hdrf", *,
+                     dedup: str = "block", spill_dir: str | None = None,
+                     bucket_rows: int = 1 << 16,
                      block_size: int | None = None,
                      max_waves: int | None = None,
                      replica_frac: float | None = None, sink=None,
                      **scorer_kw) -> StreamMembership:
     """Partition an edge stream that never materializes as one array.
 
-    ``blocks`` yields (B, 2) int arrays (``data/io.iter_edge_blocks``);
-    stream order is arrival order (EBV's degree sort is not available
-    without a second pass — documented deviation).  ``num_vertices`` and
-    ``num_edges`` come from a counting pass (both are needed for the
-    memory caps; EBV also normalizes by them).  Each incoming block is
-    re-chunked to ``block_size`` and pushed through the same wave engine
-    as the in-memory path, over the graph-free ``StreamMembership`` state;
-    ``sink(edges, ms)`` receives ``((k, 2) endpoints, (k,) machines)``
-    slices as placements finalize — admission-wave order, not arrival
-    order, since deferred edges carry across blocks.  Returns the
-    end-of-stream membership state (RF, counts).
+    ``source`` yields (B, 2) int arrays (``data/io.iter_edge_blocks``), or
+    is an edge-list path, or a prepared ``TwoPassDedup``; stream order is
+    arrival order (EBV's degree sort is not available without a sort pass
+    — documented deviation).  ``num_vertices`` and ``num_edges`` come from
+    a counting pass (both are needed for the memory caps; EBV also
+    normalizes by them) and may be ``None`` when ``source`` can count
+    itself (a path or a TwoPassDedup).
+
+    ``dedup`` picks the cross-block duplicate discipline: ``"block"`` (the
+    single-pass mode — within-block dedup only, duplicates that span
+    blocks are partitioned twice) or ``"two_pass"`` (exact global dedup
+    via bounded spill buckets on disk; the engine then sees every edge
+    exactly once, in first-occurrence order, so its decisions are
+    comparable to the in-memory path on the deduplicated graph).
+
+    Each incoming block is re-chunked to ``block_size`` and pushed through
+    the same wave engine as the in-memory path, over the graph-free
+    ``StreamMembership`` state; ``sink(edges, ms)`` receives ``((k, 2)
+    endpoints, (k,) machines)`` slices as placements finalize —
+    admission-wave order, not arrival order, since deferred edges carry
+    across blocks.  Returns the end-of-stream membership state (RF,
+    counts); after a two-pass run its ``spill_stats`` attribute carries
+    the :class:`repro.data.SpillStats` accounting.
     """
+    blocks, num_vertices, num_edges, spill, owned = _resolve_stream_source(
+        source, num_vertices, num_edges, dedup=dedup, spill_dir=spill_dir,
+        bucket_rows=bucket_rows, io_block=block_size)
     scorer = SCORERS[method](**scorer_kw)
     if hasattr(scorer, "reset"):
         scorer.reset(num_vertices)
@@ -634,12 +694,37 @@ def stream_partition(blocks, num_vertices: int, num_edges: int,
         max_waves=dflt["max_waves"] if max_waves is None else max_waves,
         replica_frac=(dflt["replica_frac"] if replica_frac is None
                       else replica_frac), sink=sink)
-    for edges in blocks:
-        edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
-        for lo in range(0, len(edges), B):
-            chunk = edges[lo:lo + B]
-            eng.push(chunk[:, 0].copy(), chunk[:, 1].copy())
-    eng.flush()
+    try:
+        # re-chunk the source to exact engine-block boundaries: the wave
+        # engine's admission quotas key off its block size, so decisions
+        # must not depend on how the *source* happened to chunk the stream
+        # (spill-merge emit sizes, reader line blocks, ...)
+        pend: list = []
+        npend = 0
+        for edges in blocks:
+            edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+            if not len(edges):
+                continue
+            pend.append(edges)
+            npend += len(edges)
+            if npend < B:
+                continue
+            buf = np.concatenate(pend) if len(pend) > 1 else pend[0]
+            lo = 0
+            while lo + B <= len(buf):
+                eng.push(buf[lo:lo + B, 0].copy(), buf[lo:lo + B, 1].copy())
+                lo += B
+            pend = [buf[lo:]] if lo < len(buf) else []
+            npend = len(buf) - lo
+        if npend:
+            buf = np.concatenate(pend) if len(pend) > 1 else pend[0]
+            eng.push(buf[:, 0].copy(), buf[:, 1].copy())
+        eng.flush()
+    finally:
+        if owned:
+            spill.close()
+    if spill is not None:
+        state.spill_stats = spill.stats
     return state
 
 
@@ -695,18 +780,39 @@ register(Partitioner(
     "dbh", dbh, "streaming",
     "degree-based hashing [Xie et al. 2014]", frozenset(), ("seed",)))
 _ENGINE_KNOBS = ("seed", "block_size", "max_waves", "replica_frac")
+#: knobs of the graph-free ``stream`` entry (``Partitioner.stream``):
+#: engine knobs minus ``seed`` (stream order is arrival order), plus the
+#: dedup discipline, spill controls, and the placement sink.
+_STREAM_KNOBS = ("block_size", "max_waves", "replica_frac",
+                 "dedup", "spill_dir", "bucket_rows", "sink")
+
+
+def _stream_entry(key):
+    def run(source, num_vertices=None, num_edges=None, cluster=None,
+            **kw) -> StreamMembership:
+        return stream_partition(source, num_vertices, num_edges, cluster,
+                                method=key, **kw)
+    run.__name__ = f"stream_{key}"
+    return run
+
+
 register(Partitioner(
     "greedy", powergraph_greedy, "streaming",
     "PowerGraph greedy vertex-cut, block-stream engine",
-    frozenset({"blocked"}), _ENGINE_KNOBS))
+    frozenset({"blocked", "streamable"}), _ENGINE_KNOBS,
+    stream_fn=_stream_entry("greedy"), stream_knobs=_STREAM_KNOBS))
 register(Partitioner(
     "hdrf", hdrf, "streaming",
     "HDRF [Petroni et al. 2015], block-stream engine",
-    frozenset({"blocked"}), _ENGINE_KNOBS + ("lam", "eps")))
+    frozenset({"blocked", "streamable"}), _ENGINE_KNOBS + ("lam", "eps"),
+    stream_fn=_stream_entry("hdrf"),
+    stream_knobs=_STREAM_KNOBS + ("lam", "eps")))
 register(Partitioner(
     "ebv", ebv, "streaming",
     "EBV [Zhang et al. 2021], block-stream engine",
-    frozenset({"blocked"}), _ENGINE_KNOBS + ("w_e", "w_v")))
+    frozenset({"blocked", "streamable"}), _ENGINE_KNOBS + ("w_e", "w_v"),
+    stream_fn=_stream_entry("ebv"),
+    stream_knobs=_STREAM_KNOBS + ("w_e", "w_v")))
 register(Partitioner(
     "greedy_oracle", powergraph_greedy_oracle, "streaming",
     "per-edge PowerGraph greedy (block-engine test reference)",

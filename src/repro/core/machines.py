@@ -134,15 +134,20 @@ def vertex_partition_sets(graph, assign: np.ndarray, p: int):
     return edge_incidence_counts(graph, assign, p) > 0
 
 
-def evaluate(graph, assign: np.ndarray, cluster: Cluster) -> PartitionStats:
-    """Compute TC/RF and per-machine costs for an edge assignment.
+def evaluate_membership(member: np.ndarray, edges_per: np.ndarray,
+                        cluster: Cluster,
+                        num_edges: int | None = None) -> PartitionStats:
+    """TC/RF and per-machine costs from a ``(p, V)`` membership matrix plus
+    per-machine edge counts — no ``Graph`` required.
 
-    assign: (E,) int array mapping canonical edge id -> machine in [0, p).
+    The metric layer shared by :func:`evaluate` (in-memory assignments) and
+    the out-of-core stream path (``StreamMembership``/``StreamAssignment``
+    carry exactly these two quantities); Eq. 3/4 only read memberships and
+    counts, so both paths report through identical arithmetic.
     """
     p = cluster.p
-    assert assign.min(initial=0) >= 0 and assign.max(initial=0) < p
-    member = vertex_partition_sets(graph, assign, p)
-    edges_per = np.bincount(assign, minlength=p).astype(np.float64)
+    member = np.asarray(member, dtype=bool)
+    edges_per = np.asarray(edges_per, dtype=np.float64)
     verts_per = member.sum(axis=1).astype(np.float64)
 
     c_node, c_edge, c_com = cluster.c_node(), cluster.c_edge(), cluster.c_com()
@@ -160,11 +165,24 @@ def evaluate(graph, assign: np.ndarray, cluster: Cluster) -> PartitionStats:
     mem_need = cluster.m_node * verts_per + cluster.m_edge * edges_per
     feasible = bool(np.all(mem_need <= cluster.memory() + 1e-9))
     tc = float((t_cal + t_com).max())
-    nE = max(1, graph.num_edges)
+    nE = max(1, int(edges_per.sum()) if num_edges is None else num_edges)
     return PartitionStats(
         tc=tc, t_cal=t_cal, t_com=t_com, edges_per_part=edges_per,
         verts_per_part=verts_per, rf=float(rf),
         alpha_balance=float(edges_per.max() / (nE / p)), feasible=feasible)
+
+
+def evaluate(graph, assign: np.ndarray, cluster: Cluster) -> PartitionStats:
+    """Compute TC/RF and per-machine costs for an edge assignment.
+
+    assign: (E,) int array mapping canonical edge id -> machine in [0, p).
+    """
+    p = cluster.p
+    assert assign.min(initial=0) >= 0 and assign.max(initial=0) < p
+    member = vertex_partition_sets(graph, assign, p)
+    edges_per = np.bincount(assign, minlength=p).astype(np.float64)
+    return evaluate_membership(member, edges_per, cluster,
+                               num_edges=graph.num_edges)
 
 
 def replication_factor(graph, assign: np.ndarray, p: int) -> float:

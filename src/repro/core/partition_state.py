@@ -449,6 +449,9 @@ class StreamMembership:
     cnt: np.ndarray               # (p, V) int32 incidence counts
     edges_per: np.ndarray         # (p,) float64 |E_i|
     verts_per: np.ndarray         # (p,) float64 |V_i|
+    #: spill/dedup accounting when the stream ran with ``dedup="two_pass"``
+    #: (a ``repro.data.SpillStats``), else None
+    spill_stats: object = None
 
     @classmethod
     def empty(cls, num_vertices: int, p: int) -> "StreamMembership":

@@ -14,6 +14,11 @@ Capability tags in use:
   (all methods get the memory-cap adaptation regardless).
 * ``blocked``  — streams edges through the block engine; accepts
   ``block_size`` and can run graph-free over an edge-block iterator.
+* ``streamable`` — carries a graph-free ``stream`` entry point
+  (``stream(source, |V|, |E|, cluster, **knobs)``) that partitions an
+  edge-list path or block iterator out of core; its ``dedup`` knob picks
+  single-pass per-block dedup (``"block"``) or the exact two-pass
+  spill-to-disk dedup (``"two_pass"``).
 * ``oracle``   — per-edge reference loop kept for equivalence tests;
   excluded from the default benchmark surface.
 * ``driver``   — full multi-phase driver (WindGP), returns via
@@ -49,6 +54,8 @@ class Partitioner:
     description: str = ""
     capabilities: frozenset = frozenset()
     knobs: tuple = ()               # accepted keyword-knob names
+    stream_fn: Callable | None = None   # graph-free out-of-core entry
+    stream_knobs: tuple = ()            # keyword-knob names it accepts
 
     def __call__(self, g, cluster, **kw) -> np.ndarray:
         unknown = set(kw) - set(self.knobs)
@@ -57,6 +64,24 @@ class Partitioner:
                 f"partitioner {self.name!r} accepts knobs {self.knobs}, "
                 f"got unknown {sorted(unknown)}")
         return self.fn(g, cluster, **kw)
+
+    def stream(self, source, num_vertices=None, num_edges=None,
+               cluster=None, **kw):
+        """Graph-free out-of-core run (``streamable`` capability only).
+
+        ``source`` is an edge-list path, a block iterator, or a prepared
+        ``TwoPassDedup``; returns the end-of-stream ``StreamMembership``.
+        """
+        if self.stream_fn is None:
+            raise TypeError(
+                f"partitioner {self.name!r} cannot stream "
+                f"(capabilities: {sorted(self.capabilities)})")
+        unknown = set(kw) - set(self.stream_knobs)
+        if unknown:
+            raise TypeError(
+                f"partitioner {self.name!r} stream accepts knobs "
+                f"{self.stream_knobs}, got unknown {sorted(unknown)}")
+        return self.stream_fn(source, num_vertices, num_edges, cluster, **kw)
 
     def supports(self, capability: str) -> bool:
         return capability in self.capabilities

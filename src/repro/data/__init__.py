@@ -1,8 +1,10 @@
 """Graph generators and IO (R-MAT / road mesh / SNAP edge lists)."""
 from .generators import rmat, road_mesh, erdos_renyi, graph500
-from .io import (canonicalize_block, count_edge_list, iter_edge_blocks,
-                 read_edge_list, write_edge_list)
+from .io import (SpillStats, TwoPassDedup, canonicalize_block,
+                 count_edge_list, iter_edge_blocks, read_edge_list,
+                 two_pass_dedup, write_edge_list)
 
 __all__ = ["rmat", "road_mesh", "erdos_renyi", "graph500",
            "read_edge_list", "write_edge_list", "iter_edge_blocks",
-           "count_edge_list", "canonicalize_block"]
+           "count_edge_list", "canonicalize_block", "TwoPassDedup",
+           "SpillStats", "two_pass_dedup"]

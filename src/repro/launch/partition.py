@@ -3,10 +3,17 @@
   PYTHONPATH=src python -m repro.launch.partition \
       --graph rmat:13 --super 3 --normal 6 --method windgp --out part.npz
   PYTHONPATH=src python -m repro.launch.partition --graph edges.txt ...
+  PYTHONPATH=src python -m repro.launch.partition --graph edges.txt.gz \
+      --method hdrf --stream --dedup two_pass --out-dir parts/
 
 Methods resolve through the unified partitioner registry
 (``repro.core.partitioners``); ``--block-size`` reaches every method with
-the ``blocked`` capability (the block-stream scorers).
+the ``blocked`` capability (the block-stream scorers).  ``--stream`` runs
+a ``streamable`` method graph-free over an edge-list file — the edge set
+never materializes; ``--dedup two_pass`` adds the exact spill-to-disk
+dedup, and ``--out-dir`` persists the on-disk ``StreamAssignment``
+(per-machine shards + membership) that ``PartitionRuntime.from_stream``
+packs into the BSP runtime.
 """
 from __future__ import annotations
 
@@ -17,7 +24,7 @@ import time
 
 import numpy as np
 
-from ..core import evaluate, scaled_paper_cluster, windgp
+from ..core import evaluate, evaluate_membership, scaled_paper_cluster, windgp
 from ..core import partitioners as registry
 from ..data import graph500, read_edge_list, rmat, road_mesh
 
@@ -48,8 +55,21 @@ def main(argv=None):
     ap.add_argument("--theta", type=float, default=0.01)
     ap.add_argument("--block-size", type=int, default=None,
                     help="stream-block size for 'blocked' methods")
+    ap.add_argument("--stream", action="store_true",
+                    help="out-of-core: partition an edge-list file "
+                         "graph-free ('streamable' methods only)")
+    ap.add_argument("--dedup", default="block",
+                    choices=("block", "two_pass"),
+                    help="--stream dedup discipline: per-block only, or "
+                         "exact two-pass spill-to-disk")
+    ap.add_argument("--out-dir", default=None,
+                    help="--stream: persist the StreamAssignment "
+                         "(per-machine shards + membership) here")
     ap.add_argument("--out", default=None, help=".npz output path")
     args = ap.parse_args(argv)
+
+    if args.stream:
+        return _run_stream(ap, args)
 
     g = load_graph(args.graph)
     cl = scaled_paper_cluster(args.super, args.normal, g.num_edges,
@@ -85,6 +105,80 @@ def main(argv=None):
         np.savez(args.out, assign=assign,
                  machines=np.array([m.as_tuple() for m in cl.machines]))
         print(f"wrote {args.out}")
+    return 0
+
+
+def _run_stream(ap, args) -> int:
+    """Out-of-core path: graph-free streaming over an edge-list file."""
+    import pathlib
+
+    from ..data import count_edge_list
+    part = registry.get(args.method)
+    if not part.supports("streamable"):
+        ap.error(f"--stream: method {part.name!r} is not streamable "
+                 f"(capabilities: {sorted(part.capabilities)}); "
+                 f"streamable: {registry.names(require={'streamable'})}")
+    if args.graph.split(":")[0] in ("rmat", "graph500", "mesh"):
+        ap.error("--stream partitions edge-list files; generator specs "
+                 "would materialize the graph first")
+
+    if args.dedup == "two_pass":
+        from ..data import two_pass_dedup
+        source = two_pass_dedup(args.graph)
+        num_v, num_e = source.num_vertices, source.num_edges
+    else:
+        # count at the same reader granularity the stream will use:
+        # per-block dedup makes the edge count a function of the window
+        from ..data.io import DEFAULT_BLOCK_LINES
+        source = args.graph
+        num_v, num_e = count_edge_list(
+            args.graph, args.block_size or DEFAULT_BLOCK_LINES)
+    cl = scaled_paper_cluster(args.super, args.normal, num_e,
+                              slack=args.slack)
+    print(f"stream: V={num_v} E={num_e} dedup={args.dedup} p={cl.p}",
+          flush=True)
+
+    sa = None
+    kw = {"dedup": args.dedup}
+    if args.block_size is not None:
+        kw["block_size"] = args.block_size
+    if args.out_dir:
+        from ..bsp import StreamAssignment
+        sa = StreamAssignment(pathlib.Path(args.out_dir), cl.p, num_v)
+        kw["sink"] = sa.sink
+    t0 = time.perf_counter()
+    try:
+        state = part.stream(source, num_v, num_e, cl, **kw)
+    except BaseException:
+        if sa is not None:
+            sa.close()      # abort: drop shard handles, publish nothing
+        raise
+    finally:
+        if hasattr(source, "close"):
+            source.close()
+    dt = time.perf_counter() - t0
+
+    stats = evaluate_membership(state.cnt > 0, state.edges_per, cl)
+    report = {
+        "method": args.method, "mode": f"stream/{args.dedup}",
+        "seconds": round(dt, 2),
+        "TC": stats.tc, "RF": round(stats.rf, 4),
+        "feasible": stats.feasible,
+        "edges_per_machine": stats.edges_per_part.astype(int).tolist(),
+        "t_total_per_machine": np.round(stats.t_total, 1).tolist(),
+    }
+    if state.spill_stats is not None:
+        report["spill"] = {
+            "buckets": state.spill_stats.num_buckets,
+            "duplicate_rows": state.spill_stats.duplicate_rows,
+            "peak_resident_rows": state.spill_stats.peak_resident_rows,
+        }
+    print(json.dumps(report, indent=2))
+    if sa is not None:
+        meta = sa.finalize(state, {"method": args.method,
+                                   "dedup": args.dedup})
+        print(f"wrote StreamAssignment to {args.out_dir} "
+              f"(E={meta['num_edges']}, rf={meta['replication_factor']})")
     return 0
 
 

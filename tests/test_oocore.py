@@ -1,0 +1,399 @@
+"""Two-pass out-of-core dedup + streamed-assignment BSP hand-off.
+
+Four contracts, each tested here:
+
+* ``TwoPassDedup`` equals ``read_edge_list``'s exact in-memory dedup bit
+  for bit (gzip and plain, empty/comment-only, and a duplicate-heavy
+  adversarial list that defeats per-block dedup), yields edges in global
+  first-occurrence order, and its ``SpillStats`` accounting bounds peak
+  edge residency by the spill knobs — never by the edge-set size;
+* ``stream_partition(dedup="two_pass")`` makes the same decisions as the
+  in-memory block engine consuming the identical deduplicated stream;
+* ``StreamAssignment`` round-trips through disk, verifies its shards
+  before publishing ``meta.json`` (atomically), and
+  ``PartitionRuntime.from_stream`` packs the same runtime arrays as the
+  in-memory ``build`` for the same assignment;
+* the example CLI runs partition→PageRank end to end on a
+  never-materialized list, with the spill accounting in its meta.
+"""
+import gzip
+import importlib.util
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.bsp import PartitionRuntime, StreamAssignment, pagerank, ref
+from repro.core import (evaluate, evaluate_membership, from_edge_list,
+                        scaled_paper_cluster)
+from repro.core import partitioners as registry
+from repro.core.baselines import streaming as S
+from repro.data import (TwoPassDedup, iter_edge_blocks, read_edge_list,
+                        rmat, two_pass_dedup)
+
+
+def _dup_heavy_file(tmp_path, *, gz=False, seed=0, n_hot=40, repeats=25,
+                    n_unique=500, id_range=160):
+    """Edge list whose duplicates span far-apart blocks: ``n_hot`` edges
+    repeated ``repeats`` times, interleaved with unique edges — a small
+    dedup window (per-block dedup) misses almost every repeat."""
+    rng = np.random.default_rng(seed)
+    hot = rng.integers(0, id_range // 4, size=(n_hot, 2))
+    uniq = rng.integers(0, id_range, size=(n_unique, 2))
+    chunks = []
+    step = max(1, n_unique // repeats)
+    for i in range(repeats):
+        chunks.append(hot)
+        chunks.append(uniq[i * step:(i + 1) * step])
+    rows = np.concatenate(chunks)
+    path = tmp_path / ("edges.txt.gz" if gz else "edges.txt")
+    txt = "# adversarial\n" + "\n".join(f"{u} {v}" for u, v in rows) + "\n"
+    if gz:
+        with gzip.open(path, "wt") as f:
+            f.write(txt)
+    else:
+        path.write_text(txt)
+    return path
+
+
+def _first_occurrence_order(path, block_size):
+    """Reference: canonicalized first-occurrence (u, v) sequence."""
+    seen, order = set(), []
+    for blk in iter_edge_blocks(path, block_size):
+        for u, v in blk.tolist():
+            if (u, v) not in seen:
+                seen.add((u, v))
+                order.append((u, v))
+    return order
+
+
+class TestTwoPassDedup:
+    @pytest.mark.parametrize("gz", [False, True], ids=["plain", "gzip"])
+    def test_round_trip_equals_read_edge_list(self, tmp_path, gz):
+        """Spill/restore == in-memory exact dedup, bit for bit."""
+        path = _dup_heavy_file(tmp_path, gz=gz)
+        with TwoPassDedup(path, block_size=64, bucket_rows=128,
+                          merge_rows=32) as tp:
+            streamed = np.concatenate(
+                list(tp) + [np.empty((0, 2), dtype=np.int64)])
+            ref_g = read_edge_list(str(path))
+            assert tp.num_edges == ref_g.num_edges == len(streamed)
+            got = from_edge_list(streamed, num_vertices=tp.num_vertices)
+            np.testing.assert_array_equal(got.edges, ref_g.edges)
+            np.testing.assert_array_equal(got.indptr, ref_g.indptr)
+            np.testing.assert_array_equal(got.indices, ref_g.indices)
+
+    def test_first_occurrence_order(self, tmp_path):
+        path = _dup_heavy_file(tmp_path)
+        with TwoPassDedup(path, block_size=64, bucket_rows=128,
+                          merge_rows=32) as tp:
+            streamed = [tuple(r) for b in tp for r in b.tolist()]
+        assert streamed == _first_occurrence_order(path, 64)
+
+    def test_blocks_respect_block_size(self, tmp_path):
+        path = _dup_heavy_file(tmp_path)
+        with TwoPassDedup(path, block_size=37, bucket_rows=64) as tp:
+            assert all(len(b) <= 37 for b in tp)
+
+    def test_empty_and_comment_only(self, tmp_path):
+        empty = tmp_path / "empty.txt"
+        empty.write_text("")
+        comments = tmp_path / "c.txt"
+        comments.write_text("# a\n# b\n\n")
+        for path in (empty, comments):
+            with TwoPassDedup(path) as tp:
+                assert tp.prepare() == (0, 0)
+                assert list(tp) == []
+
+    def test_adversarial_defeats_per_block_dedup(self, tmp_path):
+        """Per-block dedup leaves the cross-block repeats in; the spill
+        layer removes every one of them out of core."""
+        path = _dup_heavy_file(tmp_path)
+        per_block = sum(len(b) for b in iter_edge_blocks(path, 64))
+        with TwoPassDedup(path, block_size=64, bucket_rows=128) as tp:
+            st = tp.stats
+            assert tp.num_edges == read_edge_list(str(path)).num_edges
+            assert per_block > 1.5 * tp.num_edges     # block dedup defeated
+            assert st.duplicate_rows == st.spilled_rows - tp.num_edges
+            assert st.duplicate_rows > 0
+
+    def test_bucket_accounting_bounds_residency(self, tmp_path):
+        """The out-of-core guarantee, via the accounting: peak resident
+        rows are bounded by the spill knobs (io block, largest bucket,
+        merge buffers), not by the stream size."""
+        path = _dup_heavy_file(tmp_path, repeats=40, n_unique=2000,
+                               id_range=700)
+        bucket_rows, merge_rows, block = 128, 16, 64
+        with TwoPassDedup(path, block_size=block, bucket_rows=bucket_rows,
+                          merge_rows=merge_rows) as tp:
+            n = sum(len(b) for b in tp)
+            st = tp.stats
+            assert n == tp.num_edges
+            bound = max(block, st.max_bucket_rows,
+                        2 * st.num_buckets * merge_rows)
+            assert st.peak_resident_rows <= bound
+            # and the bound is far below both the raw and deduped stream
+            assert st.peak_resident_rows < 0.5 * st.spilled_rows
+            assert st.num_buckets >= 2
+            assert st.max_bucket_rows < 0.5 * st.spilled_rows
+
+    def test_reiterable_and_close(self, tmp_path):
+        path = _dup_heavy_file(tmp_path)
+        tp = two_pass_dedup(str(path), block_size=64, bucket_rows=128)
+        a = np.concatenate(list(tp))
+        b = np.concatenate(list(tp))
+        np.testing.assert_array_equal(a, b)
+        spill = tp.spill_dir
+        assert spill.exists()
+        tp.close()
+        assert not spill.exists()
+
+
+class TestStreamTwoPass:
+    @pytest.mark.parametrize("method", ["greedy", "hdrf"])
+    def test_matches_in_memory_on_deduplicated_stream(self, tmp_path,
+                                                      method):
+        """``stream_partition(dedup="two_pass")`` == the in-memory block
+        engine consuming the identical deduplicated stream (the acceptance
+        criterion): same per-edge machines, same totals, same RF."""
+        path = _dup_heavy_file(tmp_path, seed=3)
+        with TwoPassDedup(path, block_size=64, bucket_rows=128) as tp:
+            streamed = np.concatenate(list(tp))
+            got = {}
+
+            def sink(edges, ms):
+                for (u, v), m in zip(edges.tolist(), ms.tolist()):
+                    got[(u, v)] = m
+
+            state = S.stream_partition(
+                tp, cluster=scaled_paper_cluster(2, 4, tp.num_edges,
+                                                 slack=2.0),
+                method=method, block_size=128, max_waves=3,
+                replica_frac=0.5, dedup="two_pass", sink=sink)
+        g = from_edge_list(streamed, num_vertices=state.cnt.shape[1])
+        cl = scaled_paper_cluster(2, 4, g.num_edges, slack=2.0)
+        # map the stream's arrival order onto canonical edge ids
+        key_sorted = (g.edges[:, 0].astype(np.int64) * g.num_vertices
+                      + g.edges[:, 1])
+        key_stream = (streamed[:, 0] * g.num_vertices + streamed[:, 1])
+        order = np.searchsorted(key_sorted, key_stream)
+        a_mem = S.block_stream_assign(g, cl, S.SCORERS[method](),
+                                      block_size=128, order=order,
+                                      max_waves=3, replica_frac=0.5)
+        assert len(got) == g.num_edges
+        a_stream = np.array([got[(int(u), int(v))] for u, v in g.edges])
+        np.testing.assert_array_equal(a_mem, a_stream)
+        np.testing.assert_array_equal(
+            state.edges_per, np.bincount(a_mem, minlength=cl.p))
+        mem_stats = evaluate(g, a_mem, cl)
+        stream_stats = evaluate_membership(state.cnt > 0, state.edges_per,
+                                           cl)
+        assert stream_stats.tc == pytest.approx(mem_stats.tc)
+        assert stream_stats.rf == pytest.approx(mem_stats.rf)
+
+    def test_two_pass_needs_a_path(self):
+        cl = scaled_paper_cluster(1, 2, 100)
+        blocks = iter([np.array([[0, 1]])])
+        with pytest.raises(ValueError, match="re-readable"):
+            S.stream_partition(blocks, 2, 1, cl, dedup="two_pass")
+
+    def test_unknown_dedup_rejected(self, tmp_path):
+        path = _dup_heavy_file(tmp_path)
+        cl = scaled_paper_cluster(1, 2, 100)
+        with pytest.raises(ValueError, match="dedup"):
+            S.stream_partition(str(path), cluster=cl, dedup="exactly")
+
+    def test_path_source_counts_itself(self, tmp_path):
+        path = _dup_heavy_file(tmp_path)
+        cl = scaled_paper_cluster(2, 4, 1000, slack=2.0)
+        state = S.stream_partition(str(path), cluster=cl, method="hdrf",
+                                   block_size=128)
+        # single-pass mode: per-block dedup only, duplicates counted twice
+        assert state.edges_per.sum() == sum(
+            len(b) for b in iter_edge_blocks(path, 128))
+        assert state.spill_stats is None
+
+    def test_registry_stream_surface(self, tmp_path):
+        assert set(registry.names(require={"streamable"})) == \
+            {"greedy", "hdrf", "ebv"}
+        path = _dup_heavy_file(tmp_path)
+        part = registry.get("hdrf")
+        cl = scaled_paper_cluster(2, 4, 1000, slack=2.0)
+        state = part.stream(str(path), cluster=cl, dedup="two_pass")
+        assert state.spill_stats is not None
+        assert state.edges_per.sum() == read_edge_list(
+            str(path)).num_edges
+        with pytest.raises(TypeError, match="unknown"):
+            part.stream(str(path), cluster=cl, bogus=1)
+        with pytest.raises(TypeError, match="cannot stream"):
+            registry.get("ne").stream(str(path), cluster=cl)
+
+
+@pytest.fixture()
+def streamed_assignment(tmp_path):
+    """A finalized StreamAssignment + the matching in-memory reference."""
+    path = _dup_heavy_file(tmp_path, seed=7)
+    with TwoPassDedup(path, block_size=64, bucket_rows=128) as tp:
+        streamed = np.concatenate(list(tp))
+        cl = scaled_paper_cluster(2, 4, tp.num_edges, slack=2.0)
+        sa = StreamAssignment(tmp_path / "assign", cl.p, tp.num_vertices)
+        got = {}
+
+        def sink(edges, ms):
+            sa.sink(edges, ms)
+            for (u, v), m in zip(edges.tolist(), ms.tolist()):
+                got[(u, v)] = m
+
+        state = S.stream_partition(tp, cluster=cl, method="hdrf",
+                                   block_size=128, sink=sink)
+    sa.finalize(state, {"method": "hdrf"})
+    g = from_edge_list(streamed, num_vertices=tp.num_vertices)
+    assign = np.array([got[(int(u), int(v))] for u, v in g.edges],
+                      dtype=np.int32)
+    return sa, g, assign, cl
+
+
+class TestStreamAssignment:
+    def test_round_trips_through_disk(self, streamed_assignment, tmp_path):
+        sa, g, assign, cl = streamed_assignment
+        sb = StreamAssignment.open(tmp_path / "assign")
+        np.testing.assert_array_equal(sb.membership(), sa.membership())
+        np.testing.assert_array_equal(sb.degree, sa.degree)
+        np.testing.assert_array_equal(sb.edges_per, sa.edges_per)
+        # shard contents are exactly each machine's edge set
+        for i in range(sb.p):
+            want = g.edges[assign == i]
+            rows = sb.machine_edges(i)
+            assert sorted(map(tuple, rows.tolist())) == \
+                sorted(map(tuple, want.tolist()))
+        # degrees match the deduplicated graph's degrees
+        np.testing.assert_array_equal(sa.degree, g.degree())
+
+    def test_finalize_verifies_shards(self, tmp_path):
+        sa = StreamAssignment(tmp_path / "a", 2, 4)
+        sa.sink(np.array([[0, 1], [2, 3]]), np.array([0, 1]))
+        sa.edges_per[0] += 1           # simulate a lost write
+        member = np.zeros((2, 4), dtype=bool)
+        member[0, :2] = member[1, 2:] = True
+        with pytest.raises(IOError, match="short-flushed"):
+            sa.finalize(member)
+        assert not (tmp_path / "a" / "meta.json").exists()
+        assert not (tmp_path / "a" / "meta.json.tmp").exists()
+
+    def test_finalize_cross_checks_membership(self, tmp_path):
+        sa = StreamAssignment(tmp_path / "a", 2, 4)
+        sa.sink(np.array([[0, 1]]), np.array([0]))
+        member = np.zeros((2, 4), dtype=bool)
+        member[1, 3] = True            # claims a vertex no edge touched
+        with pytest.raises(ValueError, match="membership disagrees"):
+            sa.finalize(member)
+
+    def test_open_requires_finalize(self, tmp_path):
+        sa = StreamAssignment(tmp_path / "a", 2, 4)
+        sa.sink(np.array([[0, 1]]), np.array([0]))
+        with pytest.raises(FileNotFoundError, match="meta.json"):
+            StreamAssignment.open(tmp_path / "a")
+
+
+class TestFromStream:
+    def test_matches_in_memory_build(self, streamed_assignment):
+        """from_stream packs the same runtime as build() for the same
+        assignment: identical vertex tables, edge sets, replica slots."""
+        sa, g, assign, cl = streamed_assignment
+        rt_s = PartitionRuntime.from_stream(sa)
+        rt_m = PartitionRuntime.build(g, assign, cl.p)
+        assert rt_s.p == rt_m.p
+        assert rt_s.num_replicas == rt_m.num_replicas
+        assert rt_s.vmax == rt_m.vmax
+        assert rt_s.emax == rt_m.emax
+        for f in ("local_vertex_gid", "vertex_valid", "global_degree",
+                  "rep_slot"):
+            np.testing.assert_array_equal(getattr(rt_s, f),
+                                          getattr(rt_m, f), err_msg=f)
+        np.testing.assert_array_equal(rt_s.verts_per_machine,
+                                      rt_m.verts_per_machine)
+        np.testing.assert_array_equal(rt_s.edges_per_machine,
+                                      rt_m.edges_per_machine)
+        # edge shards arrive in admission order, build in edge-id order —
+        # same per-machine edge sets in local coordinates
+        for i in range(rt_s.p):
+            gids_s = rt_s.local_vertex_gid[i][
+                rt_s.local_edges[i][rt_s.edge_valid[i]]]
+            gids_m = rt_m.local_vertex_gid[i][
+                rt_m.local_edges[i][rt_m.edge_valid[i]]]
+            assert sorted(map(tuple, gids_s.tolist())) == \
+                sorted(map(tuple, gids_m.tolist()))
+
+    def test_pagerank_on_streamed_runtime(self, streamed_assignment):
+        sa, g, _, _ = streamed_assignment
+        rt = PartitionRuntime.from_stream(sa)
+        pr, _ = pagerank(rt, num_iters=25)
+        np.testing.assert_allclose(pr, ref.pagerank(g, num_iters=25),
+                                   atol=1e-5)
+
+
+def _load_example():
+    spec = importlib.util.spec_from_file_location(
+        "partition_edgelist",
+        pathlib.Path(__file__).parent.parent / "examples"
+        / "partition_edgelist.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+class TestExampleTwoPassPipeline:
+    def test_partition_pagerank_end_to_end(self, tmp_path):
+        """--two-pass --pagerank on a duplicate-heavy list: the acceptance
+        pipeline, spill accounting included."""
+        mod = _load_example()
+        path = _dup_heavy_file(tmp_path, seed=11)
+        out = tmp_path / "parts"
+        assert mod.main([str(path), "--part-method", "hdrf",
+                         "--num-parts", "4", "--block-size", "64",
+                         "--bucket-rows", "128", "--two-pass",
+                         "--pagerank", "--pagerank-iters", "10",
+                         "--out-dir", str(out)]) == 0
+        meta = json.loads((out / "meta.json").read_text())
+        n_exact = read_edge_list(str(path)).num_edges
+        assert meta["dedup"] == "two_pass"
+        assert meta["num_edges"] == n_exact
+        # the text shards hold every edge exactly once
+        total = sum(
+            len([ln for ln in (out / f"part{i}.edges").read_text()
+                 .splitlines() if ln and not ln.startswith("#")])
+            for i in range(4))
+        assert total == n_exact
+        # spill accounting rode along and bounds the residency
+        spill = meta["spill"]
+        assert spill["duplicate_rows"] > 0
+        assert spill["peak_resident_rows"] <= max(
+            64, spill["max_bucket_rows"],
+            2 * spill["num_buckets"] * 8192)
+        assert spill["peak_resident_rows"] < spill["spilled_rows"]
+        # runtime hand-off artifact is complete and loadable
+        sa = StreamAssignment.open(out / "assignment")
+        assert int(sa.edges_per.sum()) == n_exact
+        assert not (out / "meta.json.tmp").exists()
+
+    def test_block_mode_still_works(self, tmp_path):
+        mod = _load_example()
+        g = rmat(6, edge_factor=4, seed=2)
+        path = tmp_path / "edges.txt"
+        np.savetxt(path, g.edges, fmt="%d")
+        out = tmp_path / "parts"
+        assert mod.main([str(path), "--part-method", "greedy",
+                         "--num-parts", "4", "--block-size", "64",
+                         "--out-dir", str(out)]) == 0
+        meta = json.loads((out / "meta.json").read_text())
+        assert meta["dedup"] == "block"
+        assert meta["num_edges"] == g.num_edges
+        assert "spill" not in meta
+
+    def test_two_pass_rejects_in_memory_methods(self, tmp_path):
+        mod = _load_example()
+        path = _dup_heavy_file(tmp_path)
+        with pytest.raises(SystemExit):
+            mod.main([str(path), "--part-method", "ne", "--two-pass",
+                      "--out-dir", str(tmp_path / "x")])
