@@ -1,0 +1,240 @@
+"""BSP apps × edge-kernel backends: superstep throughput at matched partitions.
+
+The paper's end metric is distributed graph-algorithm runtime on the
+partition it produces; this table holds the partition fixed (one hdrf run
+per dataset) and swaps the *compute* layer — the edge-kernel backend each
+superstep combines messages through (``repro.bsp.backends``):
+
+* ``scatter`` — the gather-scatter oracle (`at[].⊕` per direction);
+* ``segment`` — sorted-CSR reduction (cumsum-diff for (+, ×): the CPU
+  fast path);
+* ``pallas``  — the blocked Block-ELL semiring SpMV (interpret-mode on
+  CPU, MXU-shaped on TPU; its ELL fill stats are the utilization proxy).
+
+Per (app × backend): median superstep seconds, edge throughput, speedup
+over ``scatter``, and the cross-backend result gap (bitwise for the
+min/max semirings, ~1e-7 float drift for (+, ×)).
+
+``--smoke`` is the tier-2 CI gate: asserts backend equivalence on a tiny
+proxy for all four apps, ``segment`` ≥ 2× ``scatter`` PageRank superstep
+throughput on the LJ proxy, and reports the Pallas layout's ELL fill
+stats; emits ``BENCH_smoke.json`` for ``benchmarks/check_trend.py``.
+
+Run:  PYTHONPATH=src python -m benchmarks.bsp_apps [--smoke] [--json out]
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.bsp import PartitionRuntime, build_app
+from repro.bsp.engine import make_step
+from repro.core import scaled_paper_cluster
+from repro.core.partitioners import get as partitioner
+from repro.data import rmat
+
+from .common import (CSV, cluster_for, dataset, median_iqr, spread_str,
+                     write_bench_json)
+
+APPS = ("pagerank", "sssp", "bfs", "cc")
+BACKENDS = ("scatter", "segment", "pallas")
+
+#: CPU-fitting Pallas tile for the proxies (128 is the TPU/MXU default;
+#: the interpreter does not need MXU alignment and the dense blocks of a
+#: proxy-sized graph stay in memory at 32/64)
+SMOKE_BLOCK = 32
+
+
+def _app_opts(app: str, backend: str, block_size: int) -> dict:
+    opts = {} if backend != "pallas" else {"block_size": block_size}
+    if app in ("sssp", "bfs"):
+        opts["source"] = 0
+    return opts
+
+
+def _superstep_seconds(rt, app: str, backend: str, *, iters: int = 8,
+                       repeats: int = 3, block_size: int = SMOKE_BLOCK):
+    """Median seconds per (jit-compiled, vmap) superstep, state evolving."""
+    spec = build_app(rt, app, backend=backend,
+                     **_app_opts(app, backend, block_size))
+    step = make_step(spec.superstep, spec.static)
+    state, _ = step(spec.state)                 # compile + warm
+    jax.block_until_ready(state)
+    times = []
+    for _ in range(max(1, repeats)):
+        state = spec.state
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            state, _ = step(state)
+        jax.block_until_ready(state)
+        times.append((time.perf_counter() - t0) / iters)
+    return times
+
+
+def _run_app(rt, app: str, backend: str, iters: int,
+             block_size: int = SMOKE_BLOCK):
+    """Final global result array after ``iters`` supersteps."""
+    from repro.bsp.engine import run_bsp
+    spec = build_app(rt, app, backend=backend,
+                     **_app_opts(app, backend, block_size))
+    out, _ = run_bsp(spec.superstep, spec.state, spec.static, iters,
+                     check_rep=spec.check_rep)
+    return spec.finalize(rt, out)
+
+
+def _partition(g, cl) -> PartitionRuntime:
+    return PartitionRuntime.build(g, partitioner("hdrf")(g, cl), cl.p)
+
+
+def _equivalence(rt, iters: int = 10, block_size: int = SMOKE_BLOCK):
+    """Max |scatter − backend| result gap per app over the other backends."""
+    gaps = {}
+    for app in APPS:
+        ref = _run_app(rt, app, "scatter", iters)
+        worst = 0.0
+        for be in BACKENDS[1:]:
+            got = _run_app(rt, app, be, iters, block_size)
+            m = np.isfinite(ref)
+            assert (np.isfinite(got) == m).all(), (app, be, "inf mismatch")
+            if m.any():
+                worst = max(worst, float(np.abs(got[m] - ref[m]).max()))
+        gaps[app] = worst
+    return gaps
+
+
+def run(quick: bool = True, datasets=("LJ", "RN"), apps=APPS,
+        backends=("scatter", "segment"), repeats: int = 3,
+        iters: int = 8) -> dict:
+    """Backend timing table at proxy scale.
+
+    ``pallas`` is excluded from timing by default: off-TPU it runs the
+    Pallas *interpreter* (a correctness path, orders of magnitude slower
+    than compiled), so timing it on CPU proxies only measures the
+    emulator.  Pass ``backends=BACKENDS`` on a TPU host (or
+    ``--with-pallas``) to include it; its layout fill stats — the part
+    that matters off-TPU — are always reported, and the smoke gate checks
+    its results on the tiny proxy where the interpreter is affordable.
+    """
+    csv = CSV("bsp_apps")
+    out = {}
+    for ds in datasets:
+        g = dataset(ds, quick)
+        cl = cluster_for(ds, g)
+        rt = _partition(g, cl)
+        edges = int(rt.edge_valid.sum())
+        res = {}
+        for app in apps:
+            base = None
+            ref = None
+            for be in backends:
+                times = _superstep_seconds(rt, app, be, iters=iters,
+                                           repeats=repeats)
+                med, _ = median_iqr(times)
+                if be == "scatter":
+                    base = med
+                speed = base / max(med, 1e-9)
+                csv.row(f"{ds}/{app}/{be}", med,
+                        f"{spread_str(times)} {edges/med/1e6:.2f}Medges/s "
+                        f"{speed:.2f}x")
+                res[f"{app}/{be}"] = {"seconds": med, "speedup": speed}
+                got = _run_app(rt, app, be, max(4, iters // 2))
+                if ref is None:
+                    ref = got
+                else:
+                    m = np.isfinite(ref)
+                    gp = float(np.abs(got[m] - ref[m]).max()) if m.any() \
+                        else 0.0
+                    csv.row(f"{ds}/{app}/{be}_gap", 0, f"{gp:.2e}")
+                    res[f"{app}/{be}_gap"] = gp
+        bsr = rt.local_bsr(block_size=SMOKE_BLOCK)
+        csv.row(f"{ds}/pallas/fill", 0, str(bsr.aggregate_fill()))
+        res["fill"] = bsr.aggregate_fill()
+        out[ds] = res
+    return out
+
+
+def run_smoke(json_path: str | None = None) -> dict:
+    """Tier-2 CI gate, three parts:
+
+    * backend equivalence on a tiny proxy, all four apps: (min, +) and
+      (or, and) apps must match ``scatter`` bitwise, (+, ×) within 1e-5
+      (the cross-backend contract the tests pin per superstep; drift is
+      the segment path's reassociated float sum);
+    * ``segment`` ≥ 2× ``scatter`` PageRank superstep throughput on the
+      LJ proxy (the backend the refactor makes the CPU default
+      candidate must actually pay for itself);
+    * the Pallas layout's ELL fill stats on the LJ proxy (padding/fill
+      accounting of the degree-sorted blocked adjacency).
+    """
+    metrics = {}
+    csv = CSV("bsp_smoke")
+
+    # -- equivalence on the tiny proxy (pallas included) -------------------
+    g = rmat(9, seed=2)
+    cl = scaled_paper_cluster(2, 4, g.num_edges)
+    rt = _partition(g, cl)
+    gaps = _equivalence(rt, iters=10)
+    for app, gp in gaps.items():
+        tol = 1e-5 if app == "pagerank" else 0.0
+        assert gp <= tol, (f"{app}: cross-backend gap {gp:.2e} > {tol} "
+                           f"(scatter vs segment/pallas)")
+        csv.row(f"equiv/{app}", 0, f"gap={gp:.2e} (tol {tol})")
+        metrics[f"bsp/equiv/{app}_gap"] = gp
+
+    # -- segment vs scatter PageRank throughput on the LJ proxy ------------
+    g = dataset("LJ", True)
+    cl = cluster_for("LJ", g)
+    rt = _partition(g, cl)
+    edges = int(rt.edge_valid.sum())
+    t_sc, _ = median_iqr(_superstep_seconds(rt, "pagerank", "scatter"))
+    t_sg, _ = median_iqr(_superstep_seconds(rt, "pagerank", "segment"))
+    speed = t_sc / max(t_sg, 1e-9)
+    csv.row("lj/pagerank/scatter", t_sc, f"{edges/t_sc/1e6:.2f}Medges/s")
+    csv.row("lj/pagerank/segment", t_sg,
+            f"{edges/t_sg/1e6:.2f}Medges/s {speed:.2f}x")
+    assert speed >= 2.0, (
+        f"segment backend PageRank superstep only {speed:.2f}x scatter "
+        f"on the LJ proxy (gate: >= 2x)")
+    metrics["bsp/pagerank/segment_speedup"] = speed
+
+    # -- Pallas ELL fill stats on the LJ proxy -----------------------------
+    fill = rt.local_bsr(block_size=SMOKE_BLOCK).aggregate_fill()
+    csv.row("lj/pallas/fill", 0,
+            f"block_fill={fill['block_fill']:.3f} "
+            f"entry_fill={fill['entry_fill']:.4f} "
+            f"ell_k_max={fill['ell_k_max']} bm={fill['block_size']}")
+    metrics["bsp/pallas/block_fill"] = fill["block_fill"]
+    metrics["bsp/pallas/entry_fill"] = fill["entry_fill"]
+    metrics["bsp/pallas/ell_k_max"] = fill["ell_k_max"]
+
+    if json_path:
+        write_bench_json(json_path, metrics)
+    return metrics
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tier-2 CI gate: backend equivalence + segment "
+                         ">= 2x scatter PageRank throughput on the LJ "
+                         "proxy + pallas ELL fill stats")
+    ap.add_argument("--json", default=None,
+                    help="write gateable metrics to this path "
+                         "(BENCH_smoke.json for CI)")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--with-pallas", action="store_true",
+                    help="include pallas in the timing table (TPU hosts; "
+                         "on CPU this times the interpreter)")
+    args = ap.parse_args()
+    print("table/name,us_per_call,derived")
+    if args.smoke:
+        run_smoke(json_path=args.json)
+    else:
+        run(quick=not args.full, repeats=args.repeats,
+            backends=BACKENDS if args.with_pallas
+            else ("scatter", "segment"))

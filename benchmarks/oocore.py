@@ -109,6 +109,7 @@ def _compare_one(path, method: str, csv: CSV, label: str,
     res = {
         "tc_gap": (s_o.tc - s_m.tc) / s_m.tc,
         "rf_gap": (s_o.rf - s_m.rf) / s_m.rf,
+        "tc": float(s_o.tc), "rf": float(s_o.rf),
         "peak_ratio": peak_ooc / max(1, peak_mem),
         "wall_ratio": t_ooc / max(1e-9, t_mem),
         "spill_peak_frac": (spill.peak_resident_rows
@@ -170,6 +171,7 @@ def run_smoke(json_path: str | None = None) -> dict:
         write_bench_json(json_path, {
             "oocore/tc_gap": r["tc_gap"],
             "oocore/rf_gap": r["rf_gap"],
+            "oocore/tc": r["tc"],
             "oocore/spill_peak_frac": r["spill_peak_frac"],
             "oocore/peak_ratio": r["peak_ratio"],
             "oocore/wall_ratio": r["wall_ratio"],

@@ -84,7 +84,8 @@ def _stream_compare_one(g, cl, csv: CSV, label: str, method: str, *,
                 f"{spread_str(timings[f'B{b}'])} {speed:.2f}x "
                 f"tc={d_tc * 100:+.2f}% rf={d_rf * 100:+.2f}%")
         res[b] = {"seconds": t_b, "speedup": speed,
-                  "tc_gap": d_tc, "rf_gap": d_rf}
+                  "tc_gap": d_tc, "rf_gap": d_rf,
+                  "tc": float(s.tc), "rf": float(s.rf)}
     return res
 
 
@@ -268,6 +269,10 @@ def run_smoke(only: str | None = None,
             metrics[f"stream/{m}/tc_gap"] = r[b]["tc_gap"]
             metrics[f"stream/{m}/rf_gap"] = r[b]["rf_gap"]
             metrics[f"stream/{m}/speedup"] = r[b]["speedup"]
+            # absolute quality level (deterministic seeds): the
+            # perf-trajectory baseline bounds it directly, not just the
+            # oracle-relative gap
+            metrics[f"stream/{m}/tc"] = r[b]["tc"]
     if only is not None and not out:
         raise SystemExit(f"unknown smoke gate {only!r} "
                          f"(choices: sls, streaming)")

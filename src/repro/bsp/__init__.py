@@ -5,14 +5,17 @@ a mesh device (or a vmap lane in single-device simulation).  Cross-machine
 vertex synchronization is a fixed-shape collective over the replicated-
 vertex table — TPU-native, and its size shrinks with partition quality.
 """
-from .partition_runtime import PartitionRuntime
+from .partition_runtime import PartitionRuntime, LocalBSR
 from .stream_assignment import StreamAssignment, write_json_atomic
+from .backends import BACKENDS, EdgeBackend, get_backend
 from .apps import (pagerank, sssp, bfs, triangle_count,
-                   connected_components)
+                   connected_components, build_app, AppSpec, APP_BUILDERS)
 from . import ref
 from .simulate import simulate_superstep_times, simulate_runtime
 
-__all__ = ["PartitionRuntime", "StreamAssignment", "write_json_atomic",
+__all__ = ["PartitionRuntime", "LocalBSR", "StreamAssignment",
+           "write_json_atomic",
+           "BACKENDS", "EdgeBackend", "get_backend",
            "pagerank", "sssp", "bfs", "triangle_count",
-           "connected_components",
+           "connected_components", "build_app", "AppSpec", "APP_BUILDERS",
            "ref", "simulate_superstep_times", "simulate_runtime"]

@@ -1,0 +1,221 @@
+"""Edge-kernel backends: how a BSP superstep combines messages over edges.
+
+Every edge-centric superstep in ``bsp/apps.py`` is one semiring SpMV
+against the machine's local adjacency (``y_i = ⊕_j A_ij ⊗ x_j``, symmetric
+A):
+
+* PageRank   — (+, ×) with edge weights;
+* SSSP       — (min, +) with edge weights;
+* BFS        — (or, and) frontier expansion (presence only);
+* components — (min, +) with zero weights (min-label propagation).
+
+A backend supplies that product.  ``prepare(rt, semiring, weights)``
+returns ``(extras, combine)``: ``extras`` is a dict of ``(p, ...)`` arrays
+merged into the superstep's static tree (vmap/shard_map stack them like
+every other runtime array), and ``combine(sa, x)`` maps this machine's
+``(Vmax,)`` vertex values to their ⊕-combined neighborhood values inside
+the (rank-reduced) superstep body.
+
+Backends:
+
+``scatter``
+    The historical gather-scatter loop (``at[dst].⊕(x[src] ⊗ w)``, one
+    scatter per direction).  Kept as the oracle every other backend is
+    tested against — float-identical to the pre-backend apps.
+``segment``
+    Sorted-CSR reduction.  The incidence list is pre-sorted by output
+    vertex; (+, ×) reduces via an exclusive running sum differenced at
+    the row pointers (no scatter at all — the CPU fast path; numerics
+    note below), (min, +)/(or, and) via ``jax.ops.segment_min/max`` on
+    the sorted indices.
+``pallas``
+    The blocked Block-ELL SpMV (``kernels/bsr_spmv``) over
+    ``rt.local_bsr()``'s degree-sorted per-machine layout —
+    MXU-shaped on TPU, interpret-mode on CPU.  Needs
+    ``check_rep=False`` under shard_map (no replication rule for
+    ``pallas_call``); the engine threads that through automatically.
+
+Numerics: the ``segment`` (+, ×) running-sum is float32 and reassociates
+the additions, so results drift O(eps·Σ|msg|) ≈ 1e-7 from ``scatter`` per
+superstep — within the 1e-5 cross-backend contract the tests pin.
+(min, +) and (or, and) are exact (min/max are associative), so sparse
+apps agree bitwise across all three backends.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.bsr_spmv import get_semiring
+from ..kernels.bsr_spmv.kernel import spmv_pallas
+
+#: weight kinds an app may ask for: the stored ⊗ operand per edge
+WEIGHT_KINDS = ("weight", "unit", "zero")
+
+
+def _edge_operand(rt, weights: str) -> np.ndarray:
+    """(p, Emax) raw ⊗ operand per edge for a weight kind."""
+    if weights == "weight":
+        return rt.edge_weight
+    if weights == "unit":
+        return np.ones_like(rt.edge_weight)
+    if weights == "zero":
+        return np.zeros_like(rt.edge_weight)
+    raise ValueError(f"weights must be one of {WEIGHT_KINDS}, "
+                     f"got {weights!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeBackend:
+    """A named edge-combine strategy (see module docstring)."""
+
+    name: str
+    description: str
+    prepare: Callable          # (rt, semiring, weights) -> (extras, combine)
+    #: False when the backend's ops have no shard_map replication rule
+    #: (Pallas) — the engine then passes ``check_vma=False``
+    check_rep: bool = True
+
+
+# ---------------------------------------------------------------------------
+# scatter: the oracle (gather + at[].⊕ per direction)
+# ---------------------------------------------------------------------------
+
+def _scatter_prepare(rt, semiring: str, weights: str):
+    sr = get_semiring(semiring)
+    wkind = weights
+
+    def combine(sa, x):
+        src, dst = sa["edges"][:, 0], sa["edges"][:, 1]
+        if wkind == "weight":
+            w_raw = sa["edge_weight"]
+        elif wkind == "unit":
+            w_raw = jnp.ones_like(sa["edge_weight"])
+        else:
+            w_raw = jnp.zeros_like(sa["edge_weight"])
+        w = sr.weights(w_raw, sa["edge_valid"])
+        out = jnp.full(x.shape, sr.zero, dtype=x.dtype)
+        out = sr.scatter_accum(out, dst, sr.times(w, x[src]))
+        out = sr.scatter_accum(out, src, sr.times(w, x[dst]))
+        return out
+
+    return {}, combine
+
+
+# ---------------------------------------------------------------------------
+# segment: sorted-CSR reduction (cumsum-diff for ⊕ = +)
+# ---------------------------------------------------------------------------
+
+def _segment_prepare(rt, semiring: str, weights: str):
+    sr = get_semiring(semiring)
+    p, vmax, emax = rt.p, rt.vmax, rt.emax
+    w_raw = _edge_operand(rt, weights)
+
+    # both directions of every edge, output-major: row j of the incidence
+    # receives x[inc_in[j]] ⊗ w[j] into output vertex inc_out[j]
+    inc_out = np.concatenate([rt.local_edges[:, :, 1],
+                              rt.local_edges[:, :, 0]], axis=1)  # (p, 2E)
+    inc_in = np.concatenate([rt.local_edges[:, :, 0],
+                             rt.local_edges[:, :, 1]], axis=1)
+    valid2 = np.concatenate([rt.edge_valid, rt.edge_valid], axis=1)
+    w2 = np.concatenate([w_raw, w_raw], axis=1).astype(np.float32)
+    # invalid rows sort to a trailing dump segment (id = Vmax) and carry
+    # the semiring's annihilator, so they contribute the ⊕ identity
+    inc_out = np.where(valid2, inc_out, vmax).astype(np.int32)
+    w2 = np.where(valid2, w2, np.float32(sr.absent))
+    order = np.argsort(inc_out, axis=1, kind="stable")
+    inc_out = np.take_along_axis(inc_out, order, 1)
+    inc_in = np.take_along_axis(inc_in, order, 1).astype(np.int32)
+    w2 = np.take_along_axis(w2, order, 1)
+    ptr = np.zeros((p, vmax + 1), dtype=np.int32)
+    for i in range(p):
+        counts = np.bincount(inc_out[i][inc_out[i] < vmax], minlength=vmax)
+        ptr[i, 1:] = np.cumsum(counts)
+    extras = {"eb_seg_out": jnp.asarray(inc_out),
+              "eb_seg_in": jnp.asarray(inc_in),
+              "eb_seg_w": jnp.asarray(w2),
+              "eb_seg_ptr": jnp.asarray(ptr)}
+
+    def combine(sa, x):
+        vals = sr.times(sa["eb_seg_w"], x[sa["eb_seg_in"]])
+        if sr.name == "plus_times":
+            s = jnp.concatenate([jnp.zeros(1, vals.dtype), jnp.cumsum(vals)])
+            ptr_ = sa["eb_seg_ptr"]
+            return (s[ptr_[1:]] - s[ptr_[:-1]]).astype(x.dtype)
+        seg = (jax.ops.segment_min if sr.name == "min_plus"
+               else jax.ops.segment_max)
+        y = seg(vals, sa["eb_seg_out"], num_segments=vmax + 1,
+                indices_are_sorted=True)[:vmax]
+        # empty segments come back as the reduction's own identity
+        # (+inf / -inf); clamp the (or, and) case to the semiring zero
+        if sr.name == "or_and":
+            y = jnp.maximum(y, sr.zero)
+        return y.astype(x.dtype)
+
+    return extras, combine
+
+
+# ---------------------------------------------------------------------------
+# pallas: blocked Block-ELL SpMV over the degree-sorted local adjacency
+# ---------------------------------------------------------------------------
+
+def _pallas_prepare_factory(block_size: int = 128,
+                            interpret: bool | None = None):
+    def prepare(rt, semiring: str, weights: str):
+        sr = get_semiring(semiring)
+        bsr = rt.local_bsr(block_size=block_size, semiring=sr.name,
+                           weights=weights)
+        ip = (jax.default_backend() != "tpu") if interpret is None \
+            else interpret
+        extras = {"eb_bsr_cols": jnp.asarray(bsr.cols),
+                  "eb_bsr_blocks": jnp.asarray(bsr.blocks),
+                  "eb_bsr_gather": jnp.asarray(bsr.gather),
+                  "eb_bsr_rank": jnp.asarray(bsr.rank)}
+
+        def combine(sa, x):
+            xb = x[sa["eb_bsr_gather"]].astype(jnp.float32)
+            y = spmv_pallas(sa["eb_bsr_cols"], sa["eb_bsr_blocks"], xb,
+                            block_size=block_size, interpret=ip,
+                            semiring=sr.name)
+            return y[sa["eb_bsr_rank"]].astype(x.dtype)
+
+        return extras, combine
+
+    return prepare
+
+
+_REGISTRY = {
+    "scatter": lambda **kw: EdgeBackend(
+        "scatter", "gather-scatter oracle (at[].⊕ per direction)",
+        _scatter_prepare, **kw),
+    "segment": lambda **kw: EdgeBackend(
+        "segment", "sorted-CSR reduction (cumsum-diff; CPU fast path)",
+        _segment_prepare, **kw),
+    "pallas": lambda block_size=128, interpret=None, **kw: EdgeBackend(
+        "pallas", "blocked Block-ELL semiring SpMV (kernels/bsr_spmv)",
+        _pallas_prepare_factory(block_size, interpret),
+        check_rep=False, **kw),
+}
+
+BACKENDS = tuple(_REGISTRY)
+
+
+def get_backend(name, **opts) -> EdgeBackend:
+    """Resolve a backend by name (``EdgeBackend`` passes through).
+
+    ``opts`` are backend-specific: ``pallas`` takes ``block_size``
+    (default 128, the MXU tile) and ``interpret`` (None = auto:
+    interpreter off-TPU).
+    """
+    if isinstance(name, EdgeBackend):
+        return name
+    try:
+        factory = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown edge-kernel backend {name!r} "
+                         f"(choices: {sorted(_REGISTRY)})") from None
+    return factory(**opts)

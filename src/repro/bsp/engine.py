@@ -56,8 +56,14 @@ def exchange(partial: jnp.ndarray, rep_slot: jnp.ndarray, r_pad: int,
     return jnp.where(rep_slot >= 0, tot[slot], partial)
 
 
-def make_step(superstep: Callable, static, *, mesh: Mesh | None = None):
-    """Compile one BSP superstep: state -> (state, (p,) active counts)."""
+def make_step(superstep: Callable, static, *, mesh: Mesh | None = None,
+              check_rep: bool = True):
+    """Compile one BSP superstep: state -> (state, (p,) active counts).
+
+    ``check_rep=False`` disables shard_map's replication check — required
+    when the superstep body contains ops without a replication rule
+    (``pallas_call``; the edge-kernel backends declare this).
+    """
     if mesh is None:
         body = jax.vmap(superstep, axis_name=MACHINES, in_axes=(0, 0))
         return jax.jit(lambda s: body(s, static))
@@ -75,15 +81,16 @@ def make_step(superstep: Callable, static, *, mesh: Mesh | None = None):
         return shard_map(
             inner, mesh=mesh,
             in_specs=(state_spec_of(state), static_spec),
-            out_specs=(state_spec_of(state), P(MACHINES)))(state, static)
+            out_specs=(state_spec_of(state), P(MACHINES)),
+            check_vma=check_rep)(state, static)
 
     return jax.jit(step)
 
 
 def run_bsp(superstep: Callable, state, static, num_steps: int,
-            *, mesh: Mesh | None = None):
+            *, mesh: Mesh | None = None, check_rep: bool = True):
     """Iterate the superstep; returns (final_state, (steps, p) actives)."""
-    step = make_step(superstep, static, mesh=mesh)
+    step = make_step(superstep, static, mesh=mesh, check_rep=check_rep)
     actives = []
     for _ in range(num_steps):
         state, act = step(state)

@@ -8,20 +8,142 @@ Every machine gets the same padded shapes (shard_map/vmap require it):
 * ``edge_weight``:      (p, Emax) float32
 * ``vertex_valid``:     (p, Vmax) bool
 * ``global_degree``:    (p, Vmax) degree of the vertex in G (pad: 1)
+* ``weighted_degree``:  (p, Vmax) sum of incident edge weights (pad: 1)
 * ``rep_slot``:         (p, Vmax) slot into the replica exchange table,
                         -1 if the vertex lives on a single machine.
 
 The replica table has one slot per vertex present on ≥2 machines; the BSP
 exchange is a psum/pmin over a (R+1,) buffer (last slot = scatter dump for
 non-replicated lanes).
+
+:meth:`PartitionRuntime.local_bsr` additionally exposes each machine's
+edge set as a blocked local adjacency (:class:`LocalBSR`) — the layout the
+Pallas edge-kernel backend consumes (``repro.bsp.backends``).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import numpy as np
 
 from ..core.graph import Graph
+
+
+@dataclasses.dataclass(frozen=True)
+class LocalBSR:
+    """Per-machine blocked local adjacency, stacked over machines.
+
+    Each machine's ``local_edges`` become one Block-ELL matrix
+    (``repro.kernels.bsr_spmv``) over its padded local vertex space, after
+    a *degree-sorted local relabeling*: local vertices are reordered by
+    descending local degree, so hub rows/columns cluster into the leading
+    blocks and the ELL fill concentrates there instead of smearing one
+    nonzero block per hub edge across the whole matrix.  All machines
+    share (R, K, bm) — K is padded to the machine-wise max with absent
+    blocks — so the stack vmaps / shard_maps like every other runtime
+    array.
+
+    ``gather`` maps each padded BSR position to the local vertex whose
+    value it reads (pad positions read slot 0; their matrix entries are
+    all-absent so the contribution is the ⊕ identity); ``rank`` maps each
+    local vertex to its BSR position — together they carry values into
+    and out of the blocked index space inside a superstep.
+    """
+
+    cols: np.ndarray        # (p, R, K) int32 block-column ids
+    blocks: np.ndarray      # (p, R, K, bm, bm) float32 (absent-padded)
+    gather: np.ndarray      # (p, R*bm) int32: BSR position -> local index
+    rank: np.ndarray        # (p, Vmax) int32: local index -> BSR position
+    block_size: int
+    semiring: str
+    fill_stats: tuple       # per-machine dicts (see BsrMatrix.fill_stats)
+
+    @property
+    def p(self) -> int:
+        return self.cols.shape[0]
+
+    @property
+    def padded(self) -> int:
+        return self.gather.shape[1]
+
+    def aggregate_fill(self) -> dict:
+        """ELL fill/padding over all machines (the smoke-report numbers)."""
+        tot = lambda k: sum(s[k] for s in self.fill_stats)
+        slots = sum(s["rows"] * s["ell_k"] for s in self.fill_stats)
+        cells = sum(s["nnz_blocks"] * s["block_size"] ** 2
+                    for s in self.fill_stats)
+        return {
+            "machines": len(self.fill_stats),
+            "block_size": self.block_size,
+            "ell_k_max": max(s["ell_k"] for s in self.fill_stats),
+            "nnz": tot("nnz"),
+            "nnz_blocks": tot("nnz_blocks"),
+            "block_fill": tot("nnz_blocks") / max(1, slots),
+            "entry_fill": tot("nnz") / max(1, cells),
+        }
+
+    @classmethod
+    def build(cls, rt: "PartitionRuntime", *, block_size: int = 128,
+              semiring: str = "plus_times",
+              weights: str = "weight") -> "LocalBSR":
+        """Blocked adjacency from ``rt.local_edges``, one machine at a time.
+
+        ``weights`` picks the stored ⊗ operand per edge: ``"weight"``
+        (``rt.edge_weight``), ``"unit"`` (1, presence), or ``"zero"``
+        (0 — (min,+) label propagation).
+        """
+        from ..kernels.bsr_spmv import bsr_from_edges, get_semiring
+        p, vmax = rt.p, rt.vmax
+        bm = int(block_size)
+        mats, orders, ranks = [], [], []
+        for i in range(p):
+            ev = rt.edge_valid[i]
+            e = rt.local_edges[i][ev]
+            # local degree over the valid prefix; invalid slots sort last
+            deg = np.zeros(vmax, dtype=np.int64)
+            if len(e):
+                np.add.at(deg, e[:, 0], 1)
+                np.add.at(deg, e[:, 1], 1)
+            order = np.argsort(-deg, kind="stable").astype(np.int32)
+            rank = rank_of(order, vmax)
+            if weights == "weight":
+                w = rt.edge_weight[i][ev]
+            elif weights == "unit":
+                w = np.ones(len(e), dtype=np.float32)
+            elif weights == "zero":
+                w = np.zeros(len(e), dtype=np.float32)
+            else:
+                raise ValueError(f"weights must be 'weight'|'unit'|'zero', "
+                                 f"got {weights!r}")
+            mats.append(bsr_from_edges(rank[e] if len(e) else e, vmax,
+                                       values=w, block_size=bm,
+                                       semiring=semiring))
+            orders.append(order)
+            ranks.append(rank)
+        absent = get_semiring(semiring).absent
+        R = mats[0].cols.shape[0]
+        K = max(m.cols.shape[1] for m in mats)
+        cols = np.zeros((p, R, K), dtype=np.int32)
+        blocks = np.full((p, R, K, bm, bm), absent, dtype=np.float32)
+        for i, m in enumerate(mats):
+            k = m.cols.shape[1]
+            cols[i, :, :k] = m.cols
+            blocks[i, :, :k] = m.blocks
+        gather = np.zeros((p, R * bm), dtype=np.int32)
+        for i in range(p):
+            gather[i, :vmax] = orders[i]
+        return cls(cols=cols, blocks=blocks, gather=gather,
+                   rank=np.stack(ranks),
+                   block_size=bm, semiring=get_semiring(semiring).name,
+                   fill_stats=tuple(m.fill_stats() for m in mats))
+
+
+def rank_of(order: np.ndarray, n: int) -> np.ndarray:
+    """Inverse permutation: position of each of ``n`` items in ``order``."""
+    rank = np.empty(n, dtype=np.int32)
+    rank[order] = np.arange(n, dtype=np.int32)
+    return rank
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,6 +157,7 @@ class PartitionRuntime:
     edge_valid: np.ndarray             # (p, Emax) bool
     edge_weight: np.ndarray            # (p, Emax) float32
     global_degree: np.ndarray          # (p, Vmax) int32
+    weighted_degree: np.ndarray        # (p, Vmax) float32 (pad: 1)
     rep_slot: np.ndarray               # (p, Vmax) int32
     verts_per_machine: np.ndarray      # (p,)
     edges_per_machine: np.ndarray      # (p,)
@@ -46,6 +169,27 @@ class PartitionRuntime:
     @property
     def emax(self) -> int:
         return self.local_edges.shape[1]
+
+    @functools.cached_property
+    def _bsr_cache(self) -> dict:
+        return {}
+
+    def local_bsr(self, *, block_size: int = 128,
+                  semiring: str = "plus_times",
+                  weights: str = "weight") -> LocalBSR:
+        """The blocked per-machine adjacency (:class:`LocalBSR`).
+
+        Built once from ``local_edges`` per (block_size, semiring,
+        weights) combination and cached on the runtime — the Pallas
+        edge-kernel backend's layout, with padding/ELL-fill stats on the
+        returned object.
+        """
+        key = (int(block_size), str(semiring), str(weights))
+        if key not in self._bsr_cache:
+            self._bsr_cache[key] = LocalBSR.build(
+                self, block_size=block_size, semiring=semiring,
+                weights=weights)
+        return self._bsr_cache[key]
 
     @classmethod
     def build(cls, g: Graph, assign: np.ndarray, p: int,
@@ -77,18 +221,26 @@ class PartitionRuntime:
         rep_index = np.full(g.num_vertices, -1, dtype=np.int32)
         rep_index[rep_vertices] = np.arange(len(rep_vertices), dtype=np.int32)
 
+        # global weighted degree: sum of incident edge weights (the
+        # (+,×) message normalizer; equals ``deg`` for unit weights)
+        wdeg = np.zeros(g.num_vertices, dtype=np.float64)
+        np.add.at(wdeg, g.edges[:, 0], edge_weights)
+        np.add.at(wdeg, g.edges[:, 1], edge_weights)
+
         lv = np.full((p, vmax), -1, dtype=np.int32)
         vv = np.zeros((p, vmax), dtype=bool)
         le = np.zeros((p, emax, 2), dtype=np.int32)
         ev = np.zeros((p, emax), dtype=bool)
         ew = np.zeros((p, emax), dtype=np.float32)
         gd = np.ones((p, vmax), dtype=np.int32)
+        wd = np.ones((p, vmax), dtype=np.float32)
         rs = np.full((p, vmax), -1, dtype=np.int32)
         for i in range(p):
             nv, ne = len(locals_[i]), len(edges_[i])
             lv[i, :nv] = locals_[i]
             vv[i, :nv] = True
             gd[i, :nv] = deg[locals_[i]]
+            wd[i, :nv] = wdeg[locals_[i]]
             rs[i, :nv] = rep_index[locals_[i]]
             if ne:
                 le[i, :ne] = edges_[i]
@@ -98,7 +250,8 @@ class PartitionRuntime:
             p=p, num_vertices=g.num_vertices,
             num_replicas=len(rep_vertices),
             local_vertex_gid=lv, vertex_valid=vv, local_edges=le,
-            edge_valid=ev, edge_weight=ew, global_degree=gd, rep_slot=rs,
+            edge_valid=ev, edge_weight=ew, global_degree=gd,
+            weighted_degree=wd, rep_slot=rs,
             verts_per_machine=np.array([len(v) for v in locals_]),
             edges_per_machine=np.array([len(e) for e in edges_]))
 
@@ -138,8 +291,12 @@ class PartitionRuntime:
         ev = np.zeros((p, emax), dtype=bool)
         ew = np.zeros((p, emax), dtype=np.float32)
         gd = np.ones((p, vmax), dtype=np.int32)
+        wd = np.ones((p, vmax), dtype=np.float32)
         rs = np.full((p, vmax), -1, dtype=np.int32)
         lut = np.full(V, -1, dtype=np.int64)
+        # every edge lives on exactly one machine, so the global weighted
+        # degree accumulates across the one-shard-at-a-time loop
+        wdeg = np.zeros(V, dtype=np.float64)
         for i in range(p):
             verts = np.flatnonzero(member[i])
             lut[verts] = np.arange(len(verts))
@@ -153,12 +310,20 @@ class PartitionRuntime:
             if ne:
                 le[i, :ne] = lut[edges_i]
                 ev[i, :ne] = True
-                ew[i, :ne] = (1.0 if edge_weights is None
-                              else edge_weights(edges_i, i))
+                w_i = (np.ones(ne, dtype=np.float32)
+                       if edge_weights is None
+                       else np.asarray(edge_weights(edges_i, i),
+                                       dtype=np.float32))
+                ew[i, :ne] = w_i
+                np.add.at(wdeg, edges_i[:, 0], w_i)
+                np.add.at(wdeg, edges_i[:, 1], w_i)
+        for i in range(p):
+            wd[i, vv[i]] = wdeg[lv[i, vv[i]]]
         return cls(
             p=p, num_vertices=V, num_replicas=len(rep_vertices),
             local_vertex_gid=lv, vertex_valid=vv, local_edges=le,
-            edge_valid=ev, edge_weight=ew, global_degree=gd, rep_slot=rs,
+            edge_valid=ev, edge_weight=ew, global_degree=gd,
+            weighted_degree=wd, rep_slot=rs,
             verts_per_machine=verts_per, edges_per_machine=edges_per)
 
     @classmethod

@@ -375,11 +375,13 @@ class _BlockEngine:
 
     def __init__(self, state, scorer, caps, nE, nV, *,
                  block_size: int = 4096, max_waves: int = 3,
-                 replica_frac: float = 0.5, sink=None):
+                 replica_frac: float = 0.5, creator_scalar: bool = False,
+                 sink=None):
         self.state, self.scorer, self.caps = state, scorer, caps
         self.nE, self.nV, self.max_waves, self.sink = nE, nV, max_waves, sink
         self.block_size = max(1, int(block_size))
         self.replica_frac = replica_frac
+        self.creator_scalar = creator_scalar
         self.u = np.empty(0, dtype=np.int64)
         self.v = np.empty(0, dtype=np.int64)
         self.eids: np.ndarray | None = None
@@ -515,12 +517,24 @@ class _BlockEngine:
         # membership the admitted edges just built — the oracle's
         # continuously-discovered co-location at wave granularity.
         cand = np.flatnonzero(nfmask)
+        scalar_rows = np.empty(0, dtype=np.int64)
         if len(cand):
             m = best[cand]
-            r = cumcount(m) + falloc[m]
-            quota = max(1, -(-min(len(cand), self.block_size) // p))
             creating = ((any_u[cand] & ~pres_u[cand, m])
                         | (any_v[cand] & ~pres_v[cand, m]))
+            if self.creator_scalar:
+                # hub_split idiom: the replica-*creating* minority (the
+                # placements the binary-presence scorers are staleness-
+                # sensitive to) drains through the exact per-edge path
+                # after the wave; the non-creating majority stays
+                # vectorized.  No throttle needed — creators see fully
+                # fresh membership.
+                scalar_rows = cand[creating]
+                cand = cand[~creating]
+                m = best[cand]
+                creating = np.zeros(len(cand), dtype=bool)
+            r = cumcount(m) + falloc[m]
+            quota = max(1, -(-min(len(cand), self.block_size) // p))
             rc = np.zeros(len(cand), dtype=np.int64)
             rc[creating] = np.arange(int(creating.sum()))
             rc_quota = max(1, int(self.replica_frac * quota))
@@ -562,15 +576,53 @@ class _BlockEngine:
         dv = (np.bincount(ms[new_u], minlength=p)
               + np.bincount(ms[new_v], minlength=p)).astype(np.float64)
         self._emit(take, ms, verts_delta=dv)
+        if len(scalar_rows):
+            self._scalar_drain(scalar_rows)
+            take = np.concatenate([take, scalar_rows])
         self._shrink(take)
         return True
+
+    def _scalar_drain(self, rows: np.ndarray) -> None:
+        """Exact per-edge placement for replica-creating rows.
+
+        Each row rescores against fully fresh state and places through the
+        oracle's decision rule (first-argmax over machines with room, else
+        least-overfull), so a wave's creating placements are decision-
+        identical to the per-edge loop run at this point in the stream —
+        the vectorized majority pays none of that cost.  State mutation
+        goes through the one-edge light path (``admit_single``); the sink
+        sees the drained rows as one batch at the end, in placement order.
+        """
+        state, scorer, caps = self.state, self.scorer, self.caps
+        cnt, eper = state.cnt, state.edges_per
+        ms = np.empty(len(rows), dtype=np.int64)
+        for t, j in enumerate(rows):
+            uj, vj = self.u[j], self.v[j]
+            pu, pv = cnt[:, uj] > 0, cnt[:, vj] > 0
+            aux = None if self.aux is None else self.aux[j:j + 1]
+            sc = scorer.score(state, self.u[j:j + 1], self.v[j:j + 1],
+                              pu[None], pv[None], aux, caps,
+                              self.nE, self.nV)[0]
+            ok = eper < caps
+            if ok.any():
+                i = int(np.argmax(np.where(ok, sc, -np.inf)))
+            else:
+                i = int(np.argmin(eper - caps))
+            dv = float(~pu[i]) + float((uj != vj) & ~pv[i])
+            state.admit_single(uj, vj,
+                               None if self.eids is None else self.eids[j],
+                               i, dv)
+            ms[t] = i
+        if self.sink is not None:
+            self.sink(np.stack([self.u[rows], self.v[rows]], axis=1), ms)
 
 
 def block_stream_assign(g: Graph, cluster: Cluster, scorer, *,
                         block_size: int = DEFAULT_BLOCK, seed: int = 0,
                         order: np.ndarray | None = None,
                         max_waves: int = 3,
-                        replica_frac: float = 0.5) -> np.ndarray:
+                        replica_frac: float = 0.5,
+                        creator_scalar: bool = False) -> np.ndarray:
     """Run a block-stream scorer over an in-memory graph.
 
     The shared ``(p, V)`` membership matrix and per-machine totals live in
@@ -591,7 +643,8 @@ def block_stream_assign(g: Graph, cluster: Cluster, scorer, *,
     ev = g.edges[:, 1].astype(np.int64)
     eng = _BlockEngine(state, scorer, caps, g.num_edges,
                        max(1, g.num_vertices), block_size=B,
-                       max_waves=max_waves, replica_frac=replica_frac)
+                       max_waves=max_waves, replica_frac=replica_frac,
+                       creator_scalar=creator_scalar)
     for lo in range(0, len(order), B):
         blk = order[lo:lo + B]
         eng.push(eu[blk], ev[blk], blk)
@@ -648,7 +701,8 @@ def stream_partition(source, num_vertices: int | None = None,
                      bucket_rows: int = 1 << 16,
                      block_size: int | None = None,
                      max_waves: int | None = None,
-                     replica_frac: float | None = None, sink=None,
+                     replica_frac: float | None = None,
+                     creator_scalar: bool | None = None, sink=None,
                      **scorer_kw) -> StreamMembership:
     """Partition an edge stream that never materializes as one array.
 
@@ -693,7 +747,9 @@ def stream_partition(source, num_vertices: int | None = None,
         state, scorer, caps, num_edges, max(1, num_vertices), block_size=B,
         max_waves=dflt["max_waves"] if max_waves is None else max_waves,
         replica_frac=(dflt["replica_frac"] if replica_frac is None
-                      else replica_frac), sink=sink)
+                      else replica_frac),
+        creator_scalar=(dflt["creator_scalar"] if creator_scalar is None
+                        else creator_scalar), sink=sink)
     try:
         # re-chunk the source to exact engine-block boundaries: the wave
         # engine's admission quotas key off its block size, so decisions
@@ -730,14 +786,19 @@ def stream_partition(source, num_vertices: int | None = None,
 
 #: Per-method engine defaults, picked from the LJ-proxy grid
 #: (benchmarks/partition_time.run_streaming_compare): block size, waves
-#: per block before stragglers carry, and the replica-throttle fraction.
-#: EBV's binary-presence score is the staleness-sensitive one — it drains
-#: every block fully and throttles replica creation hard, trading speed
-#: for replication quality (see ROADMAP follow-up).
+#: per block before stragglers carry, the replica-throttle fraction, and
+#: whether replica-*creating* placements drain through the exact scalar
+#: path.  EBV's binary-presence score is the staleness-sensitive one —
+#: it sequentializes exactly the creating minority (``creator_scalar``,
+#: the hub_split idiom) and keeps the non-creating ~85% vectorized, which
+#: replaces the old full-drain + hard-throttle compromise.
 ENGINE_DEFAULTS = {
-    "greedy": dict(block_size=None, max_waves=6, replica_frac=0.5),
-    "hdrf": dict(block_size=None, max_waves=3, replica_frac=1.0),
-    "ebv": dict(block_size=None, max_waves=1 << 30, replica_frac=0.25),
+    "greedy": dict(block_size=None, max_waves=6, replica_frac=0.5,
+                   creator_scalar=False),
+    "hdrf": dict(block_size=None, max_waves=3, replica_frac=1.0,
+                 creator_scalar=False),
+    "ebv": dict(block_size=None, max_waves=3, replica_frac=0.25,
+                creator_scalar=True),
 }
 
 
@@ -746,7 +807,8 @@ def _block_method(name, key, scorer_cls):
 
     def run(g: Graph, cluster: Cluster, seed: int = 0,
             block_size: int | None = None, max_waves: int | None = None,
-            replica_frac: float | None = None, **scorer_kw) -> np.ndarray:
+            replica_frac: float | None = None,
+            creator_scalar: bool | None = None, **scorer_kw) -> np.ndarray:
         if block_size is None:
             block_size = (dflt["block_size"]
                           or auto_block_size(g.num_edges))
@@ -755,7 +817,9 @@ def _block_method(name, key, scorer_cls):
             block_size=block_size,
             max_waves=dflt["max_waves"] if max_waves is None else max_waves,
             replica_frac=(dflt["replica_frac"] if replica_frac is None
-                          else replica_frac))
+                          else replica_frac),
+            creator_scalar=(dflt["creator_scalar"] if creator_scalar is None
+                            else creator_scalar))
     run.__name__ = name
     run.__doc__ = (f"Block-stream {name} (see module docstring); "
                    f"``block_size=1`` bit-reproduces ``{name}_oracle``.")
@@ -779,12 +843,14 @@ register(Partitioner(
 register(Partitioner(
     "dbh", dbh, "streaming",
     "degree-based hashing [Xie et al. 2014]", frozenset(), ("seed",)))
-_ENGINE_KNOBS = ("seed", "block_size", "max_waves", "replica_frac")
+_ENGINE_KNOBS = ("seed", "block_size", "max_waves", "replica_frac",
+                 "creator_scalar")
 #: knobs of the graph-free ``stream`` entry (``Partitioner.stream``):
 #: engine knobs minus ``seed`` (stream order is arrival order), plus the
 #: dedup discipline, spill controls, and the placement sink.
 _STREAM_KNOBS = ("block_size", "max_waves", "replica_frac",
-                 "dedup", "spill_dir", "bucket_rows", "sink")
+                 "creator_scalar", "dedup", "spill_dir", "bucket_rows",
+                 "sink")
 
 
 def _stream_entry(key):

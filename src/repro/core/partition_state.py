@@ -419,6 +419,21 @@ class PartitionState:
         self.t_cal += self._c_edge * dm + self._c_node * verts_delta
         self._costs_stale = True
 
+    def admit_single(self, u: int, v: int, e, i: int,
+                     verts_delta: float) -> None:
+        """Light-path admission of one edge — the block engine's scalar
+        drain calls this per replica-creating edge, so it carries none of
+        :meth:`admit_block`'s batch scaffolding.  Same staleness contract:
+        Eq. 4 quantities wait for :meth:`refresh_costs`.
+        """
+        self.cnt[i, u] += 1
+        self.cnt[i, v] += 1
+        self.assign[e] = i
+        self.edges_per[i] += 1.0
+        self.verts_per[i] += verts_delta
+        self.t_cal[i] += self._c_edge[i] + self._c_node[i] * verts_delta
+        self._costs_stale = True
+
     def refresh_costs(self) -> None:
         """Rebuild the Eq. 4 quantities after light-path admissions."""
         member = self.cnt > 0
@@ -486,6 +501,17 @@ class StreamMembership:
             np.add.at(self.cnt, (ms, v), 1)
         self.verts_per += verts_delta
         self.edges_per += np.bincount(ms, minlength=self.p).astype(np.float64)
+
+    def admit_single(self, u: int, v: int, e, i: int,
+                     verts_delta: float) -> None:
+        """One-edge admission without the batch scaffolding (scalar drain).
+
+        ``e`` is accepted for signature parity with ``PartitionState`` and
+        ignored — the stream state tracks no per-edge assignment."""
+        self.cnt[i, u] += 1
+        self.cnt[i, v] += 1
+        self.edges_per[i] += 1.0
+        self.verts_per[i] += verts_delta
 
     @property
     def replicas(self) -> np.ndarray:

@@ -1,5 +1,10 @@
 from .ops import bsr_from_edges, bsr_spmv, BsrMatrix
-from .ref import bsr_spmv_ref, dense_from_bsr
+from .ref import bsr_spmv_ref, dense_from_bsr, dense_semiring_mv
+from .semiring import (Semiring, SEMIRINGS, get_semiring,
+                       PLUS_TIMES, MIN_PLUS, OR_AND)
+from .kernel import spmv_pallas
 
 __all__ = ["bsr_from_edges", "bsr_spmv", "BsrMatrix",
-           "bsr_spmv_ref", "dense_from_bsr"]
+           "bsr_spmv_ref", "dense_from_bsr", "dense_semiring_mv",
+           "Semiring", "SEMIRINGS", "get_semiring",
+           "PLUS_TIMES", "MIN_PLUS", "OR_AND", "spmv_pallas"]

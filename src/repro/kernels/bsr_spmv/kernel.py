@@ -1,17 +1,26 @@
-"""Block-ELL SpMV Pallas TPU kernel.
+"""Block-ELL semiring SpMV Pallas TPU kernel.
 
 TPU adaptation of the CPU/GPU CSR gather-scatter SpMV the paper's BSP
 runtime hot loop uses: the adjacency matrix is tiled into dense 128×128
 blocks (MXU-aligned); each block-row holds a fixed number K of nonzero
 blocks (ELL padding).  Block column ids are *scalar-prefetched* so the
 x-operand BlockSpec index_map can stream exactly the needed x blocks
-HBM→VMEM; each grid step is one dense (bm×bm)·(bm,) MXU multiply
-accumulated into the y block, giving arithmetic intensity bm/6 FLOP/byte
-instead of the <1 of scalar gather-scatter.
+HBM→VMEM; each grid step combines one dense (bm×bm) block with one (bm,)
+x block and ⊕-accumulates into the y block.
+
+The combine is semiring-parametric (``repro.kernels.bsr_spmv.semiring``):
+
+* ``plus_times`` — ``y += A·x``, one MXU multiply per grid step
+  (arithmetic intensity bm/6 FLOP/byte instead of the <1 of scalar
+  gather-scatter);
+* ``min_plus``   — ``y = min(y, min_j(A + x))``, the SSSP relaxation
+  (VPU broadcast + row-min; absent entries hold +inf);
+* ``or_and``     — ``y = max(y, max_j(A·x))`` over {0,1} floats, the
+  BFS frontier expansion.
 
 Layouts:
   cols:   (R, K)  int32    scalar-prefetch operand (SMEM)
-  blocks: (R, K, bm, bm)   dense nonzero blocks (zero-padded)
+  blocks: (R, K, bm, bm)   dense nonzero blocks (``semiring.absent``-padded)
   x:      (C*bm,)          input vector, padded to block multiple
   y:      (R*bm,)          output
 
@@ -27,28 +36,47 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-
-def _kernel(cols_ref, block_ref, x_ref, y_ref):
-    k = pl.program_id(1)
-
-    @pl.when(k == 0)
-    def _init():
-        y_ref[...] = jnp.zeros_like(y_ref)
-
-    a = block_ref[0, 0]                       # (bm, bm)
-    x = x_ref[...]                            # (bm,)
-    y_ref[...] += jnp.dot(a, x, preferred_element_type=y_ref.dtype)
+from .semiring import get_semiring
 
 
-@functools.partial(jax.jit, static_argnames=("block_size", "interpret"))
+def _make_kernel(semiring: str):
+    def kernel(cols_ref, block_ref, x_ref, y_ref):
+        k = pl.program_id(1)
+
+        @pl.when(k == 0)
+        def _init():
+            if semiring == "plus_times":
+                y_ref[...] = jnp.zeros_like(y_ref)
+            elif semiring == "min_plus":
+                y_ref[...] = jnp.full_like(y_ref, jnp.inf)
+            else:                                   # or_and: 0/1 floats
+                y_ref[...] = jnp.zeros_like(y_ref)
+
+        a = block_ref[0, 0]                       # (bm, bm)
+        x = x_ref[...]                            # (bm,)
+        if semiring == "plus_times":
+            y_ref[...] += jnp.dot(a, x, preferred_element_type=y_ref.dtype)
+        elif semiring == "min_plus":
+            y_ref[...] = jnp.minimum(y_ref[...],
+                                     jnp.min(a + x[None, :], axis=1))
+        else:                                     # or_and
+            y_ref[...] = jnp.maximum(y_ref[...],
+                                     jnp.max(a * x[None, :], axis=1))
+    return kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_size", "interpret", "semiring"))
 def spmv_pallas(cols: jnp.ndarray, blocks: jnp.ndarray, x: jnp.ndarray,
-                *, block_size: int = 128, interpret: bool = True):
+                *, block_size: int = 128, interpret: bool = True,
+                semiring: str = "plus_times"):
+    sr = get_semiring(semiring)
     R, K = cols.shape
     bm = block_size
     assert blocks.shape == (R, K, bm, bm), blocks.shape
     grid = (R, K)
     return pl.pallas_call(
-        _kernel,
+        _make_kernel(sr.name),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,

@@ -1,4 +1,4 @@
-"""Public ops around the Block-ELL SpMV kernel: layout builder + jit wrapper."""
+"""Public ops around the Block-ELL semiring SpMV kernel: layout + wrapper."""
 from __future__ import annotations
 
 import dataclasses
@@ -8,16 +8,23 @@ import jax.numpy as jnp
 import numpy as np
 
 from .kernel import spmv_pallas
+from .semiring import Semiring, get_semiring
 
 
 @dataclasses.dataclass(frozen=True)
 class BsrMatrix:
-    """Symmetric adjacency (optionally weighted) in Block-ELL layout."""
+    """Symmetric adjacency (optionally weighted) in Block-ELL layout.
+
+    Missing entries hold ``semiring.absent`` (0 for (+,×)/(or,and), +inf
+    for (min,+)), so zero-padding blocks and ELL fill slots contribute the
+    ⊕ identity to every product.
+    """
 
     cols: np.ndarray     # (R, K) int32 block-column ids
     blocks: np.ndarray   # (R, K, bm, bm) float32 dense blocks
     n: int               # logical dimension (<= R*bm)
     block_size: int
+    semiring: str = "plus_times"
 
     @property
     def shape(self):
@@ -28,24 +35,62 @@ class BsrMatrix:
         return self.cols.shape[0] * self.block_size
 
     @property
+    def nnz(self) -> int:
+        """Stored (present) entries — parallel edges collapse to one."""
+        absent = get_semiring(self.semiring).absent
+        return int((self.blocks != absent).sum())
+
+    @property
     def nnz_blocks(self) -> int:
-        return int((np.abs(self.blocks).sum(axis=(2, 3)) > 0).sum())
+        absent = get_semiring(self.semiring).absent
+        return int((self.blocks != absent).any(axis=(2, 3)).sum())
+
+    def fill_stats(self) -> dict:
+        """ELL padding/fill accounting (the MXU-utilization proxy).
+
+        * ``block_fill`` — fraction of the (R, K) ELL slots holding a
+          nonzero block (1 − block_fill is pure padding work);
+        * ``entry_fill`` — fraction of stored dense cells that are real
+          entries (how dense the nonzero blocks are);
+        * ``pad_frac``   — fraction of the padded dimension beyond ``n``.
+        """
+        R, K = self.cols.shape
+        bm = self.block_size
+        nb = self.nnz_blocks
+        return {
+            "rows": R, "ell_k": K, "block_size": bm,
+            "nnz": self.nnz, "nnz_blocks": nb,
+            "block_fill": nb / max(1, R * K),
+            "entry_fill": self.nnz / max(1, nb * bm * bm),
+            "pad_frac": (self.padded - self.n) / max(1, self.padded),
+        }
 
 
 def bsr_from_edges(edges: np.ndarray, n: int, values: np.ndarray | None = None,
-                   block_size: int = 128, symmetric: bool = True) -> BsrMatrix:
+                   block_size: int = 128, symmetric: bool = True,
+                   semiring: str | Semiring = "plus_times") -> BsrMatrix:
     """Build a Block-ELL matrix from an (E, 2) edge list.
 
-    A[u, v] += w (and A[v, u] += w when symmetric).  Zero-padding blocks
-    point at block-column 0 (their contribution is 0·x ≡ 0).
+    ``A[u, v] ⊕= w`` (and ``A[v, u] ⊕= w`` when symmetric) under the
+    semiring's ⊕ — parallel edges sum for (+,×), take the lightest weight
+    for (min,+), and collapse to presence for (or,and).  Missing entries
+    hold ``semiring.absent``; padding blocks point at block-column 0
+    (their contribution is the ⊕ identity by the annihilator property).
     """
+    sr = get_semiring(semiring)
     bm = block_size
     R = max(1, -(-n // bm))
-    e = np.asarray(edges, dtype=np.int64)
-    w = np.ones(len(e), dtype=np.float32) if values is None else values
-    if symmetric:
+    e = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    w = np.ones(len(e), dtype=np.float32) if values is None \
+        else np.asarray(values, dtype=np.float32)
+    if symmetric and len(e):
         e = np.concatenate([e, e[:, ::-1]], axis=0)
         w = np.concatenate([w, w])
+    if not len(e):
+        return BsrMatrix(
+            cols=np.zeros((R, 1), dtype=np.int32),
+            blocks=np.full((R, 1, bm, bm), sr.absent, dtype=np.float32),
+            n=n, block_size=bm, semiring=sr.name)
     bi, bj = e[:, 0] // bm, e[:, 1] // bm
     # group by (block-row, block-col)
     key = bi * R + bj
@@ -55,21 +100,22 @@ def bsr_from_edges(edges: np.ndarray, n: int, values: np.ndarray | None = None,
     counts_per_row = np.bincount((uniq // R).astype(np.int64), minlength=R)
     K = max(1, int(counts_per_row.max()))
     cols = np.zeros((R, K), dtype=np.int32)
-    blocks = np.zeros((R, K, bm, bm), dtype=np.float32)
+    blocks = np.full((R, K, bm, bm), sr.absent, dtype=np.float32)
     slot = np.zeros(R, dtype=np.int64)
     bounds = np.append(start, len(e))
     for s, t in zip(bounds[:-1], bounds[1:]):
         r, c = int(bi[s]), int(bj[s])
         k = slot[r]
         cols[r, k] = c
-        np.add.at(blocks[r, k], (e[s:t, 0] % bm, e[s:t, 1] % bm), w[s:t])
+        sr.np_accum_at(blocks[r, k], (e[s:t, 0] % bm, e[s:t, 1] % bm), w[s:t])
         slot[r] += 1
-    return BsrMatrix(cols=cols, blocks=blocks, n=n, block_size=bm)
+    return BsrMatrix(cols=cols, blocks=blocks, n=n, block_size=bm,
+                     semiring=sr.name)
 
 
 def bsr_spmv(m: BsrMatrix, x: jnp.ndarray, *,
              interpret: bool | None = None) -> jnp.ndarray:
-    """y = A @ x.  x: (n,) -> y: (n,).
+    """y = A ⊕.⊗ x under the matrix's semiring.  x: (n,) -> y: (n,).
 
     interpret=None auto-selects: Pallas interpreter on CPU (validation),
     compiled kernel on TPU.
@@ -78,5 +124,6 @@ def bsr_spmv(m: BsrMatrix, x: jnp.ndarray, *,
         interpret = jax.default_backend() != "tpu"
     xp = jnp.zeros(m.padded, dtype=jnp.float32).at[:m.n].set(x.astype(jnp.float32))
     y = spmv_pallas(jnp.asarray(m.cols), jnp.asarray(m.blocks), xp,
-                    block_size=m.block_size, interpret=interpret)
+                    block_size=m.block_size, interpret=interpret,
+                    semiring=m.semiring)
     return y[:m.n].astype(x.dtype)

@@ -1,30 +1,60 @@
-"""Pure-jnp oracle for the Block-ELL SpMV kernel."""
+"""Pure-jnp/numpy oracles for the Block-ELL semiring SpMV kernel."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 import numpy as np
 
 from .ops import BsrMatrix
+from .semiring import get_semiring
 
 
 def dense_from_bsr(m: BsrMatrix) -> np.ndarray:
+    """Materialize the dense matrix (missing entries = ``absent``)."""
+    sr = get_semiring(m.semiring)
     bm = m.block_size
     R, K = m.cols.shape
-    out = np.zeros((m.padded, m.padded), dtype=np.float32)
+    out = np.full((m.padded, m.padded), sr.absent, dtype=np.float32)
     for r in range(R):
         for k in range(K):
             c = int(m.cols[r, k])
-            out[r * bm:(r + 1) * bm, c * bm:(c + 1) * bm] += m.blocks[r, k]
+            blk = m.blocks[r, k]
+            tgt = out[r * bm:(r + 1) * bm, c * bm:(c + 1) * bm]
+            if sr.name == "plus_times":
+                # absent == 0 and padding blocks are all-zero, so plain
+                # accumulation reproduces the historical behaviour
+                tgt += blk
+            elif sr.name == "min_plus":
+                np.minimum(tgt, blk, out=tgt)
+            else:                                   # or_and
+                np.maximum(tgt, blk, out=tgt)
     return out[:m.n, :m.n]
 
 
+def dense_semiring_mv(dense: np.ndarray, x: np.ndarray,
+                      semiring: str) -> np.ndarray:
+    """y_i = ⊕_j (A_ij ⊗ x_j) on a dense numpy matrix — the ground truth
+    the kernel/ref/backends all triangulate against."""
+    sr = get_semiring(semiring)
+    if sr.name == "plus_times":
+        return dense @ x
+    if sr.name == "min_plus":
+        return (dense + x[None, :]).min(axis=1)
+    return (dense * x[None, :]).max(axis=1)         # or_and
+
+
 def bsr_spmv_ref(m: BsrMatrix, x: jnp.ndarray) -> jnp.ndarray:
-    """y = A @ x without Pallas: per-block einsum + scatter-add."""
+    """y = A ⊕.⊗ x without Pallas: per-block combine + ⊕-reduction."""
+    sr = get_semiring(m.semiring)
     bm = m.block_size
     R, K = m.cols.shape
     xp = jnp.zeros(m.padded, dtype=jnp.float32).at[:m.n].set(
         x.astype(jnp.float32))
     xb = xp.reshape(-1, bm)                        # (C, bm)
     gathered = xb[jnp.asarray(m.cols)]             # (R, K, bm)
-    y = jnp.einsum("rkij,rkj->ri", jnp.asarray(m.blocks), gathered)
+    blocks = jnp.asarray(m.blocks)                 # (R, K, bm, bm)
+    if sr.name == "plus_times":
+        y = jnp.einsum("rkij,rkj->ri", blocks, gathered)
+    else:
+        comb = sr.times(blocks, gathered[:, :, None, :])   # (R, K, bm, bm)
+        y = sr.plus_reduce(sr.plus_reduce(comb, 3), 1)     # (R, bm)
     return y.reshape(-1)[:m.n].astype(x.dtype)

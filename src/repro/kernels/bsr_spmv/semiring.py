@@ -1,0 +1,92 @@
+"""Semirings for the edge-kernel layer: (⊕, ⊗) pairs the SpMV runs over.
+
+An edge-centric BSP superstep is a sparse matrix–vector product over a
+semiring: PageRank accumulates weighted messages ((+, ×)), SSSP relaxes
+tentative distances ((min, +)), BFS propagates frontier membership
+((or, and)).  Writing the superstep against a semiring object lets one
+kernel (scatter, sorted-segment, or the blocked Pallas SpMV) serve every
+app — the partition quality the paper optimizes then meets the same
+hardware-shaped compute path regardless of algorithm.
+
+Boolean semirings run in float32 0/1 (TPU-friendly, one dtype path):
+``or`` is ``max`` and ``and`` is ``×`` on {0, 1}.
+
+Each semiring fixes three scalars the layouts and kernels share:
+
+* ``zero``    — the ⊕ identity: reduction init, and the value of an
+  empty row;
+* ``absent``  — the value stored for a *missing* matrix entry.  It is
+  the ⊗ annihilator (``absent ⊗ x = zero`` for every finite ``x``), so
+  zero-padding blocks and ELL fill slots contribute the identity;
+* ``times``/``plus`` — the jnp elementwise ⊗ and the reduction ⊕.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Semiring:
+    name: str
+    zero: float                 # ⊕ identity (reduction init / empty row)
+    absent: float               # stored value of a missing entry
+    times: Callable             # jnp elementwise ⊗ (weight, operand)
+    plus: Callable              # jnp pairwise ⊕ (accumulate)
+    plus_reduce: Callable       # jnp ⊕-reduction over an axis
+    #: in-place numpy ⊕-accumulation (``np.add.at``-style) — how parallel
+    #: edges landing in the same matrix cell combine at layout-build time
+    np_accum_at: Callable
+
+    def scatter_accum(self, arr: jnp.ndarray, idx: jnp.ndarray,
+                      vals: jnp.ndarray) -> jnp.ndarray:
+        """jnp ``arr.at[idx].⊕(vals)`` for this semiring's ⊕."""
+        if self.name == "plus_times":
+            return arr.at[idx].add(vals)
+        if self.name == "min_plus":
+            return arr.at[idx].min(vals)
+        return arr.at[idx].max(vals)        # or_and
+
+    def weights(self, weight: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+        """Effective per-edge ⊗ operand: ``weight`` where valid, else the
+        annihilator (padding edges contribute the ⊕ identity)."""
+        return jnp.where(valid, weight, self.absent)
+
+
+PLUS_TIMES = Semiring(
+    name="plus_times", zero=0.0, absent=0.0,
+    times=lambda a, x: a * x,
+    plus=lambda a, b: a + b,
+    plus_reduce=lambda a, axis: jnp.sum(a, axis=axis),
+    np_accum_at=np.add.at)
+
+MIN_PLUS = Semiring(
+    name="min_plus", zero=np.inf, absent=np.inf,
+    times=lambda a, x: a + x,
+    plus=jnp.minimum,
+    plus_reduce=lambda a, axis: jnp.min(a, axis=axis),
+    np_accum_at=np.minimum.at)
+
+#: boolean (or, and) in float 0/1: and = ×, or = max
+OR_AND = Semiring(
+    name="or_and", zero=0.0, absent=0.0,
+    times=lambda a, x: a * x,
+    plus=jnp.maximum,
+    plus_reduce=lambda a, axis: jnp.max(a, axis=axis),
+    np_accum_at=np.maximum.at)
+
+SEMIRINGS = {s.name: s for s in (PLUS_TIMES, MIN_PLUS, OR_AND)}
+
+
+def get_semiring(s) -> Semiring:
+    """Resolve a semiring by name (or pass a ``Semiring`` through)."""
+    if isinstance(s, Semiring):
+        return s
+    try:
+        return SEMIRINGS[s]
+    except KeyError:
+        raise ValueError(f"unknown semiring {s!r} "
+                         f"(choices: {sorted(SEMIRINGS)})") from None

@@ -15,10 +15,18 @@ For every cell this driver:
      ``cost_analysis()`` (FLOPs/bytes) and the per-collective byte counts
      parsed from the optimized HLO — the §Roofline inputs.
 
+``--bsp`` dry-runs the *graph* side the same way: every (BSP app ×
+edge-kernel backend) superstep is shard_mapped over an 8-machine mesh
+and lower+compiled — backend sharding bugs, missing replication rules
+(Pallas needs ``check_rep=False``; the backends declare it) and the
+replica-exchange collective bytes all surface here without running a
+superstep.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b --shape train_4k
   PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
       --out results/dryrun.jsonl
+  PYTHONPATH=src python -m repro.launch.dryrun --bsp --out results/bsp.jsonl
 """
 
 import argparse
@@ -234,17 +242,95 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
     return rec
 
 
+def run_bsp_cell(rt, app: str, backend: str, mesh) -> dict:
+    """Lower + compile one (BSP app × edge-kernel backend) superstep."""
+    from ..bsp.apps import build_app
+    from ..bsp.engine import make_step
+    opts = {"block_size": 32} if backend == "pallas" else {}
+    spec = build_app(rt, app, backend=backend, **opts)
+    t0 = time.perf_counter()
+    step = make_step(spec.superstep, spec.static, mesh=mesh,
+                     check_rep=spec.check_rep)
+    lowered = step.lower(spec.state)
+    t_lower = time.perf_counter() - t0
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    coll = _collective_bytes(compiled.as_text())
+    return {
+        "app": app, "backend": backend, "mesh": "machines8",
+        "p": rt.p, "num_replicas": rt.num_replicas,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "peak_bytes_per_device": peak_memory_bytes(mem),
+        "collectives": coll,
+    }
+
+
+def run_bsp_cells(out: str, skip_done: bool = False) -> int:
+    """The --bsp mode: every (app × backend) superstep over an 8-machine
+    mesh; a compile failure in any cell fails the run (that's the point).
+    ``skip_done`` mirrors the model path: cells already recorded in
+    ``out`` without an error are not re-compiled (re-run after a fix
+    appends fresh records; the latest record per cell wins)."""
+    from ..bsp import PartitionRuntime
+    from ..bsp.apps import APP_BUILDERS
+    from ..bsp.backends import BACKENDS
+    from ..compat import make_mesh
+    from ..core import scaled_paper_cluster, windgp
+    from ..data import rmat
+
+    g = rmat(9, seed=2)
+    cl = scaled_paper_cluster(2, 6, g.num_edges)      # p = 8 machines
+    rt = PartitionRuntime.build(g, windgp(g, cl, t0=2).assign, cl.p)
+    mesh = make_mesh((cl.p,), ("machines",))
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+    done = set()
+    if skip_done and os.path.exists(out):
+        with open(out) as f:
+            for line in f:
+                r = json.loads(line)
+                if "error" not in r and "app" in r:
+                    done.add((r["app"], r["backend"]))
+    failures = 0
+    for app in APP_BUILDERS:
+        for backend in BACKENDS:
+            if (app, backend) in done:
+                continue
+            tag = f"bsp {app} × {backend}"
+            try:
+                rec = run_bsp_cell(rt, app, backend, mesh)
+                print(f"OK   {tag}: peak "
+                      f"{rec['peak_bytes_per_device']/2**20:.1f} MiB/dev, "
+                      f"coll {rec['collectives']['total_bytes']/2**10:.1f} "
+                      f"KiB/step, compile {rec['compile_s']}s", flush=True)
+            except Exception as e:  # noqa: BLE001 - report and continue
+                rec = {"app": app, "backend": backend,
+                       "error": f"{type(e).__name__}: {e}"}
+                print(f"FAIL {tag}: {rec['error'][:300]}", flush=True)
+                failures += 1
+            with open(out, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+    return 1 if failures else 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCHS)
     ap.add_argument("--shape", choices=list(SHAPES))
     ap.add_argument("--all", action="store_true")
+    ap.add_argument("--bsp", action="store_true",
+                    help="dry-run the BSP (app × edge-kernel backend) "
+                         "supersteps over an 8-machine mesh instead of "
+                         "the model cells")
     ap.add_argument("--mesh", choices=["pod", "multipod", "both"],
                     default="both")
     ap.add_argument("--out", default="results/dryrun.jsonl")
     ap.add_argument("--skip-done", action="store_true",
                     help="skip cells already present in --out")
     args = ap.parse_args(argv)
+
+    if args.bsp:
+        return run_bsp_cells(args.out, skip_done=args.skip_done)
 
     todo = cells() if args.all else [(args.arch, args.shape)]
     meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]

@@ -1,0 +1,198 @@
+"""Edge-kernel backends: cross-backend app equivalence + weighted PageRank.
+
+The refactor's contract: all four BSP apps produce the same results
+whichever backend combines their edge messages — bitwise for the
+(min, +)/(or, and) apps (min/max reassociate exactly), within 1e-5 for
+(+, ×) (the segment path's running sum reassociates float adds) — under
+vmap here and under a real 8-device shard_map mesh in the subprocess
+test.  Weighted PageRank is pinned against a NetworkX-free dense oracle.
+"""
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.bsp import (PartitionRuntime, bfs, build_app, connected_components,
+                       get_backend, pagerank, ref, sssp)
+from repro.core import scaled_paper_cluster, windgp
+from repro.data import rmat
+
+PALLAS_OPTS = {"block_size": 16}
+OTHER = (("segment", {}), ("pallas", PALLAS_OPTS))
+
+
+@pytest.fixture(scope="module")
+def part():
+    g = rmat(8, seed=2)
+    cl = scaled_paper_cluster(2, 4, g.num_edges)
+    r = windgp(g, cl, t0=2)
+    return g, cl, PartitionRuntime.build(g, r.assign, cl.p)
+
+
+@pytest.fixture(scope="module")
+def weighted_part():
+    g = rmat(8, seed=3)
+    cl = scaled_paper_cluster(2, 4, g.num_edges)
+    r = windgp(g, cl, t0=2)
+    w = (np.random.default_rng(5).random(g.num_edges) + 0.1).astype(
+        np.float32)
+    rt = PartitionRuntime.build(g, r.assign, cl.p, edge_weights=w)
+    return g, w, rt
+
+
+def dense_weighted_pagerank(g, w, num_iters=20, damping=0.85):
+    """NetworkX-free oracle: dense weighted adjacency, float64."""
+    n = g.num_vertices
+    A = np.zeros((n, n))
+    np.add.at(A, (g.edges[:, 0], g.edges[:, 1]), w)
+    np.add.at(A, (g.edges[:, 1], g.edges[:, 0]), w)
+    wdeg = A.sum(axis=1)
+    pr = np.full(n, 1.0 / n)
+    for _ in range(num_iters):
+        msg = np.where(wdeg > 0, pr / np.maximum(wdeg, 1e-300), 0.0)
+        pr = (1 - damping) / n + damping * (A @ msg)
+    return pr
+
+
+class TestCrossBackend:
+    def test_pagerank_close(self, part):
+        _, _, rt = part
+        base, _ = pagerank(rt, num_iters=15)
+        for be, opts in OTHER:
+            got, _ = pagerank(rt, num_iters=15, backend=be, **opts)
+            np.testing.assert_allclose(got, base, rtol=1e-5, atol=1e-5)
+
+    def test_sssp_bitwise(self, part):
+        _, _, rt = part
+        base, _ = sssp(rt, source=0, num_iters=20)
+        for be, opts in OTHER:
+            got, _ = sssp(rt, source=0, num_iters=20, backend=be, **opts)
+            np.testing.assert_array_equal(got, base)
+
+    def test_bfs_bitwise(self, part):
+        g, _, rt = part
+        base, actives = bfs(rt, source=1, num_iters=20)
+        # the (or, and) frontier rewrite still equals the min-plus oracle
+        expect = ref.bfs(g, source=1, num_iters=20)
+        m = ~np.isinf(expect)
+        np.testing.assert_allclose(base[m], expect[m])
+        assert actives.sum(axis=1)[-1] == 0
+        for be, opts in OTHER:
+            got, _ = bfs(rt, source=1, num_iters=20, backend=be, **opts)
+            np.testing.assert_array_equal(got, base)
+
+    def test_cc_bitwise(self, part):
+        _, _, rt = part
+        base, _ = connected_components(rt, num_iters=20)
+        for be, opts in OTHER:
+            got, _ = connected_components(rt, num_iters=20, backend=be,
+                                          **opts)
+            np.testing.assert_array_equal(got, base)
+
+    def test_unknown_backend_rejected(self, part):
+        _, _, rt = part
+        with pytest.raises(ValueError, match="unknown edge-kernel backend"):
+            pagerank(rt, num_iters=1, backend="gpu_warp")
+
+    def test_backend_declares_check_rep(self):
+        assert get_backend("scatter").check_rep
+        assert get_backend("segment").check_rep
+        assert not get_backend("pallas").check_rep
+
+    def test_cli_mirror_matches_registry(self):
+        """launch.partition's static choices (kept jax-free) == BACKENDS."""
+        from repro.bsp import BACKENDS
+        from repro.launch.partition import EDGE_BACKENDS
+        assert set(EDGE_BACKENDS) == set(BACKENDS)
+
+    def test_build_app_specs(self, part):
+        _, _, rt = part
+        for app in ("pagerank", "sssp", "bfs", "cc"):
+            spec = build_app(rt, app, backend="segment")
+            assert spec.name in (app, "sssp")
+            assert "eb_seg_out" in spec.static
+        with pytest.raises(ValueError, match="unknown BSP app"):
+            build_app(rt, "betweenness")
+
+
+class TestWeightedPageRank:
+    def test_matches_dense_oracle(self, weighted_part):
+        """The `edge_weight`-vs-`edge_valid` bug regression: weights must
+        actually scale messages and the degree normalizer."""
+        g, w, rt = weighted_part
+        got, _ = pagerank(rt, num_iters=20)
+        expect = dense_weighted_pagerank(g, w, num_iters=20)
+        np.testing.assert_allclose(got, expect, rtol=2e-4, atol=1e-8)
+        # weights genuinely change the answer (guards a silent all-ones)
+        uniform = ref.pagerank(g, num_iters=20)
+        assert np.abs(got - uniform).max() > 1e-4
+
+    def test_weighted_across_backends(self, weighted_part):
+        _, _, rt = weighted_part
+        base, _ = pagerank(rt, num_iters=15)
+        for be, opts in OTHER:
+            got, _ = pagerank(rt, num_iters=15, backend=be, **opts)
+            np.testing.assert_allclose(got, base, rtol=1e-5, atol=1e-5)
+
+    def test_default_unit_weights_unchanged(self, part):
+        """No weights supplied == the classic uniform-split PageRank."""
+        g, _, rt = part
+        got, _ = pagerank(rt, num_iters=15)
+        np.testing.assert_allclose(got, ref.pagerank(g, num_iters=15),
+                                   rtol=2e-4)
+
+    def test_weighted_degree_field(self, weighted_part):
+        g, w, rt = weighted_part
+        wdeg = np.zeros(g.num_vertices)
+        np.add.at(wdeg, g.edges[:, 0], w)
+        np.add.at(wdeg, g.edges[:, 1], w)
+        for i in range(rt.p):
+            m = rt.vertex_valid[i]
+            np.testing.assert_allclose(
+                rt.weighted_degree[i, m],
+                wdeg[rt.local_vertex_gid[i, m]], rtol=1e-6)
+
+
+MULTIDEV_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import jax
+from repro.bsp import (PartitionRuntime, pagerank, sssp, bfs,
+                       connected_components)
+from repro.core import scaled_paper_cluster, windgp
+from repro.data import rmat
+
+g = rmat(9, seed=2)
+cl = scaled_paper_cluster(2, 6, g.num_edges)   # p = 8 machines = 8 devices
+r = windgp(g, cl, t0=2)
+rt = PartitionRuntime.build(g, r.assign, cl.p)
+mesh = jax.make_mesh((8,), ("machines",))
+pr0, _ = pagerank(rt, num_iters=8)
+d0, _ = sssp(rt, source=0, num_iters=12)
+b0, _ = bfs(rt, source=1, num_iters=12)
+c0, _ = connected_components(rt, num_iters=12)
+for be, kw in (("scatter", {}), ("segment", {}),
+               ("pallas", {"block_size": 32})):
+    pr, _ = pagerank(rt, num_iters=8, mesh=mesh, backend=be, **kw)
+    np.testing.assert_allclose(pr, pr0, rtol=1e-5, atol=1e-5)
+    d, _ = sssp(rt, source=0, num_iters=12, mesh=mesh, backend=be, **kw)
+    np.testing.assert_array_equal(d, d0)
+    b, _ = bfs(rt, source=1, num_iters=12, mesh=mesh, backend=be, **kw)
+    np.testing.assert_array_equal(b, b0)
+    c, _ = connected_components(rt, num_iters=12, mesh=mesh, backend=be,
+                                **kw)
+    np.testing.assert_array_equal(c, c0)
+print("MULTIDEV_BACKENDS_OK")
+"""
+
+
+def test_backends_on_8_device_mesh():
+    """Every backend under a real shard_map mesh == the vmap scatter
+    reference — including Pallas through ``check_rep=False``."""
+    out = subprocess.run(
+        [sys.executable, "-c", MULTIDEV_SCRIPT],
+        capture_output=True, text=True, timeout=600,
+        env={**__import__("os").environ, "PYTHONPATH": "src"})
+    assert "MULTIDEV_BACKENDS_OK" in out.stdout, out.stderr[-2000:]
