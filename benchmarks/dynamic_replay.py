@@ -1,0 +1,191 @@
+"""Timeline replay for the dynamic incremental repartitioning layer.
+
+Builds a temporal proxy from the LJ-family rmat graph: a seeded shuffle
+of the edge list is the arrival order.  The first ``seed_frac`` of it is
+the static seed graph (partitioned from scratch with ``method``); the
+rest arrives in fixed-size insert batches, and every ``delete_every``-th
+batch also deletes a same-sized sample of currently-live edges (churn,
+including edges that only just arrived).  The timeline replays through
+``DynamicPartitioner`` with the drift monitor timed *separately* from
+placement (``auto_repair=False`` + explicit ``maybe_repair``), so the
+report cleanly splits:
+
+* **assignment latency** — p50/p99 of insert wall time / batch rows
+  (µs per edge).  The engine waves only over the arriving batch against
+  live membership, so per-edge latency is O(batch), not O(E): the
+  first-half vs second-half p99 ratio (``lat_growth``) makes that
+  visible as the live graph grows.
+* **amortized repair cost** — drift-monitor + bounded-repair seconds and
+  destroyed edges, divided by total mutations.  The frontier reset after
+  each repair charges its cost to the mutations that accumulated it.
+* **TC drift** — final live TC vs. partitioning the final graph from
+  scratch with the same method at the same machine profile.  This is the
+  quality gate: staying incremental must cost ≤ 5% TC (asserted in
+  ``--smoke``, bounded by the trend baseline in CI).
+
+Latency/speed numbers are printed and reported but never asserted — CI
+wall clock is too noisy; ``check_trend.py`` bounds the deterministic
+quality metrics (drift, TC, RF, repair-move fraction) instead.
+
+Run directly:  PYTHONPATH=src python -m benchmarks.dynamic_replay [--smoke]
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import DynamicPartitioner, evaluate, from_edge_list
+from repro.core.partitioners import get as partitioner
+
+from .common import CSV, cluster_for, dataset, timed, write_bench_json
+
+
+def replay_timeline(g, cl, *, method: str = "hdrf", batch: int = 512,
+                    seed_frac: float = 0.65, delete_every: int = 4,
+                    seed: int = 7, rf_leash: float = 1.03,
+                    csv: CSV | None = None, label: str = "LJ") -> dict:
+    """Replay one timeline; returns the metrics dict (see module doc).
+
+    ``rf_leash`` tightens the RF threshold to that factor over the seed
+    partition's RF — the default monitor leash (1.15×) is sized for long
+    deployments and never trips on a proxy-length timeline, which would
+    leave the repair path unmeasured."""
+    rng = np.random.default_rng(seed)
+    edges = g.edges[rng.permutation(g.num_edges)]
+    n_seed = int(seed_frac * len(edges))
+    gseed = from_edge_list(edges[:n_seed], num_vertices=g.num_vertices)
+    dp, t_seed = timed(DynamicPartitioner, gseed, cl, method=method,
+                       auto_repair=False)
+    dp.rf_limit = rf_leash * dp.rf
+
+    lat = []                      # per-edge insert seconds, one per batch
+    repair_s = 0.0
+    mutations = 0
+    pos, nb = 0, 0
+    arrivals = edges[n_seed:]
+    while pos < len(arrivals):
+        b = arrivals[pos:pos + batch]
+        pos += len(b)
+        nb += 1
+        _, dt = timed(dp.insert, b)
+        lat.append(dt / len(b))
+        mutations += len(b)
+        _, rdt = timed(dp.maybe_repair)
+        repair_s += rdt
+        if delete_every and nb % delete_every == 0:
+            live = np.flatnonzero(dp.state.assign >= 0)
+            sel = rng.choice(live, size=min(batch, len(live)),
+                             replace=False)
+            dp.delete(dp.g.edges[sel])
+            mutations += len(sel)
+            _, rdt = timed(dp.maybe_repair)
+            repair_s += rdt
+
+    # scratch re-partition of the final live graph, same machine profile
+    live = dp.state.assign >= 0
+    gfin = from_edge_list(dp.g.edges[live], num_vertices=dp.g.num_vertices)
+    a_scr, t_scr = timed(partitioner(method), gfin, cl)
+    s_scr = evaluate(gfin, a_scr, cl)
+
+    lat = np.asarray(lat)
+    half = max(1, len(lat) // 2)
+    p50, p99 = np.percentile(lat, [50, 99])
+    res = {
+        "tc": float(dp.tc),
+        "tc_scratch": float(s_scr.tc),
+        "tc_drift": float((dp.tc - s_scr.tc) / s_scr.tc),
+        "rf": float(dp.rf),
+        "p50_us": float(p50 * 1e6),
+        "p99_us": float(p99 * 1e6),
+        # O(batch) evidence: p99 late-half / early-half as |E| grows
+        "lat_growth": float(np.percentile(lat[half:], 99)
+                            / max(np.percentile(lat[:half], 99), 1e-12)),
+        "repair_us_per_op": float(repair_s / max(1, mutations) * 1e6),
+        "repair_moves_frac": float(dp.counters["repair_moves"]
+                                   / max(1, mutations)),
+        "repairs": len([r for r in dp.repairs if r.edges_moved]),
+        "mutations": int(mutations),
+        "inserted": dp.counters["inserted"],
+        "deleted": dp.counters["deleted"],
+        "reinserted": dp.counters["reinserted"],
+        "seed_seconds": float(t_seed),
+        "scratch_seconds": float(t_scr),
+    }
+    if csv is not None:
+        csv.row(f"{label}/{method}/assign_p50", p50,
+                f"p99={res['p99_us']:.1f}us growth={res['lat_growth']:.2f}x")
+        csv.row(f"{label}/{method}/repair", repair_s / max(1, mutations),
+                f"{res['repair_us_per_op']:.1f}us/op "
+                f"moves={dp.counters['repair_moves']} "
+                f"({res['repair_moves_frac'] * 100:.2f}%/op) "
+                f"waves={res['repairs']}")
+        csv.row(f"{label}/{method}/tc_drift", 0,
+                f"tc={res['tc']:.0f} scratch={res['tc_scratch']:.0f} "
+                f"drift={res['tc_drift'] * 100:+.2f}% rf={res['rf']:.3f}")
+    return res
+
+
+def run_smoke(json_path: str | None = None) -> dict:
+    """Tier-2 CI ``dynamic`` job: quick-LJ timeline, one assertion —
+    final incremental TC within 5% of the same-method scratch partition
+    at the same machine profile.  Placement, churn, and repair triggers
+    are all seed-deterministic, so TC/RF/drift/move-fraction are exact
+    across runs and bounded by the trend baseline."""
+    csv = CSV("dynamic_smoke")
+    g = dataset("LJ", quick=True)
+    cl = cluster_for("LJ", g)
+    res = replay_timeline(g, cl, csv=csv, label="tiny_lj")
+    # one-sided: the repair waves routinely push the incremental TC
+    # *below* scratch (scratch streaming has no SLS pass) — only being
+    # worse than scratch is drift
+    assert res["tc_drift"] <= 0.05 + 1e-9, (
+        f"incremental TC drifted {res['tc_drift'] * 100:+.2f}% "
+        f"(> +5%) above the scratch partition")
+    csv.row("tiny_lj/ok", 0,
+            f"drift={res['tc_drift'] * 100:+.2f}% "
+            f"p99={res['p99_us']:.1f}us "
+            f"repair={res['repair_us_per_op']:.1f}us/op")
+    if json_path:
+        write_bench_json(json_path, {
+            "dynamic/tc_drift": res["tc_drift"],
+            "dynamic/tc": res["tc"],
+            "dynamic/rf": res["rf"],
+            "dynamic/repair_moves_frac": res["repair_moves_frac"],
+            # latency numbers ride along untracked (CI wall clock)
+            "dynamic/p50_us": res["p50_us"],
+            "dynamic/p99_us": res["p99_us"],
+            "dynamic/lat_growth": res["lat_growth"],
+            "dynamic/repair_us_per_op": res["repair_us_per_op"],
+        })
+    return res
+
+
+def run(quick: bool = True, datasets=("LJ", "TW"),
+        methods=("hdrf", "greedy")) -> dict:
+    """The replay table: per dataset × method latency/repair/drift rows."""
+    csv = CSV("dynamic_replay")
+    out = {}
+    for ds in datasets:
+        g = dataset(ds, quick)
+        cl = cluster_for(ds, g)
+        out[ds] = {m: replay_timeline(g, cl, method=m, csv=csv, label=ds)
+                   for m in methods}
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tier-2 CI gate: quick-LJ timeline, asserts "
+                         "incremental TC within 5% of scratch")
+    ap.add_argument("--json", default=None,
+                    help="--smoke: write gateable metrics to this path "
+                         "(BENCH_smoke.json for CI)")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    print("table/name,us_per_call,derived")
+    if args.smoke:
+        run_smoke(json_path=args.json)
+    else:
+        run(quick=not args.full)

@@ -224,10 +224,12 @@ def run_smoke(only: str | None = None,
     * the block-stream engine within 2% RF *and* TC of each per-edge
       streaming oracle at the default block size.
 
-    ``only`` runs one gate (``"sls"`` / ``"streaming"``) — the CI tier-2
-    matrix runs them as separate jobs so one slow gate doesn't mask the
-    other.  ``json_path`` writes the gateable metrics for
-    ``benchmarks/check_trend.py`` (the perf-trajectory artifact).
+    ``only`` runs one gate (``"sls"`` / ``"streaming"`` / ``"windgp"`` —
+    the last bounds the full pipeline's absolute TC/RF rather than a
+    phase) — the CI tier-2 matrix runs them as separate jobs so one slow
+    gate doesn't mask the other.  ``json_path`` writes the gateable
+    metrics for ``benchmarks/check_trend.py`` (the perf-trajectory
+    artifact).
 
     Speedups are printed and tracked but not asserted here — CI
     wall-clock is too noisy for a hard gate; the trend baseline bounds
@@ -273,9 +275,23 @@ def run_smoke(only: str | None = None,
             # perf-trajectory baseline bounds it directly, not just the
             # oracle-relative gap
             metrics[f"stream/{m}/tc"] = r[b]["tc"]
+    if only in (None, "windgp"):
+        # end-to-end windgp TC on the deterministic proxy — ROADMAP names
+        # this as the untracked gap in check_trend.py: the sls/streaming
+        # gates bound phases, nothing bounded the full pipeline's output
+        wcsv = CSV("windgp_smoke")
+        r, dt = timed(windgp, g, cl, t0=8, alpha=0.1, beta=0.1)
+        s = r.stats
+        assert s.feasible, "windgp smoke produced an infeasible partition"
+        wcsv.row("tiny_lj/windgp", dt,
+                 f"tc={s.tc:.0f} rf={s.rf:.3f} feasible={s.feasible}")
+        out["windgp"] = {"seconds": dt, "tc": float(s.tc),
+                         "rf": float(s.rf)}
+        metrics["windgp/tc"] = float(s.tc)
+        metrics["windgp/rf"] = float(s.rf)
     if only is not None and not out:
         raise SystemExit(f"unknown smoke gate {only!r} "
-                         f"(choices: sls, streaming)")
+                         f"(choices: sls, streaming, windgp)")
     if json_path:
         write_bench_json(json_path, metrics)
     return out
@@ -318,7 +334,8 @@ if __name__ == "__main__":
                          "SLS TC within 2% of the scalar oracle and the "
                          "block-stream engine within 2% RF/TC of the "
                          "per-edge streaming oracles")
-    ap.add_argument("--only", default=None, choices=("sls", "streaming"),
+    ap.add_argument("--only", default=None,
+                    choices=("sls", "streaming", "windgp"),
                     help="--smoke: run a single gate (the CI tier-2 "
                          "matrix splits them across jobs)")
     ap.add_argument("--json", default=None,

@@ -11,8 +11,8 @@ import argparse
 import inspect
 import time
 
-from . import (ablation, bsp_apps, bsp_runtime, compare_tc, oocore,
-               partition_time, scale_graphsize, scale_machines,
+from . import (ablation, bsp_apps, bsp_runtime, compare_tc, dynamic_replay,
+               oocore, partition_time, scale_graphsize, scale_machines,
                tc_vs_runtime, tuning)
 
 TABLES = {
@@ -26,6 +26,7 @@ TABLES = {
     "sls": partition_time.run_sls_compare,  # scalar vs vectorized SLS repair
     "stream": partition_time.run_streaming_compare,  # oracle vs block engine
     "oocore": oocore.run,             # out-of-core vs in-memory pipeline
+    "dynamic": dynamic_replay.run,    # insert/delete timeline replay
     "bsp": bsp_apps.run,              # edge-kernel backends per BSP app
     "wave": tuning.run_wave_sweep,    # SLS wave_frac/wave_window sweep
     "tab1": tc_vs_runtime.run,        # TC ∝ runtime

@@ -60,6 +60,34 @@ the machine's local edges (``repro.bsp.backends``); results agree to
 The same flag exists on ``repro.launch.partition`` (with ``--stream``)
 and the backend registry is shared by all four BSP apps — SSSP/BFS/
 components run the same kernels under (min, +)/(or, and) semirings.
+
+Dynamic workflow
+----------------
+The partition this script writes is a *seed*, not a terminal product:
+when the graph keeps evolving, wrap it in the dynamic layer instead of
+re-running the pipeline per snapshot::
+
+    from repro.core import DynamicPartitioner
+    from repro.bsp import PartitionRuntime, StreamAssignment, pagerank
+
+    dp = DynamicPartitioner(g, cl, assign)     # live state over the seed
+    sa = StreamAssignment.open(out_dir / "assignment")
+    rt = PartitionRuntime.from_stream(sa)
+    snap = dp.snapshot()
+    dp.insert(new_edges)                       # wave-scored vs live (p,V)
+    dp.delete(stale_edges)                     # exact Eq.3/4 rollback
+    # drift monitor fires bounded SLS repair automatically when balance
+    # skew or RF crosses its leash; per-epoch, hand the diff downstream:
+    delta = dp.delta_since(snap)
+    sa.apply_delta(delta, dp.membership())     # shard append + tombstones
+    rt = rt.apply_delta(sa, delta)             # repack touched machines
+    pr, _ = pagerank(rt, init=pr_prev)         # warm-start from last run
+
+Inserts are scored by the same block-stream engine this script uses for
+the cold pass, so a quiet timeline converges to the static partition.
+``benchmarks/dynamic_replay.py`` is the measured version of this loop
+(assignment-latency percentiles, amortized repair cost, TC drift vs
+scratch) and runs in CI as the tier-2 ``dynamic`` job.
 """
 from __future__ import annotations
 

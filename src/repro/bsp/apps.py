@@ -71,7 +71,16 @@ def _resolve(rt, backend, semiring: str, weights: str, **opts):
 # ---------------------------------------------------------------------------
 
 def build_pagerank(rt: PartitionRuntime, damping: float = 0.85, *,
-                   backend="scatter", **backend_opts) -> AppSpec:
+                   backend="scatter", init: np.ndarray | None = None,
+                   **backend_opts) -> AppSpec:
+    """``init`` warm-starts from a previous run's (V,) global PageRank —
+    the dynamic-epoch hand-off after ``PartitionRuntime.apply_delta``.
+    Power iteration converges to the stationary distribution from *any*
+    non-degenerate start, so a stale vector is a valid (and, for small
+    deltas, nearby) initial point; vertices new to this runtime fall back
+    to the uniform mass.  CC/SSSP get no such hook: their states are
+    monotone under the semiring, so stale labels are invalid the moment a
+    deletion can lengthen a path."""
     r_pad = max(1, rt.num_replicas)
     n = rt.num_vertices
     eb, static, combine = _resolve(rt, backend, "plus_times", "weight",
@@ -91,8 +100,16 @@ def build_pagerank(rt: PartitionRuntime, damping: float = 0.85, *,
         active = sa["vertex_valid"].sum()
         return {"pr": new_pr}, active
 
-    state = {"pr": jnp.where(jnp.asarray(rt.vertex_valid),
-                             1.0 / n, 0.0).astype(jnp.float32)}
+    if init is None:
+        pr0 = jnp.where(jnp.asarray(rt.vertex_valid),
+                        1.0 / n, 0.0).astype(jnp.float32)
+    else:
+        pr0 = jnp.asarray(
+            rt.scatter_global(np.asarray(init, dtype=np.float32),
+                              fill=1.0 / n),
+            dtype=jnp.float32)
+        pr0 = jnp.where(jnp.asarray(rt.vertex_valid), pr0, 0.0)
+    state = {"pr": pr0}
     # isolated vertices (no incident edge, hence in no partition) hold the
     # teleport mass only:
     fin = lambda rt, out: rt.gather_global(np.asarray(out["pr"]),
@@ -102,9 +119,13 @@ def build_pagerank(rt: PartitionRuntime, damping: float = 0.85, *,
 
 def pagerank(rt: PartitionRuntime, num_iters: int = 20,
              damping: float = 0.85, *, mesh=None, backend="scatter",
-             **backend_opts):
-    """Returns (V,) global PageRank after ``num_iters`` supersteps."""
-    spec = build_pagerank(rt, damping, backend=backend, **backend_opts)
+             init: np.ndarray | None = None, **backend_opts):
+    """Returns (V,) global PageRank after ``num_iters`` supersteps.
+
+    ``init`` warm-starts from a previous (V,) result (see
+    :func:`build_pagerank`)."""
+    spec = build_pagerank(rt, damping, backend=backend, init=init,
+                          **backend_opts)
     out, actives = run_bsp(spec.superstep, spec.state, spec.static,
                            num_iters, mesh=mesh, check_rep=spec.check_rep)
     return spec.finalize(rt, out), actives

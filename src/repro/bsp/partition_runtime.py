@@ -326,6 +326,86 @@ class PartitionRuntime:
             weighted_degree=wd, rep_slot=rs,
             verts_per_machine=verts_per, edges_per_machine=edges_per)
 
+    def apply_delta(self, assignment, delta) -> "PartitionRuntime":
+        """Repack after a dynamic epoch, reusing every untouched machine.
+
+        ``assignment`` is the :class:`StreamAssignment` (or its path)
+        *after* ``apply_delta(delta, ...)`` ran on it; ``delta`` is that
+        same :class:`~repro.core.dynamic.AssignmentDelta`.  Machines whose
+        edge set did not change this epoch keep their packed local-vertex
+        and local-edge rows verbatim (membership derives from a machine's
+        own edges, so an untouched machine's vertex set is untouched too);
+        only changed machines re-read their shard and relabel.  The
+        cross-machine quantities are always rebuilt — the replica table
+        and global degrees shift whenever *any* machine changes, and they
+        are cheap (no disk, no relabeling).
+
+        Only valid for unit edge weights (the runtimes the dynamic layer
+        produces); weighted runtimes must repack via :meth:`from_stream`
+        with their weight callable.
+        """
+        from .stream_assignment import StreamAssignment
+        if not isinstance(assignment, StreamAssignment):
+            assignment = StreamAssignment.open(assignment)
+        p, V = assignment.p, assignment.num_vertices
+        if p != self.p:
+            raise ValueError(f"delta runtime repack across machine counts "
+                             f"({self.p} -> {p})")
+        if not bool(np.all(self.edge_weight[self.edge_valid] == 1.0)):
+            raise ValueError("apply_delta supports unit edge weights only "
+                             "— repack weighted runtimes via from_stream")
+        touched = delta.machines_touched(p)
+        member = assignment.membership()
+        deg = assignment.degree.astype(np.int32)
+        member_count = member.sum(axis=0).astype(np.int32)
+        rep_vertices = np.flatnonzero(member_count >= 2)
+        rep_index = np.full(V, -1, dtype=np.int32)
+        rep_index[rep_vertices] = np.arange(len(rep_vertices),
+                                            dtype=np.int32)
+        verts_per = member.sum(axis=1).astype(np.int64)
+        edges_per = assignment.edges_per.astype(np.int64)
+        vmax = max(1, int(verts_per.max(initial=0)))
+        emax = max(1, int(edges_per.max(initial=0)))
+
+        lv = np.full((p, vmax), -1, dtype=np.int32)
+        vv = np.zeros((p, vmax), dtype=bool)
+        le = np.zeros((p, emax, 2), dtype=np.int32)
+        ev = np.zeros((p, emax), dtype=bool)
+        ew = np.zeros((p, emax), dtype=np.float32)
+        gd = np.ones((p, vmax), dtype=np.int32)
+        wd = np.ones((p, vmax), dtype=np.float32)
+        rs = np.full((p, vmax), -1, dtype=np.int32)
+        lut = np.full(V, -1, dtype=np.int64)
+        for i in range(p):
+            nv, ne = int(verts_per[i]), int(edges_per[i])
+            if not touched[i]:
+                # unchanged machine: row content beyond (nv, ne) is pad
+                lv[i, :nv] = self.local_vertex_gid[i, :nv]
+                le[i, :ne] = self.local_edges[i, :ne]
+            else:
+                verts = np.flatnonzero(member[i])
+                lut[verts] = np.arange(len(verts))
+                edges_i = assignment.machine_edges(i)
+                if len(verts) != nv or len(edges_i) != ne:
+                    raise ValueError(f"machine {i}: shard/membership "
+                                     f"disagree with the meta counts")
+                lv[i, :nv] = verts
+                if ne:
+                    le[i, :ne] = lut[edges_i]
+            vv[i, :nv] = True
+            ev[i, :ne] = True
+            ew[i, :ne] = 1.0
+            gids = lv[i, :nv]
+            gd[i, :nv] = deg[gids]
+            wd[i, :nv] = deg[gids]       # unit weights: wdeg == degree
+            rs[i, :nv] = rep_index[gids]
+        return type(self)(
+            p=p, num_vertices=V, num_replicas=len(rep_vertices),
+            local_vertex_gid=lv, vertex_valid=vv, local_edges=le,
+            edge_valid=ev, edge_weight=ew, global_degree=gd,
+            weighted_degree=wd, rep_slot=rs,
+            verts_per_machine=verts_per, edges_per_machine=edges_per)
+
     @classmethod
     def from_partitioner(cls, g: Graph, cluster, method: str = "windgp",
                          edge_weights: np.ndarray | None = None,
@@ -351,4 +431,23 @@ class PartitionRuntime:
         for i in range(self.p):
             m = self.vertex_valid[i]
             out[self.local_vertex_gid[i, m]] = local_values[i, m]
+        return out
+
+    def scatter_global(self, global_values: np.ndarray,
+                       fill: float = 0.0) -> np.ndarray:
+        """Spread a (V,) global array onto (p, Vmax) local vertex values —
+        the inverse of :meth:`gather_global`, used to warm-start a BSP app
+        from a previous runtime's converged result after
+        :meth:`apply_delta` (replicas all receive the same value; pad
+        slots get ``fill``)."""
+        g = np.asarray(global_values)
+        if len(g) < self.num_vertices:
+            # runtime grew past the old result: new vertices get fill
+            g = np.concatenate(
+                [g, np.full(self.num_vertices - len(g), fill,
+                            dtype=g.dtype)])
+        out = np.full((self.p, self.vmax), fill, dtype=g.dtype)
+        for i in range(self.p):
+            m = self.vertex_valid[i]
+            out[i, m] = g[self.local_vertex_gid[i, m]]
         return out

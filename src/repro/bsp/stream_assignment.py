@@ -32,10 +32,36 @@ import pathlib
 
 import numpy as np
 
+from ..core.graph import edge_keys
+from ..core.partition_state import cumcount
+
 #: bytes per on-disk edge row (two little-endian int64 endpoints)
 _ROW_BYTES = 16
 
 _FORMAT_VERSION = 1
+
+#: compact a shard once tombstones cancel this fraction of its rows
+_COMPACT_FRAC = 0.5
+
+
+def _drop_tombstoned(rows: np.ndarray, tomb: np.ndarray) -> np.ndarray:
+    """Drop, for each tombstone (u, v), the earliest matching row.
+
+    Tombstones always refer to rows appended *before* them (a delta can
+    only remove edges that were live at its snapshot), so cancelling the
+    first ``count`` occurrences of each pair in row order is exact: a
+    pair re-added after its removal sits later in the file and survives.
+    """
+    rkey = edge_keys(rows[:, 0], rows[:, 1])
+    tk, tcount = np.unique(edge_keys(tomb[:, 0], tomb[:, 1]),
+                           return_counts=True)
+    occ = cumcount(rkey)
+    pos = np.searchsorted(tk, rkey)
+    hit = pos < len(tk)
+    hit[hit] = tk[pos[hit]] == rkey[hit]
+    drop = np.zeros(len(rkey), dtype=bool)
+    drop[hit] = occ[hit] < tcount[pos[hit]]
+    return rows[~drop]
 
 
 @dataclasses.dataclass
@@ -66,11 +92,17 @@ class StreamAssignment:
         self.degree = np.zeros(self.num_vertices, dtype=np.int64)
         self.meta = None
         self._member: np.ndarray | None = None
+        # gross on-disk accounting: live rows = shard_rows - tomb_rows
+        self.shard_rows = np.zeros(self.p, dtype=np.int64)
+        self.tomb_rows = np.zeros(self.p, dtype=np.int64)
         self._files = [open(self._shard_path(i), "wb")
                        for i in range(self.p)]
 
     def _shard_path(self, i: int) -> pathlib.Path:
         return self.dir / f"shard{i}.edges"
+
+    def _tomb_path(self, i: int) -> pathlib.Path:
+        return self.dir / f"shard{i}.tomb"
 
     # -- incremental build (the stream sink) --------------------------------
     def sink(self, edges: np.ndarray, ms: np.ndarray) -> None:
@@ -144,6 +176,14 @@ class StreamAssignment:
             raise ValueError("membership disagrees with the sunk edges: "
                              "a vertex is held iff an incident edge placed")
         self._member = member
+        self.shard_rows = self.edges_per.copy()
+        self.tomb_rows = np.zeros(self.p, dtype=np.int64)
+        return self._publish(extra_meta)
+
+    def _publish(self, extra_meta: dict | None = None) -> dict:
+        """Persist state.npz and write meta.json last — the commit point
+        shared by :meth:`finalize` and :meth:`apply_delta`."""
+        member = self._member
         np.savez_compressed(
             self.dir / "state.npz",
             member_bits=np.packbits(member, axis=1),
@@ -159,11 +199,134 @@ class StreamAssignment:
             "verts_per_machine": member.sum(axis=1).astype(int).tolist(),
             "replication_factor": round(rf, 6),
             "shards": [self._shard_path(i).name for i in range(self.p)],
+            "shard_rows": self.shard_rows.tolist(),
+            "tomb_rows": self.tomb_rows.tolist(),
         }
         meta.update(extra_meta or {})
         write_json_atomic(self.dir / "meta.json", meta)
         self.meta = meta
         return meta
+
+    # -- incremental update (the dynamic-epoch hand-off) ---------------------
+    def apply_delta(self, delta, membership,
+                    extra_meta: dict | None = None) -> dict:
+        """Apply an epoch's :class:`~repro.core.dynamic.AssignmentDelta`
+        in place: append + tombstone segments, re-verified at publish.
+
+        Removed edges become tombstone rows in ``shard<i>.tomb`` (value-
+        based: :func:`_drop_tombstoned` cancels the earliest matching
+        row); added edges append to ``shard<i>.edges``.  A shard whose
+        tombstones exceed ``_COMPACT_FRAC`` of its rows is rewritten
+        compact.  ``membership`` is the post-epoch ``(p, V)`` matrix (or
+        an object with ``.cnt``, e.g. the live ``PartitionState``).
+
+        Crash-safe by the same meta-last protocol as :meth:`finalize`:
+        ``meta.json`` is *removed* first, so a crash mid-delta leaves a
+        detectably-unfinished directory, and only rewritten after every
+        touched file is fsynced and every shard's byte length re-verifies
+        against the updated row accounting.
+        """
+        if self.meta is None:
+            raise RuntimeError("apply_delta needs a finalized (or opened) "
+                               "StreamAssignment")
+        member = (membership if isinstance(membership, np.ndarray)
+                  else membership.cnt > 0)
+        member = np.asarray(member, dtype=bool)
+        nv = int(delta.num_vertices)
+        if nv < self.num_vertices:
+            raise ValueError(f"delta shrinks the vertex space "
+                             f"({nv} < {self.num_vertices})")
+        if member.shape != (self.p, nv):
+            raise ValueError(f"membership shape {member.shape} != "
+                             f"{(self.p, nv)}")
+        # unpublish: from here until the meta rewrite the directory is an
+        # unfinished product and every reader rejects it
+        os.remove(self.dir / "meta.json")
+        self.meta = None
+        if nv > self.num_vertices:
+            self.degree = np.concatenate(
+                [self.degree,
+                 np.zeros(nv - self.num_vertices, dtype=np.int64)])
+            self.num_vertices = nv
+        np.add.at(self.degree, delta.added.ravel(), 1)
+        np.subtract.at(self.degree, delta.removed.ravel(), 1)
+        if (self.degree < 0).any():
+            raise ValueError("delta removes edges the shards never held")
+        self._append_grouped(delta.removed, delta.removed_ms,
+                             self._tomb_path, self.tomb_rows)
+        self._append_grouped(delta.added, delta.added_ms,
+                             self._shard_path, self.shard_rows)
+        self.edges_per += (np.bincount(delta.added_ms, minlength=self.p)
+                           - np.bincount(delta.removed_ms,
+                                         minlength=self.p))
+        if (self.edges_per < 0).any():
+            raise ValueError("delta drives a shard's edge count negative")
+        for i in np.flatnonzero(delta.machines_touched(self.p)):
+            if self.tomb_rows[i] > _COMPACT_FRAC * max(1, self.shard_rows[i]):
+                self._compact_shard(int(i))
+        for i in range(self.p):
+            for path, rows in ((self._shard_path(i), self.shard_rows[i]),
+                               (self._tomb_path(i), self.tomb_rows[i])):
+                got = path.stat().st_size if path.exists() else 0
+                if got != int(rows) * _ROW_BYTES:
+                    raise IOError(f"{path.name}: {got} bytes on disk, "
+                                  f"expected {int(rows)} rows")
+            if int(self.shard_rows[i]) - int(self.tomb_rows[i]) != \
+                    int(self.edges_per[i]):
+                raise IOError(f"shard {i}: row accounting out of balance")
+        sunk = np.flatnonzero(self.degree > 0)
+        held = np.flatnonzero(member.any(axis=0))
+        if not np.array_equal(sunk, held):
+            raise ValueError("membership disagrees with the updated "
+                             "degrees: a vertex is held iff an incident "
+                             "edge is placed")
+        self._member = member
+        return self._publish(extra_meta)
+
+    def _append_grouped(self, edges: np.ndarray, ms: np.ndarray,
+                        path_of, rows_acct: np.ndarray) -> None:
+        """Append per-machine row groups to shard or tomb files, fsynced."""
+        if not len(edges):
+            return
+        edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+        ms = np.asarray(ms, dtype=np.int64)
+        order = np.argsort(ms, kind="stable")
+        rows, srt = edges[order], ms[order]
+        bounds = np.searchsorted(srt, np.arange(self.p + 1))
+        for i in range(self.p):
+            lo, hi = bounds[i], bounds[i + 1]
+            if hi > lo:
+                with open(path_of(i), "ab") as f:
+                    rows[lo:hi].tofile(f)
+                    f.flush()
+                    os.fsync(f.fileno())
+                rows_acct[i] += hi - lo
+        # the appends created/extended names in the directory: sync it so
+        # the files survive a crash that the later meta rewrite survives
+        dfd = os.open(self.dir, os.O_RDONLY)
+        try:
+            os.fsync(dfd)
+        finally:
+            os.close(dfd)
+
+    def _compact_shard(self, i: int) -> None:
+        """Rewrite shard i with tombstones folded in (tmp + replace)."""
+        rows = np.fromfile(self._shard_path(i),
+                           dtype=np.int64).reshape(-1, 2)
+        tomb_path = self._tomb_path(i)
+        if tomb_path.exists() and tomb_path.stat().st_size:
+            tomb = np.fromfile(tomb_path, dtype=np.int64).reshape(-1, 2)
+            rows = _drop_tombstoned(rows, tomb)
+        tmp = self._shard_path(i).with_suffix(".edges.tmp")
+        with open(tmp, "wb") as f:
+            rows.tofile(f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self._shard_path(i))
+        if tomb_path.exists():
+            os.remove(tomb_path)
+        self.shard_rows[i] = len(rows)
+        self.tomb_rows[i] = 0
 
     # -- reader surface ------------------------------------------------------
     @classmethod
@@ -175,7 +338,12 @@ class StreamAssignment:
             raise FileNotFoundError(
                 f"{d} has no meta.json — unfinished StreamAssignment "
                 f"(finalize() never completed)")
-        meta = json.loads(meta_path.read_text())
+        try:
+            meta = json.loads(meta_path.read_text())
+        except json.JSONDecodeError as exc:
+            raise ValueError(
+                f"{meta_path} is corrupt (truncated or torn write): "
+                f"{exc}") from exc
         if meta["format_version"] != _FORMAT_VERSION:
             raise ValueError(f"unsupported StreamAssignment format "
                              f"{meta['format_version']}")
@@ -185,6 +353,11 @@ class StreamAssignment:
         sa.num_vertices = int(meta["num_vertices"])
         sa.meta = meta
         sa._files = []
+        sa.shard_rows = np.asarray(
+            meta.get("shard_rows", meta["edges_per_machine"]),
+            dtype=np.int64)
+        sa.tomb_rows = np.asarray(
+            meta.get("tomb_rows", [0] * sa.p), dtype=np.int64)
         with np.load(d / "state.npz") as z:
             sa.degree = z["degree"]
             sa.edges_per = z["edges_per"]
@@ -202,10 +375,32 @@ class StreamAssignment:
         return self._member
 
     def machine_edges(self, i: int) -> np.ndarray:
-        """(k_i, 2) int64 endpoints of machine i's shard (one machine's
-        worth of memory, read on demand)."""
-        return np.fromfile(self._shard_path(i),
+        """(k_i, 2) int64 endpoints of machine i's *live* shard rows (one
+        machine's worth of memory, read on demand).
+
+        Unreadable before :meth:`finalize` — same contract as
+        :meth:`membership`, so an unfinished directory is uniformly
+        rejected rather than quietly serving a partially-written shard.
+        After :meth:`apply_delta`, tombstoned rows are dropped here: each
+        tombstone cancels the *earliest* surviving occurrence of its
+        (u, v) pair, so a pair re-added after its removal (a later
+        append) is untouched.
+        """
+        if self.meta is None:
+            raise RuntimeError(
+                "machine_edges unavailable before finalize() — this "
+                "directory is an unfinished StreamAssignment")
+        rows = np.fromfile(self._shard_path(i),
                            dtype=np.int64).reshape(-1, 2)
+        tomb_path = self._tomb_path(i)
+        if tomb_path.exists() and tomb_path.stat().st_size:
+            tomb = np.fromfile(tomb_path, dtype=np.int64).reshape(-1, 2)
+            rows = _drop_tombstoned(rows, tomb)
+        if len(rows) != int(self.edges_per[i]):
+            raise IOError(
+                f"shard {i}: {len(rows)} live rows after tombstones, "
+                f"meta says {int(self.edges_per[i])}")
+        return rows
 
     def replication_factor(self) -> float:
         member = self.membership()
@@ -215,8 +410,23 @@ class StreamAssignment:
 
 
 def write_json_atomic(path, payload: dict) -> None:
-    """Write JSON via tmp + ``os.replace`` so readers never see a torn file."""
+    """Write JSON via tmp + ``os.replace`` so readers never see a torn file.
+
+    Both fsyncs matter for the durability half of the claim: the tmp file
+    is synced before the rename (otherwise ``os.replace`` can publish a
+    name whose *contents* are still unflushed — a crash then surfaces an
+    empty or partial file under the final name), and the directory is
+    synced after (otherwise the rename itself may not survive).
+    """
     path = pathlib.Path(path)
     tmp = path.with_name(path.name + ".tmp")
-    tmp.write_text(json.dumps(payload, indent=2))
+    with open(tmp, "w") as f:
+        f.write(json.dumps(payload, indent=2))
+        f.flush()
+        os.fsync(f.fileno())
     os.replace(tmp, path)
+    dfd = os.open(path.parent, os.O_RDONLY)
+    try:
+        os.fsync(dfd)
+    finally:
+        os.close(dfd)

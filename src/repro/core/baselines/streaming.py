@@ -264,6 +264,17 @@ class HDRFScorer:
     def reset(self, num_vertices: int) -> None:
         self._pdeg = np.zeros(num_vertices, dtype=np.int64)
 
+    def grow(self, num_vertices: int) -> None:
+        """Extend the partial-degree history to a grown vertex space
+        (dynamic insert streams) without erasing it — new vertices start
+        at degree 0, exactly as if they had been allocated up front."""
+        if self._pdeg is None:
+            self.reset(num_vertices)
+        elif num_vertices > len(self._pdeg):
+            self._pdeg = np.concatenate(
+                [self._pdeg,
+                 np.zeros(num_vertices - len(self._pdeg), dtype=np.int64)])
+
     def stream_order(self, g: Graph, seed: int) -> np.ndarray:
         return np.random.default_rng(seed).permutation(g.num_edges)
 

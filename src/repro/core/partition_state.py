@@ -153,6 +153,7 @@ class PartitionState:
         self._c_com = self.cluster.c_com()
         self._mem = self.cluster.memory()
         self._wcsr: WorkingCSR | None = None
+        self._wcsr_edges = -1           # graph size the CSR view was cut at
         self._costs_stale = False       # set by light-path admit_block
 
     @classmethod
@@ -201,9 +202,15 @@ class PartitionState:
         return self._mem
 
     def working_csr(self, compact_below: float = 0.75):
-        """Live (unassigned-edge) adjacency view, recompacted geometrically."""
-        if self._wcsr is None:
+        """Live (unassigned-edge) adjacency view, recompacted geometrically.
+
+        Appended edges (:meth:`append_edges`) invalidate the cached view:
+        the next call recuts it from the grown adjacency, so CSR consumers
+        never see a stale edge universe.
+        """
+        if self._wcsr is None or self._wcsr_edges != self.g.num_edges:
             self._wcsr = WorkingCSR.from_graph(self.g)
+            self._wcsr_edges = self.g.num_edges
         return self._wcsr.view(self.assign < 0,
                                int((self.assign < 0).sum()),
                                compact_below=compact_below)
@@ -233,7 +240,8 @@ class PartitionState:
 
     def remove_edge(self, e: int) -> None:
         i = int(self.assign[e])
-        assert i >= 0
+        if i < 0:
+            raise ValueError(f"remove_edge: edge {e} is unassigned")
         u, v = self.g.edges[e]
         self.assign[e] = -1
         self.edges_per[i] -= 1
@@ -244,7 +252,11 @@ class PartitionState:
                 self._vertex_leave(i, x)
 
     def add_edge(self, e: int, i: int) -> None:
-        assert self.assign[e] == -1
+        if self.assign[e] != -1:
+            raise ValueError(f"add_edge: edge {e} is already assigned "
+                             f"to machine {int(self.assign[e])}")
+        if not 0 <= i < self.p:
+            raise ValueError(f"add_edge: machine {i} outside [0, {self.p})")
         u, v = self.g.edges[e]
         for x in (int(u), int(v)):
             if self.cnt[i, x] == 0:
@@ -295,12 +307,22 @@ class PartitionState:
         self.t_cal += self._c_node * dv
 
     def remove_edges(self, es: np.ndarray) -> None:
-        """Batch ``remove_edge`` over an edge-id array (must be assigned)."""
+        """Batch ``remove_edge`` over an edge-id array.
+
+        Preconditions (``ValueError``, never a stripped-out ``assert``):
+        every id must be currently assigned, and ids must be unique within
+        the batch — a duplicated id would hit ``np.subtract.at`` twice but
+        the membership recount once, silently corrupting ``cnt``.
+        """
         es = np.asarray(es, dtype=np.int64)
         if es.size == 0:
             return
+        if len(np.unique(es)) != len(es):
+            raise ValueError("remove_edges: duplicate edge ids in batch")
         ms = self.assign[es].astype(np.int64)
-        assert (ms >= 0).all()
+        if (ms < 0).any():
+            bad = es[ms < 0][:8]
+            raise ValueError(f"remove_edges: unassigned edge ids {bad}")
         u = self.g.edges[es, 0].astype(np.int64)
         v = self.g.edges[es, 1].astype(np.int64)
         A = np.unique(np.concatenate([u, v]))
@@ -316,12 +338,27 @@ class PartitionState:
         self.t_cal -= self._c_edge * dm
 
     def add_edges(self, es: np.ndarray, ms: np.ndarray) -> None:
-        """Batch ``add_edge``: place es[j] on machine ms[j] (must be free)."""
+        """Batch ``add_edge``: place es[j] on machine ms[j].
+
+        Preconditions (``ValueError``, never a stripped-out ``assert``):
+        every id must be currently unassigned, machines in ``[0, p)``, and
+        ids unique within the batch — a duplicated id would double-count
+        in ``np.add.at`` while ``assign[es] = ms`` lands once.
+        """
         es = np.asarray(es, dtype=np.int64)
         if es.size == 0:
             return
         ms = np.asarray(ms, dtype=np.int64)
-        assert (self.assign[es] == -1).all()
+        if es.shape != ms.shape:
+            raise ValueError(f"add_edges: {len(es)} edge ids vs "
+                             f"{len(ms)} machines")
+        if len(np.unique(es)) != len(es):
+            raise ValueError("add_edges: duplicate edge ids in batch")
+        if ((ms < 0) | (ms >= self.p)).any():
+            raise ValueError(f"add_edges: machine ids outside [0, {self.p})")
+        if (self.assign[es] != -1).any():
+            bad = es[self.assign[es] != -1][:8]
+            raise ValueError(f"add_edges: already-assigned edge ids {bad}")
         u = self.g.edges[es, 0].astype(np.int64)
         v = self.g.edges[es, 1].astype(np.int64)
         A = np.unique(np.concatenate([u, v]))
@@ -335,6 +372,48 @@ class PartitionState:
         dm = np.bincount(ms, minlength=self.p).astype(np.float64)
         self.edges_per += dm
         self.t_cal += self._c_edge * dm
+
+    # -- dynamic growth (true insertion) ------------------------------------
+    def append_edges(self, uv: np.ndarray) -> np.ndarray:
+        """Grow the edge universe: append genuinely-new edges (and any new
+        vertices), returning their fresh canonical edge ids — unassigned,
+        ready for :meth:`add_edges` or the streaming wave engine.
+
+        This is what ``add_edges`` alone cannot do: its ``assign[es] == -1``
+        precondition re-places ids already present in ``self.g.edges``,
+        whereas a live insert stream delivers pairs the graph has never
+        seen.  Requires the graph to be a :class:`~repro.core.graph.
+        GrowableGraph` (build the state over
+        ``GrowableGraph.from_graph(g)``); ``uv`` must be canonical
+        (``u < v``), loop-free, batch-unique, and absent from the graph —
+        the graph's id index enforces absence, so a re-inserted deleted
+        edge must go through its existing id instead.
+
+        Every per-vertex structure (``cnt`` columns, ``replicas``,
+        ``com_sum``) grows with the vertex space, and ``assign`` with the
+        edge space, so shapes always match a fresh build.  No cost changes:
+        an unassigned edge contributes nothing to Eq. 3/4, so the state
+        stays exactly consistent with a fresh ``build`` on the grown graph.
+        """
+        if not hasattr(self.g, "append"):
+            raise ValueError(
+                "append_edges needs a growable graph — build the state "
+                "over repro.core.graph.GrowableGraph.from_graph(g)")
+        uv = np.asarray(uv, dtype=np.int64).reshape(-1, 2)
+        if len(uv) == 0:
+            return np.empty(0, dtype=np.int64)
+        eids = self.g.append(uv)       # validates canonical/unique/absent
+        nv = self.g.num_vertices
+        if nv > self.cnt.shape[1]:
+            grow = nv - self.cnt.shape[1]
+            self.cnt = np.pad(self.cnt, ((0, 0), (0, grow)))
+            self.replicas = np.pad(self.replicas, (0, grow))
+            self.com_sum = np.pad(self.com_sum, (0, grow))
+        grow_e = self.g.num_edges - len(self.assign)
+        if grow_e > 0:
+            self.assign = np.concatenate(
+                [self.assign, np.full(grow_e, -1, dtype=self.assign.dtype)])
+        return eids
 
     def placement_scores(self, es: np.ndarray,
                          cands: np.ndarray | None = None):

@@ -24,6 +24,13 @@ throughput on the proxies), ``pallas`` the blocked Block-ELL semiring
 SpMV (MXU-shaped on TPU, interpreter on CPU).  In ``--stream`` mode this
 requires ``--out-dir`` (the runtime packs from the on-disk shards, one
 machine at a time).
+
+Every partition this CLI emits is also a valid *seed* for the dynamic
+layer (``repro.core.DynamicPartitioner``): live edge inserts/deletes,
+drift-triggered bounded repair, and epoch deltas that update the
+``--out-dir`` shards and the BSP runtime in place — see the
+dynamic-replay benchmark (``python -m benchmarks.dynamic_replay``) for
+the measured workflow.
 """
 from __future__ import annotations
 
@@ -55,7 +62,16 @@ def load_graph(spec: str):
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        description="Graph-partitioning CLI (see module docstring for "
+                    "the full tour).",
+        epilog="dynamic-replay usage: the emitted partition seeds "
+               "repro.core.DynamicPartitioner for live insert/delete "
+               "streams with drift-triggered bounded repair; replay a "
+               "mutation timeline against it (assignment-latency "
+               "percentiles, amortized repair cost, TC drift vs "
+               "scratch) with: PYTHONPATH=src python -m "
+               "benchmarks.dynamic_replay [--smoke]")
     ap.add_argument("--graph", required=True,
                     help="rmat:<scale> | graph500:<scale> | mesh:<side> | "
                          "path to an edge list (.gz ok)")

@@ -1,0 +1,292 @@
+"""Dynamic incremental repartitioning: live mutation stream, epoch deltas,
+and the BSP warm-start hand-off.
+
+The layer's core promise is that incremental state never diverges from
+what a fresh build over the same live assignment would produce — every
+test here ultimately reduces to that equivalence, plus the durability
+contracts of the on-disk delta path (append + tombstone segments,
+meta-last crash safety).
+"""
+import numpy as np
+import pytest
+
+from repro.bsp import PartitionRuntime, pagerank
+from repro.bsp.stream_assignment import StreamAssignment
+from repro.core import (AssignmentDelta, DynamicPartitioner,
+                        from_edge_list, scaled_paper_cluster)
+from repro.core.graph import edge_keys
+from repro.core.partition_state import PartitionState
+from repro.data import rmat
+
+
+def split_timeline(scale=9, seed=2, seed_frac=0.7):
+    """A proxy graph split into (seed graph, arriving edges, cluster)."""
+    g = rmat(scale, seed=seed)
+    rng = np.random.default_rng(seed)
+    edges = g.edges[rng.permutation(g.num_edges)]
+    n = int(seed_frac * len(edges))
+    gseed = from_edge_list(edges[:n], num_vertices=g.num_vertices)
+    cl = scaled_paper_cluster(2, 4, g.num_edges, slack=2.0)
+    return gseed, edges[n:], cl
+
+
+def keyset(uv):
+    return set(edge_keys(uv[:, 0], uv[:, 1]).tolist())
+
+
+@pytest.fixture()
+def dp():
+    gseed, arrivals, cl = split_timeline()
+    d = DynamicPartitioner(gseed, cl, method="hdrf", auto_repair=False)
+    return d, arrivals, cl
+
+
+class TestMutationStream:
+    def test_insert_places_whole_batch(self, dp):
+        d, arrivals, cl = dp
+        before = d.num_live_edges
+        placed = d.insert(arrivals[:200])
+        assert placed == 200
+        assert d.num_live_edges == before + 200
+        assert (d.state.assign >= 0).all()
+
+    def test_state_matches_fresh_build_after_churn(self, dp):
+        """The equivalence everything else rests on: live incremental
+        state == PartitionState.build over the same graph + assignment."""
+        d, arrivals, cl = dp
+        d.insert(arrivals[:300])
+        live = np.flatnonzero(d.state.assign >= 0)
+        d.delete(d.g.edges[live[::7]])
+        d.insert(arrivals[300:400])
+        fresh = PartitionState.build(d.g, d.state.assign, cl)
+        np.testing.assert_array_equal(d.state.cnt, fresh.cnt)
+        np.testing.assert_array_equal(d.state.t_cal, fresh.t_cal)
+        np.testing.assert_array_equal(d.state.t_com, fresh.t_com)
+        np.testing.assert_array_equal(d.state.verts_per, fresh.verts_per)
+        assert d.tc == fresh.tc
+
+    def test_insert_is_idempotent(self, dp):
+        d, arrivals, cl = dp
+        d.insert(arrivals[:50])
+        assign = d.state.assign.copy()
+        assert d.insert(arrivals[:50]) == 0     # all already live
+        np.testing.assert_array_equal(d.state.assign, assign)
+
+    def test_insert_grows_the_vertex_universe(self, dp):
+        d, _, _ = dp
+        v0 = d.g.num_vertices
+        d.insert(np.array([[v0 + 1, 3], [v0, v0 + 1]]))
+        assert d.g.num_vertices == v0 + 2
+        assert d.membership().shape[1] == v0 + 2
+        assert d.membership()[:, v0 + 1].any()
+
+    def test_reinsert_reuses_the_canonical_id(self, dp):
+        d, _, _ = dp
+        pair = d.g.edges[:1]
+        eid = d.g.eids_of(pair[:, 0], pair[:, 1])
+        ne = d.g.num_edges
+        d.delete(pair)
+        assert d.state.assign[eid[0]] == -1
+        d.insert(pair)
+        assert d.g.num_edges == ne             # no new id minted
+        assert d.state.assign[eid[0]] >= 0
+        assert d.counters["reinserted"] == 1
+
+    def test_delete_strict_rejects_unknown_pairs(self, dp):
+        d, _, _ = dp
+        ghost = np.array([[d.g.num_vertices + 5, d.g.num_vertices + 6]])
+        with pytest.raises(ValueError, match="not currently live"):
+            d.delete(ghost)
+        assert d.delete(ghost, strict=False) == 0
+
+    def test_loops_and_duplicates_are_canonicalized_away(self, dp):
+        d, _, _ = dp
+        v0 = d.g.num_vertices
+        placed = d.insert(np.array([[v0, v0], [v0, v0 + 1],
+                                    [v0 + 1, v0]]))
+        assert placed == 1                     # loop dropped, pair deduped
+
+
+class TestDriftRepair:
+    def test_quiet_timeline_never_repairs(self, dp):
+        d, arrivals, _ = dp
+        d.auto_repair = True
+        d.insert(arrivals[:100])
+        assert d.repairs == []
+
+    def test_tight_skew_leash_triggers_bounded_repair(self):
+        gseed, arrivals, cl = split_timeline()
+        d = DynamicPartitioner(gseed, cl, method="hdrf",
+                               skew_limit=1.0 + 1e-9, repair_cap=256)
+        d.insert(arrivals[:256])
+        assert d.repairs and d.repairs[0].trigger == "skew"
+        assert all(r.edges_moved <= 256 for r in d.repairs)
+
+    def test_forced_repair_keeps_state_exact_and_complete(self, dp):
+        d, arrivals, cl = dp
+        d.insert(arrivals[:300])
+        rep = d.repair()
+        assert rep.trigger == "forced"
+        assert (d.state.assign >= 0).all()     # destroy set fully re-placed
+        fresh = PartitionState.build(d.g, d.state.assign, cl)
+        np.testing.assert_array_equal(d.state.cnt, fresh.cnt)
+        assert d.tc == fresh.tc
+        assert not d._touched.any()            # frontier reset
+
+    def test_repair_scoped_to_frontier(self, dp):
+        """With an empty frontier a repair has nothing to destroy."""
+        d, _, _ = dp
+        rep = d.repair()
+        assert rep.edges_moved == 0
+
+
+class TestDelta:
+    def test_delta_coalesces_within_epoch(self, dp):
+        d, arrivals, _ = dp
+        snap = d.snapshot()
+        d.insert(arrivals[:60])
+        d.delete(arrivals[:20])                # inserted then deleted
+        seed_pair = d.g.edges[:1]
+        d.delete(seed_pair)                    # live at snapshot
+        delta = d.delta_since(snap)
+        added, removed = keyset(delta.added), keyset(delta.removed)
+        flash = keyset(arrivals[:20])
+        assert not (flash & added) and not (flash & removed)
+        assert keyset(arrivals[20:60]) <= added
+        assert keyset(seed_pair) <= removed
+        assert delta.num_changes == len(delta.added) + len(delta.removed)
+
+    def test_empty_epoch_empty_delta(self, dp):
+        d, _, _ = dp
+        delta = d.delta_since(d.snapshot())
+        assert delta.num_changes == 0
+        assert not delta.machines_touched(d.cluster.p).any()
+
+
+def finalized_assignment(tmp_path, d):
+    """A finalized StreamAssignment mirroring the live partition."""
+    sa = StreamAssignment(tmp_path / "assign", d.cluster.p,
+                          d.g.num_vertices)
+    live = np.flatnonzero(d.state.assign >= 0)
+    sa.sink(d.g.edges[live], d.state.assign[live].astype(np.int64))
+    sa.finalize(d.membership())
+    return sa
+
+
+class TestDeltaRoundTrip:
+    def test_shards_track_live_assignment(self, dp, tmp_path):
+        d, arrivals, cl = dp
+        sa = finalized_assignment(tmp_path, d)
+        snap = d.snapshot()
+        d.insert(arrivals[:250])
+        live = np.flatnonzero(d.state.assign >= 0)
+        d.delete(d.g.edges[live[::9]])
+        d.repair()                             # moves => tombstone + append
+        sa.apply_delta(d.delta_since(snap), d.membership())
+        for i in range(cl.p):
+            want = d.g.edges[d.state.assign == i]
+            rows = sa.machine_edges(i)
+            assert sorted(map(tuple, rows.tolist())) == \
+                sorted(map(tuple, want.tolist()))
+        sb = StreamAssignment.open(tmp_path / "assign")   # reopen clean
+        np.testing.assert_array_equal(sb.membership(), d.membership())
+        np.testing.assert_array_equal(sb.edges_per, sa.edges_per)
+
+    def test_runtime_apply_delta_equals_full_repack(self, dp, tmp_path):
+        d, arrivals, cl = dp
+        sa = finalized_assignment(tmp_path, d)
+        rt = PartitionRuntime.from_stream(sa)
+        snap = d.snapshot()
+        d.insert(arrivals[:200])
+        live = np.flatnonzero(d.state.assign >= 0)
+        d.delete(d.g.edges[live[::11]])
+        delta = d.delta_since(snap)
+        sa.apply_delta(delta, d.membership())
+        fast = rt.apply_delta(sa, delta)
+        full = PartitionRuntime.from_stream(sa)
+        import dataclasses
+        for f in dataclasses.fields(full):
+            np.testing.assert_array_equal(
+                getattr(fast, f.name), getattr(full, f.name), err_msg=f.name)
+
+    def test_warm_start_pagerank_reaches_the_same_fixed_point(
+            self, dp, tmp_path):
+        d, arrivals, cl = dp
+        sa = finalized_assignment(tmp_path, d)
+        rt = PartitionRuntime.from_stream(sa)
+        pr_old, _ = pagerank(rt, num_iters=40)
+        snap = d.snapshot()
+        d.insert(arrivals[:200])
+        delta = d.delta_since(snap)
+        sa.apply_delta(delta, d.membership())
+        rt2 = rt.apply_delta(sa, delta)
+        warm, _ = pagerank(rt2, num_iters=40, init=pr_old)
+        cold, _ = pagerank(rt2, num_iters=40)
+        np.testing.assert_allclose(warm, cold, rtol=2e-4, atol=1e-7)
+        assert abs(warm.sum() - cold.sum()) < 1e-3
+
+
+class TestDurability:
+    def test_open_rejects_truncated_meta(self, dp, tmp_path):
+        d, _, _ = dp
+        sa = finalized_assignment(tmp_path, d)
+        meta = sa.dir / "meta.json"
+        meta.write_text(meta.read_text()[: meta.stat().st_size // 2])
+        with pytest.raises(ValueError, match="corrupt"):
+            StreamAssignment.open(sa.dir)
+
+    def test_machine_edges_unreadable_before_finalize(self, tmp_path):
+        sa = StreamAssignment(tmp_path / "a", 2, 4)
+        sa.sink(np.array([[0, 1]]), np.array([0]))
+        with pytest.raises(RuntimeError, match="unfinished"):
+            sa.machine_edges(0)
+        sa.close()
+
+    def test_apply_delta_requires_finalize(self, tmp_path):
+        sa = StreamAssignment(tmp_path / "a", 2, 4)
+        empty = np.empty((0, 2), dtype=np.int64)
+        delta = AssignmentDelta(num_vertices=4, added=empty,
+                                added_ms=np.empty(0, dtype=np.int64),
+                                removed=empty,
+                                removed_ms=np.empty(0, dtype=np.int64))
+        with pytest.raises(RuntimeError, match="finalized"):
+            sa.apply_delta(delta, np.zeros((2, 4), dtype=bool))
+        sa.close()
+
+    def test_mid_delta_directory_is_detectably_unfinished(
+            self, dp, tmp_path, monkeypatch):
+        """A crash between unpublish and republish leaves no meta.json."""
+        d, arrivals, _ = dp
+        sa = finalized_assignment(tmp_path, d)
+        snap = d.snapshot()
+        d.insert(arrivals[:50])
+
+        def boom(*a, **k):
+            raise RuntimeError("simulated crash")
+
+        monkeypatch.setattr(sa, "_publish", boom)
+        with pytest.raises(RuntimeError, match="simulated crash"):
+            sa.apply_delta(d.delta_since(snap), d.membership())
+        assert not (sa.dir / "meta.json").exists()
+        with pytest.raises(FileNotFoundError, match="meta.json"):
+            StreamAssignment.open(sa.dir)
+
+    def test_tombstone_compaction_folds_in(self, tmp_path):
+        sa = StreamAssignment(tmp_path / "a", 1, 4)
+        edges = np.array([[0, 1], [0, 2], [0, 3], [1, 2]])
+        sa.sink(edges, np.zeros(4, dtype=np.int64))
+        member = np.ones((1, 4), dtype=bool)
+        sa.finalize(member)
+        removed = edges[:3]
+        member2 = np.array([[False, True, True, False]])
+        delta = AssignmentDelta(
+            num_vertices=4,
+            added=np.empty((0, 2), dtype=np.int64),
+            added_ms=np.empty(0, dtype=np.int64),
+            removed=removed.astype(np.int64),
+            removed_ms=np.zeros(3, dtype=np.int64))
+        sa.apply_delta(delta, member2)
+        assert not (sa.dir / "shard0.tomb").exists()   # compacted away
+        assert sa.shard_rows[0] == 1 and sa.tomb_rows[0] == 0
+        np.testing.assert_array_equal(sa.machine_edges(0),
+                                      np.array([[1, 2]]))

@@ -11,8 +11,8 @@ import numpy as np
 import pytest
 from _hyp import given, settings, strategies as st
 
-from repro.core import (Cluster, Machine, capacities, evaluate,
-                        from_edge_list, scaled_paper_cluster)
+from repro.core import (Cluster, GrowableGraph, Machine, capacities,
+                        evaluate, from_edge_list, scaled_paper_cluster)
 from repro.core import expand as exp_mod
 from repro.core import sls as sls_mod
 from repro.core.partition_state import (PartitionState, WorkingCSR, cumcount,
@@ -185,6 +185,111 @@ class TestWorkingCSR:
 def test_cumcount():
     a = np.array([3, 1, 3, 3, 1, 0])
     assert cumcount(a).tolist() == [0, 0, 1, 2, 1, 0]
+
+
+class TestMutationHardening:
+    """The mutation paths reject malformed batches with ValueError — a bad
+    dynamic stream must fail loudly, not desync the incremental state
+    (bare asserts vanish under ``python -O``)."""
+
+    @pytest.fixture()
+    def obj(self):
+        rng = np.random.default_rng(11)
+        g, cl, assign = random_state(rng)
+        return PartitionState.build(g, assign, cl)
+
+    def test_remove_rejects_duplicate_ids(self, obj):
+        with pytest.raises(ValueError, match="duplicate"):
+            obj.remove_edges(np.array([0, 1, 0]))
+
+    def test_remove_rejects_unassigned(self, obj):
+        obj.remove_edges(np.array([2]))
+        with pytest.raises(ValueError, match="unassigned"):
+            obj.remove_edges(np.array([2]))
+        with pytest.raises(ValueError, match="unassigned"):
+            obj.remove_edge(2)
+
+    def test_add_rejects_shape_mismatch(self, obj):
+        obj.remove_edges(np.array([0, 1]))
+        with pytest.raises(ValueError, match="edge ids vs"):
+            obj.add_edges(np.array([0, 1]), np.array([0]))
+
+    def test_add_rejects_duplicate_ids(self, obj):
+        obj.remove_edges(np.array([0]))
+        with pytest.raises(ValueError, match="duplicate"):
+            obj.add_edges(np.array([0, 0]), np.array([0, 1]))
+
+    def test_add_rejects_machine_out_of_range(self, obj):
+        p = obj.cluster.p
+        obj.remove_edges(np.array([0]))
+        with pytest.raises(ValueError, match="machine"):
+            obj.add_edges(np.array([0]), np.array([p]))
+        with pytest.raises(ValueError, match="machine"):
+            obj.add_edge(0, -1)
+
+    def test_add_rejects_already_assigned(self, obj):
+        with pytest.raises(ValueError, match="assigned"):
+            obj.add_edges(np.array([0]), np.array([0]))
+        with pytest.raises(ValueError, match="assigned"):
+            obj.add_edge(0, 0)
+
+    def test_rejected_batch_leaves_state_untouched(self, obj):
+        ref = PartitionState.build(obj.g, obj.assign, obj.cluster)
+        with pytest.raises(ValueError):
+            obj.remove_edges(np.array([0, 0]))
+        assert_states_equal(obj, ref)
+
+    def test_append_requires_growable_graph(self, obj):
+        with pytest.raises(ValueError, match="growable"):
+            obj.append_edges(np.array([[0, 1]]))
+
+
+class TestInterleavedMutation:
+    """Satellite invariant of the dynamic layer: ANY interleaving of
+    remove / re-add / append leaves cnt, t_cal, t_com, and verts_per
+    bit-identical to a fresh ``PartitionState.build`` over the final
+    graph + assignment."""
+
+    @given(st.integers(0, 2 ** 31))
+    @settings(max_examples=15, deadline=None)
+    def test_any_interleaving_matches_fresh_build(self, seed):
+        rng = np.random.default_rng(seed)
+        g, cl, assign = random_state(rng)
+        gg = GrowableGraph.from_graph(g)
+        obj = PartitionState.build(gg, assign, cl)
+        for _ in range(8):
+            op = int(rng.integers(0, 3))
+            if op == 0:                         # retire some live edges
+                live = np.flatnonzero(obj.assign >= 0)
+                if not len(live):
+                    continue
+                k = int(rng.integers(1, len(live) + 1))
+                obj.remove_edges(rng.choice(live, size=k, replace=False))
+            elif op == 1:                       # re-admit retired edges
+                dead = np.flatnonzero(obj.assign < 0)
+                if not len(dead):
+                    continue
+                k = int(rng.integers(1, len(dead) + 1))
+                es = rng.choice(dead, size=k, replace=False)
+                obj.add_edges(es, rng.integers(0, cl.p, size=k))
+            else:                               # append brand-new pairs
+                V = gg.num_vertices
+                raw = rng.integers(0, V + 2, size=(8, 2))
+                u = np.minimum(raw[:, 0], raw[:, 1])
+                v = np.maximum(raw[:, 0], raw[:, 1])
+                keep = u != v
+                u, v = u[keep], v[keep]
+                _, first = np.unique((u << np.int64(32)) | v,
+                                     return_index=True)
+                u, v = u[first], v[first]
+                new = gg.eids_of(u, v) < 0
+                if not new.any():
+                    continue
+                eids = obj.append_edges(np.stack([u[new], v[new]], axis=1))
+                obj.add_edges(eids, rng.integers(0, cl.p, size=len(eids)))
+        fresh = PartitionState.build(gg, obj.assign, cl)
+        assert_states_equal(obj, fresh)
+        assert obj.tc == fresh.tc
 
 
 # ---------------------------------------------------------------------------
