@@ -10,12 +10,17 @@ Baseline schema, per metric::
 
     "stream/hdrf/tc_gap": {"max": 0.02}            # fail if value > max
     "oocore/peak_ratio":  {"max": 0.6, "min": 0}   # and/or a floor
+    "dynamic/p99_us":     {}                       # tracked, ungated
 
-Metrics in the report but absent from the baseline are listed as
-untracked (new metrics start untracked; add bounds once their value has a
-trajectory).  Baseline entries absent from the report are skipped — the
-tier-2 matrix jobs each emit a different subset against the one shared
-baseline.
+A bound-less entry is *tracked, ungated*: the metric is a deliberate part
+of the trajectory record (it prints with every run and rides in the
+uploaded artifact) but never fails the job — the home for wall-clock
+numbers like latency percentiles and parallel speedups, which CI noise
+makes ungateable.  Metrics in the report but absent from the baseline are
+listed as untracked (new metrics start untracked; add bounds — or an
+empty entry — once their value has a trajectory).  Baseline entries
+absent from the report are skipped — the tier-2 matrix jobs each emit a
+different subset against the one shared baseline.
 
 Usage:
     python -m benchmarks.check_trend BENCH_smoke.json [--baseline PATH]
@@ -43,6 +48,9 @@ def check(report: dict, baseline: dict) -> list[str]:
             continue
         v = report[name]
         lo, hi = bounds.get("min"), bounds.get("max")
+        if lo is None and hi is None:
+            print(f"  tracked   {name} = {v:.6g}  (ungated)")
+            continue
         if hi is not None and v > hi:
             bad.append(f"{name} = {v:.6g} > max {hi:.6g}")
         elif lo is not None and v < lo:

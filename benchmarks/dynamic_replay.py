@@ -45,17 +45,16 @@ def replay_timeline(g, cl, *, method: str = "hdrf", batch: int = 512,
                     csv: CSV | None = None, label: str = "LJ") -> dict:
     """Replay one timeline; returns the metrics dict (see module doc).
 
-    ``rf_leash`` tightens the RF threshold to that factor over the seed
-    partition's RF — the default monitor leash (1.15×) is sized for long
-    deployments and never trips on a proxy-length timeline, which would
-    leave the repair path unmeasured."""
+    ``rf_leash`` goes straight into the monitor's adaptive leash (it
+    re-anchors to the measured RF after every repair epoch), tightened
+    from the 1.15 deployment default so a proxy-length timeline still
+    exercises the repair path."""
     rng = np.random.default_rng(seed)
     edges = g.edges[rng.permutation(g.num_edges)]
     n_seed = int(seed_frac * len(edges))
     gseed = from_edge_list(edges[:n_seed], num_vertices=g.num_vertices)
     dp, t_seed = timed(DynamicPartitioner, gseed, cl, method=method,
-                       auto_repair=False)
-    dp.rf_limit = rf_leash * dp.rf
+                       rf_leash=rf_leash, auto_repair=False)
 
     lat = []                      # per-edge insert seconds, one per batch
     repair_s = 0.0

@@ -12,8 +12,8 @@ import inspect
 import time
 
 from . import (ablation, bsp_apps, bsp_runtime, compare_tc, dynamic_replay,
-               oocore, partition_time, scale_graphsize, scale_machines,
-               tc_vs_runtime, tuning)
+               oocore, parallel_scale, partition_time, scale_graphsize,
+               scale_machines, tc_vs_runtime, tuning)
 
 TABLES = {
     "fig12": compare_tc.run,          # TC vs baselines
@@ -26,6 +26,7 @@ TABLES = {
     "sls": partition_time.run_sls_compare,  # scalar vs vectorized SLS repair
     "stream": partition_time.run_streaming_compare,  # oracle vs block engine
     "oocore": oocore.run,             # out-of-core vs in-memory pipeline
+    "parallel": parallel_scale.run,   # W-worker pipeline scaling/quality
     "dynamic": dynamic_replay.run,    # insert/delete timeline replay
     "bsp": bsp_apps.run,              # edge-kernel backends per BSP app
     "wave": tuning.run_wave_sweep,    # SLS wave_frac/wave_window sweep

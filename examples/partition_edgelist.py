@@ -39,6 +39,32 @@ runtime (``PartitionRuntime.from_stream`` — reads one machine's shard at
 a time, never the raw list) and runs distributed PageRank supersteps on
 the partition it just built — the paper's end-to-end claim, out of core.
 
+Multi-worker workflow
+---------------------
+``--workers W`` runs the same out-of-core pipeline through the
+W-process orchestrator (``repro.core.parallel``) when the wall clock,
+not memory, is the constraint::
+
+    PYTHONPATH=src python examples/partition_edgelist.py edges.txt \
+        --part-method hdrf --num-parts 8 --two-pass --workers 4 \
+        --pagerank --out-dir parts/
+
+Count and spill/dedup shard first: the raw list splits into W byte
+ranges (line-aligned), each worker hash-shuffles its range into the
+shared spill buckets, and pass-2 dedup runs per worker over disjoint
+bucket sets — the merged stream is *identical* block for block to the
+sequential dedup.  The parallel stream then scores engine blocks on W
+workers against membership snapshots synced every ``sync_blocks``
+blocks (results depend only on that period, never on W; at
+``sync_blocks=1`` they are bit-identical to ``--workers 1``).
+Placements replay through the sink on the coordinator in a
+deterministic order, so this script still writes ONE
+``StreamAssignment`` (and one set of ``part<i>.edges``) regardless of
+W — ``--pagerank`` packs and runs on it exactly as in the sequential
+workflow.  ``benchmarks/parallel_scale.py`` is the measured version
+(dedup+scoring wall at W∈{1,2,4}, TC/RF gap vs sequential) and runs in
+CI as the tier-2 ``parallel`` job.
+
 Choosing an edge-kernel backend
 -------------------------------
 ``--backend`` selects how each PageRank superstep combines messages over
@@ -114,9 +140,17 @@ def _partition_streaming(args, part, out: pathlib.Path):
     """
     source: object
     if args.two_pass:
-        print(f"spilling+deduplicating {args.edge_list} ...", flush=True)
-        source = TwoPassDedup(args.edge_list, block_size=args.block_size,
-                              bucket_rows=args.bucket_rows)
+        print(f"spilling+deduplicating {args.edge_list} "
+              f"(workers={args.workers}) ...", flush=True)
+        if args.workers > 1:
+            from repro.core.parallel import ShardedTwoPassDedup
+            source = ShardedTwoPassDedup(
+                args.edge_list, block_size=args.block_size,
+                bucket_rows=args.bucket_rows, workers=args.workers)
+        else:
+            source = TwoPassDedup(args.edge_list,
+                                  block_size=args.block_size,
+                                  bucket_rows=args.bucket_rows)
         num_v, num_e = source.prepare()
     else:
         print(f"counting {args.edge_list} ...", flush=True)
@@ -138,10 +172,13 @@ def _partition_streaming(args, part, out: pathlib.Path):
             for i in np.unique(ms):
                 np.savetxt(files[int(i)], edges[ms == i], fmt="%d")
 
+        kw = {}
+        if args.workers > 1:
+            kw = {"workers": args.workers, "sync_blocks": args.sync_blocks}
         state = part.stream(
             source, num_v, num_e, cl,
             dedup="two_pass" if args.two_pass else "block",
-            block_size=args.block_size, sink=sink)
+            block_size=args.block_size, sink=sink, **kw)
     except BaseException:
         sa.close()          # abort: drop shard handles, publish nothing
         raise
@@ -202,6 +239,13 @@ def main(argv=None):
     ap.add_argument("--bucket-rows", type=int, default=1 << 16,
                     help="--two-pass spill-bucket row target (bounds peak "
                          "edge residency)")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="W-process pipeline: sharded dedup + parallel "
+                         "wave scoring (see 'Multi-worker workflow'); "
+                         "1 = sequential bit for bit")
+    ap.add_argument("--sync-blocks", type=int, default=None,
+                    help="--workers > 1: engine blocks between membership "
+                         "sync barriers (1 = bit-identical to sequential)")
     ap.add_argument("--pagerank", action="store_true",
                     help="after partitioning, pack the BSP runtime from "
                          "the shards and run distributed PageRank")

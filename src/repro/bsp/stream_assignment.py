@@ -43,6 +43,13 @@ _FORMAT_VERSION = 1
 #: compact a shard once tombstones cancel this fraction of its rows
 _COMPACT_FRAC = 0.5
 
+#: the keys ``_publish`` owns; anything else in ``meta`` is caller
+#: provenance (method, dedup, ...) that maintenance passes carry over
+_META_KEYS = frozenset({
+    "format_version", "p", "num_vertices", "num_edges",
+    "edges_per_machine", "verts_per_machine", "replication_factor",
+    "shards", "shard_rows", "tomb_rows"})
+
 
 def _drop_tombstoned(rows: np.ndarray, tomb: np.ndarray) -> np.ndarray:
     """Drop, for each tombstone (u, v), the earliest matching row.
@@ -327,6 +334,51 @@ class StreamAssignment:
             os.remove(tomb_path)
         self.shard_rows[i] = len(rows)
         self.tomb_rows[i] = 0
+
+    def compact(self, max_tomb_frac: float = 0.0) -> dict:
+        """Fold tombstones into their shards as a standalone maintenance
+        pass (``launch/partition.py --compact``).
+
+        :meth:`apply_delta` compacts a shard only when its tombstones
+        pass ``_COMPACT_FRAC`` *during* a delta, so a long-lived
+        directory accumulates tombstone debt between epochs — every
+        reader pays the :func:`_drop_tombstoned` scan on every
+        ``machine_edges`` call.  This rewrites each shard whose tombstone
+        fraction exceeds ``max_tomb_frac`` (default 0.0: fold everything)
+        through the same tmp + ``os.replace`` path, under the same
+        meta-last crash protocol: ``meta.json`` is removed first, every
+        rewritten shard byte-verifies against the row accounting, and
+        only then is the meta republished — provenance keys
+        (method/dedup/...) carried over.  Live content is untouched:
+        ``machine_edges`` returns identical rows before and after.  A
+        no-op (nothing over the threshold) leaves the directory
+        unpublished for zero time and returns the current meta.
+        """
+        if self.meta is None:
+            raise RuntimeError("compact needs a finalized (or opened) "
+                               "StreamAssignment")
+        frac = float(max_tomb_frac)
+        todo = [i for i in range(self.p)
+                if self.tomb_rows[i] > 0
+                and self.tomb_rows[i] > frac * max(1, self.shard_rows[i])]
+        if not todo:
+            return self.meta
+        extra = {k: v for k, v in self.meta.items() if k not in _META_KEYS}
+        os.remove(self.dir / "meta.json")
+        self.meta = None
+        for i in todo:
+            self._compact_shard(i)
+        for i in range(self.p):
+            for path, rows in ((self._shard_path(i), self.shard_rows[i]),
+                               (self._tomb_path(i), self.tomb_rows[i])):
+                got = path.stat().st_size if path.exists() else 0
+                if got != int(rows) * _ROW_BYTES:
+                    raise IOError(f"{path.name}: {got} bytes on disk, "
+                                  f"expected {int(rows)} rows")
+            if int(self.shard_rows[i]) - int(self.tomb_rows[i]) != \
+                    int(self.edges_per[i]):
+                raise IOError(f"shard {i}: row accounting out of balance")
+        return self._publish(extra)
 
     # -- reader surface ------------------------------------------------------
     @classmethod

@@ -399,8 +399,11 @@ class _BlockEngine:
         self.aux: np.ndarray | None = None
         self._scratch = np.full(max(1, nV), -1, dtype=np.int64)
 
-    def push(self, u, v, eids=None) -> None:
-        aux = self.scorer.block_aux(u, v)
+    def push(self, u, v, eids=None, aux=None) -> None:
+        # aux may arrive precomputed (the parallel pipeline stamps stream
+        # facts centrally, in arrival order, before shipping units out)
+        if aux is None:
+            aux = self.scorer.block_aux(u, v)
         self.u = np.concatenate([self.u, u])
         self.v = np.concatenate([self.v, v])
         if eids is not None:
@@ -714,6 +717,7 @@ def stream_partition(source, num_vertices: int | None = None,
                      max_waves: int | None = None,
                      replica_frac: float | None = None,
                      creator_scalar: bool | None = None, sink=None,
+                     workers: int = 1, sync_blocks: int | None = None,
                      **scorer_kw) -> StreamMembership:
     """Partition an edge stream that never materializes as one array.
 
@@ -740,7 +744,24 @@ def stream_partition(source, num_vertices: int | None = None,
     across blocks.  Returns the end-of-stream membership state (RF,
     counts); after a two-pass run its ``spill_stats`` attribute carries
     the :class:`repro.data.SpillStats` accounting.
+
+    ``workers > 1`` hands the whole call to the multi-process pipeline
+    (``core/parallel.py``): sharded spill/dedup plus W-worker wave
+    scoring against membership snapshots synced every ``sync_blocks``
+    engine blocks.  Results are worker-count invariant (the schedule
+    depends only on ``sync_blocks``), and ``sync_blocks=1`` is
+    bit-identical to this sequential path; ``sync_blocks`` is ignored at
+    ``workers=1``, where every wave sees fresh state.
     """
+    if workers is not None and int(workers) > 1:
+        from ..parallel import parallel_stream_partition
+        return parallel_stream_partition(
+            source, num_vertices, num_edges, cluster, method,
+            workers=int(workers), sync_blocks=sync_blocks, dedup=dedup,
+            spill_dir=spill_dir, bucket_rows=bucket_rows,
+            block_size=block_size, max_waves=max_waves,
+            replica_frac=replica_frac, creator_scalar=creator_scalar,
+            sink=sink, **scorer_kw)
     blocks, num_vertices, num_edges, spill, owned = _resolve_stream_source(
         source, num_vertices, num_edges, dedup=dedup, spill_dir=spill_dir,
         bucket_rows=bucket_rows, io_block=block_size)
@@ -858,10 +879,12 @@ _ENGINE_KNOBS = ("seed", "block_size", "max_waves", "replica_frac",
                  "creator_scalar")
 #: knobs of the graph-free ``stream`` entry (``Partitioner.stream``):
 #: engine knobs minus ``seed`` (stream order is arrival order), plus the
-#: dedup discipline, spill controls, and the placement sink.
+#: dedup discipline, spill controls, the placement sink, and the
+#: multi-process pipeline's worker count / sync period (the ``parallel``
+#: capability).
 _STREAM_KNOBS = ("block_size", "max_waves", "replica_frac",
                  "creator_scalar", "dedup", "spill_dir", "bucket_rows",
-                 "sink")
+                 "sink", "workers", "sync_blocks")
 
 
 def _stream_entry(key):
@@ -876,18 +899,20 @@ def _stream_entry(key):
 register(Partitioner(
     "greedy", powergraph_greedy, "streaming",
     "PowerGraph greedy vertex-cut, block-stream engine",
-    frozenset({"blocked", "streamable"}), _ENGINE_KNOBS,
+    frozenset({"blocked", "streamable", "parallel"}), _ENGINE_KNOBS,
     stream_fn=_stream_entry("greedy"), stream_knobs=_STREAM_KNOBS))
 register(Partitioner(
     "hdrf", hdrf, "streaming",
     "HDRF [Petroni et al. 2015], block-stream engine",
-    frozenset({"blocked", "streamable"}), _ENGINE_KNOBS + ("lam", "eps"),
+    frozenset({"blocked", "streamable", "parallel"}),
+    _ENGINE_KNOBS + ("lam", "eps"),
     stream_fn=_stream_entry("hdrf"),
     stream_knobs=_STREAM_KNOBS + ("lam", "eps")))
 register(Partitioner(
     "ebv", ebv, "streaming",
     "EBV [Zhang et al. 2021], block-stream engine",
-    frozenset({"blocked", "streamable"}), _ENGINE_KNOBS + ("w_e", "w_v"),
+    frozenset({"blocked", "streamable", "parallel"}),
+    _ENGINE_KNOBS + ("w_e", "w_v"),
     stream_fn=_stream_entry("ebv"),
     stream_knobs=_STREAM_KNOBS + ("w_e", "w_v")))
 register(Partitioner(

@@ -117,8 +117,17 @@ class DynamicPartitioner:
                     ``hdrf`` | ``ebv``) — engine knobs come from the
                     per-method ``ENGINE_DEFAULTS``.
       skew_limit:   repair when ``max(T_i)/mean(T_i)`` exceeds this.
-      rf_limit:     repair when RF exceeds this; ``None`` = 1.15× the
-                    RF measured right after construction.
+      rf_limit:     repair when RF exceeds this; ``None`` (the default)
+                    keeps an *adaptive leash*: ``rf_leash ×`` a running
+                    RF baseline re-anchored to the measured RF after
+                    every repair epoch, so long churn timelines keep
+                    tripping on relative drift instead of outgrowing a
+                    threshold frozen at construction.  A float pins the
+                    limit absolutely (and assigning ``dp.rf_limit = x``
+                    later does the same).
+      rf_leash:     the adaptive leash's relative slack (default 1.15 —
+                    repair when RF drifts 15% above the last-repair
+                    baseline); ignored when ``rf_limit`` is pinned.
       repair_gamma: a machine is *overloaded* when its T is within the
                     top ``(1-gamma)`` fraction of the T spread
                     (``sls.destroy_repair``'s threshold).
@@ -136,6 +145,7 @@ class DynamicPartitioner:
                  assign: np.ndarray | None = None, *,
                  method: str = "hdrf", seed: int = 0,
                  skew_limit: float = 1.35, rf_limit: float | None = None,
+                 rf_leash: float = 1.15,
                  repair_gamma: float = 0.75, repair_theta: float = 0.25,
                  repair_cap: int | None = None, auto_repair: bool = True,
                  **scorer_kw):
@@ -162,8 +172,9 @@ class DynamicPartitioner:
             if hasattr(self.scorer, "_pdeg"):
                 np.add.at(self.scorer._pdeg, self.g.edges.ravel(), 1)
         self.skew_limit = float(skew_limit)
-        self.rf_limit = (1.15 * max(1.0, self._rf())
-                         if rf_limit is None else float(rf_limit))
+        self.rf_leash = float(rf_leash)
+        self._rf_anchor = max(1.0, self._rf())
+        self._rf_override = None if rf_limit is None else float(rf_limit)
         self.repair_gamma = float(repair_gamma)
         self.repair_theta = float(repair_theta)
         self.repair_cap = 4096 if repair_cap is None else int(repair_cap)
@@ -192,6 +203,20 @@ class DynamicPartitioner:
     @property
     def rf(self) -> float:
         return self._rf()
+
+    @property
+    def rf_limit(self) -> float:
+        """The live RF repair threshold: the pinned override when one was
+        given, else ``rf_leash ×`` the running baseline (the RF measured
+        at construction, re-anchored after every repair epoch)."""
+        if self._rf_override is not None:
+            return self._rf_override
+        return self.rf_leash * self._rf_anchor
+
+    @rf_limit.setter
+    def rf_limit(self, value: float | None) -> None:
+        """Pin the threshold absolutely (``None`` returns to adaptive)."""
+        self._rf_override = None if value is None else float(value)
 
     @property
     def num_live_edges(self) -> int:
@@ -354,6 +379,12 @@ class DynamicPartitioner:
                          [[] for _ in range(self.cluster.p)])
             moved = int(len(sel))
         self._touched[:] = False
+        # re-anchor the adaptive RF leash to the post-repair baseline:
+        # the next trigger fires on *new* drift, not on whatever floor
+        # this repair could not recover below (a leash frozen at
+        # construction either never trips on a long timeline or trips
+        # every batch once the floor rises past it)
+        self._rf_anchor = max(1.0, self._rf())
         report = RepairReport(trigger=trigger, edges_moved=moved,
                               tc_before=tc_before,
                               tc_after=self.state.tc)

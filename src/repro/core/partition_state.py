@@ -592,6 +592,42 @@ class StreamMembership:
         self.edges_per[i] += 1.0
         self.verts_per[i] += verts_delta
 
+    # -- delta exchange (the parallel-scoring epoch barrier) -----------------
+    def totals(self) -> tuple[np.ndarray, np.ndarray]:
+        """Per-machine ``(|E_i|, |V_i|)`` snapshot — the scalar half of the
+        epoch-barrier payload workers exchange in ``core/parallel.py``."""
+        return self.edges_per.copy(), self.verts_per.copy()
+
+    def apply_admissions(self, u: np.ndarray, v: np.ndarray,
+                         ms: np.ndarray) -> None:
+        """Merge admissions recorded on another replica of this state.
+
+        Routes through :meth:`admit_block`'s recount path, which derives
+        the exact per-machine ``|V_i|`` delta from the incidence counts —
+        every replica that applies the same admission sequence from equal
+        state lands on bitwise-equal state, which is the invariant the
+        parallel scoring pipeline's epoch barrier relies on.
+        """
+        self.admit_block(u, v, None, ms, verts_delta=None)
+
+    def revert_admissions(self, u: np.ndarray, v: np.ndarray,
+                          ms: np.ndarray,
+                          verts_delta: np.ndarray) -> None:
+        """Exact integer inverse of admissions previously applied here.
+
+        ``verts_delta`` must be the per-machine ``|V_i|`` delta those
+        admissions actually produced (the admission log records it);
+        incidence counts and totals subtract back to their prior values
+        exactly — all updates are integer-valued, so no float drift.
+        """
+        u = np.asarray(u, dtype=np.int64)
+        v = np.asarray(v, dtype=np.int64)
+        ms = np.asarray(ms, dtype=np.int64)
+        np.subtract.at(self.cnt, (ms, u), 1)
+        np.subtract.at(self.cnt, (ms, v), 1)
+        self.edges_per -= np.bincount(ms, minlength=self.p).astype(np.float64)
+        self.verts_per -= verts_delta
+
     @property
     def replicas(self) -> np.ndarray:
         """(V,) |S(v)| — derived, for end-of-stream RF reporting."""

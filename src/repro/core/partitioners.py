@@ -19,6 +19,12 @@ Capability tags in use:
   edge-list path or block iterator out of core; its ``dedup`` knob picks
   single-pass per-block dedup (``"block"``) or the exact two-pass
   spill-to-disk dedup (``"two_pass"``).
+* ``parallel`` — the ``stream`` entry accepts ``workers``/``sync_blocks``
+  and can run the W-process pipeline (``core/parallel.py``): sharded
+  two-pass dedup plus parallel wave scoring against membership snapshots
+  synced every ``sync_blocks`` engine blocks.  ``workers=1`` is the
+  sequential path bit for bit; results at any worker count depend only
+  on ``sync_blocks``.
 * ``oracle``   — per-edge reference loop kept for equivalence tests;
   excluded from the default benchmark surface.
 * ``driver``   — full multi-phase driver (WindGP), returns via

@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import gzip
+import os
 import pathlib
 import shutil
 import tempfile
@@ -109,6 +110,68 @@ def iter_edge_blocks(path: str, block_size: int = DEFAULT_BLOCK_LINES, *,
                 yield edges
 
 
+def byte_ranges(path: str, n: int) -> list[tuple[int, int]]:
+    """Split a plain-text file into ``n`` contiguous byte ranges.
+
+    Combined with :func:`iter_edge_blocks_range`'s line-alignment rule
+    (a reader owns exactly the lines whose *first byte* falls inside its
+    range), the ranges partition the file's lines disjointly and
+    exhaustively — the range-reader side of the sharded ingest pipeline
+    (``core/parallel.py``).  Gzip files cannot be byte-ranged (no random
+    access into the compressed stream); callers fall back to one range.
+    """
+    size = os.path.getsize(path)
+    n = max(1, int(n))
+    cuts = [size * i // n for i in range(n + 1)]
+    return [(cuts[i], cuts[i + 1]) for i in range(n)]
+
+
+def iter_edge_blocks_range(path: str, start: int, end: int,
+                           block_size: int = DEFAULT_BLOCK_LINES, *,
+                           comments: str = "#",
+                           canonicalize: bool = True) -> Iterator[np.ndarray]:
+    """``iter_edge_blocks`` restricted to the lines starting in [start, end).
+
+    Hadoop-split alignment: the reader seeks to ``start - 1``, and skips
+    one partial line only when the byte there is not a newline (that line
+    *started* in the previous range, whose reader owns it); it then reads
+    whole lines while their first byte lies before ``end`` — the final
+    owned line may extend past the boundary.  Every line is therefore
+    consumed by exactly one of the readers over :func:`byte_ranges`'s
+    cover, in file order within each range.
+    """
+    if str(path).endswith(".gz"):
+        raise ValueError("byte-range reads need a plain-text file; gzip "
+                         "streams have no line-addressable byte offsets")
+    block_size = max(1, int(block_size))
+    with open(path, "rb") as f:
+        if start > 0:
+            f.seek(start - 1)
+            if f.read(1) != b"\n":
+                f.readline()
+        pos = f.tell()
+        lines: list[str] = []
+        while pos < end:
+            ln = f.readline()
+            if not ln:
+                break
+            pos += len(ln)
+            lines.append(ln.decode())
+            if len(lines) >= block_size:
+                edges = _parse_lines(lines, comments)
+                lines = []
+                if canonicalize:
+                    edges = canonicalize_block(edges)
+                if len(edges):
+                    yield edges
+        if lines:
+            edges = _parse_lines(lines, comments)
+            if canonicalize:
+                edges = canonicalize_block(edges)
+            if len(edges):
+                yield edges
+
+
 def count_edge_list(path: str, block_size: int = DEFAULT_BLOCK_LINES, *,
                     comments: str = "#") -> tuple[int, int]:
     """(num_vertices, num_edges) of a file, in one chunked pass.
@@ -179,6 +242,10 @@ class SpillStats:
     unique_edges: int = 0         # post-dedup edge count
     max_bucket_rows: int = 0      # largest raw bucket loaded in pass 2
     peak_resident_rows: int = 0
+    #: processes that ran the spill/dedup passes (sharded ingest sums the
+    #: per-worker residency peaks into ``peak_resident_rows``, so the bound
+    #: stays an upper bound on *simultaneous* resident rows)
+    workers: int = 1
 
     @property
     def duplicate_rows(self) -> int:

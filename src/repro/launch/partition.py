@@ -13,7 +13,12 @@ a ``streamable`` method graph-free over an edge-list file — the edge set
 never materializes; ``--dedup two_pass`` adds the exact spill-to-disk
 dedup, and ``--out-dir`` persists the on-disk ``StreamAssignment``
 (per-machine shards + membership) that ``PartitionRuntime.from_stream``
-packs into the BSP runtime.
+packs into the BSP runtime.  ``--workers W`` runs the whole stream
+through the multi-process pipeline (``repro.core.parallel``): sharded
+dedup plus W-worker wave scoring against membership snapshots synced
+every ``--sync-blocks`` engine blocks.  ``--compact DIR`` is a
+standalone maintenance pass: fold accumulated tombstone debt into the
+shards of a finalized assignment directory and republish its meta.
 
 ``--pagerank`` closes the loop: it packs the partition it just built into
 the BSP runtime and runs distributed PageRank supersteps on it, through a
@@ -72,7 +77,7 @@ def main(argv=None):
                "percentiles, amortized repair cost, TC drift vs "
                "scratch) with: PYTHONPATH=src python -m "
                "benchmarks.dynamic_replay [--smoke]")
-    ap.add_argument("--graph", required=True,
+    ap.add_argument("--graph",
                     help="rmat:<scale> | graph500:<scale> | mesh:<side> | "
                          "path to an edge list (.gz ok)")
     ap.add_argument("--super", type=int, default=3)
@@ -96,6 +101,22 @@ def main(argv=None):
     ap.add_argument("--out-dir", default=None,
                     help="--stream: persist the StreamAssignment "
                          "(per-machine shards + membership) here")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="--stream: run the W-process pipeline (sharded "
+                         "two-pass dedup + parallel wave scoring); 1 = "
+                         "the sequential path bit for bit")
+    ap.add_argument("--sync-blocks", type=int, default=None,
+                    help="--workers > 1: engine blocks between membership "
+                         "sync barriers (1 = bit-identical to sequential; "
+                         "default trades a bounded staleness window for "
+                         "scoring overlap)")
+    ap.add_argument("--compact", default=None, metavar="DIR",
+                    help="standalone maintenance: fold tombstone debt "
+                         "into the shards of a finalized StreamAssignment "
+                         "directory, then exit (no partitioning run)")
+    ap.add_argument("--compact-tomb-frac", type=float, default=0.0,
+                    help="--compact: only rewrite shards whose tombstone "
+                         "fraction exceeds this (0.0 = fold everything)")
     ap.add_argument("--pagerank", action="store_true",
                     help="after partitioning, pack the BSP runtime and "
                          "run distributed PageRank on the partition")
@@ -109,6 +130,10 @@ def main(argv=None):
     ap.add_argument("--out", default=None, help=".npz output path")
     args = ap.parse_args(argv)
 
+    if args.compact:
+        return _run_compact(args)
+    if not args.graph:
+        ap.error("--graph is required (except with --compact)")
     if args.stream:
         return _run_stream(ap, args)
 
@@ -167,6 +192,24 @@ def _run_pagerank(rt, args) -> None:
     print("top-5:", {int(v): round(float(pr[v]), 6) for v in top})
 
 
+def _run_compact(args) -> int:
+    """Standalone tombstone-folding pass over a finalized assignment."""
+    from ..bsp import StreamAssignment
+    sa = StreamAssignment.open(args.compact)
+    before = int(sa.tomb_rows.sum())
+    t0 = time.perf_counter()
+    meta = sa.compact(args.compact_tomb_frac)
+    dt = time.perf_counter() - t0
+    print(json.dumps({
+        "compacted": args.compact, "seconds": round(dt, 3),
+        "tomb_rows_folded": before - int(sa.tomb_rows.sum()),
+        "tomb_rows_left": int(sa.tomb_rows.sum()),
+        "shard_rows": meta["shard_rows"],
+        "num_edges": meta["num_edges"],
+    }, indent=2))
+    return 0
+
+
 def _run_stream(ap, args) -> int:
     """Out-of-core path: graph-free streaming over an edge-list file."""
     import pathlib
@@ -185,8 +228,15 @@ def _run_stream(ap, args) -> int:
                  "packs from the persisted StreamAssignment shards")
 
     if args.dedup == "two_pass":
-        from ..data import two_pass_dedup
-        source = two_pass_dedup(args.graph)
+        if args.workers > 1:
+            # shard the spill/dedup passes across the same worker count
+            # the scoring stage will use
+            from ..core.parallel import ShardedTwoPassDedup
+            source = ShardedTwoPassDedup(args.graph, workers=args.workers)
+            source.prepare()
+        else:
+            from ..data import two_pass_dedup
+            source = two_pass_dedup(args.graph)
         num_v, num_e = source.num_vertices, source.num_edges
     else:
         # count at the same reader granularity the stream will use:
@@ -204,6 +254,9 @@ def _run_stream(ap, args) -> int:
     kw = {"dedup": args.dedup}
     if args.block_size is not None:
         kw["block_size"] = args.block_size
+    if args.workers > 1:
+        kw["workers"] = args.workers
+        kw["sync_blocks"] = args.sync_blocks
     if args.out_dir:
         from ..bsp import StreamAssignment
         sa = StreamAssignment(pathlib.Path(args.out_dir), cl.p, num_v)

@@ -140,6 +140,47 @@ class TestDriftRepair:
         assert rep.edges_moved == 0
 
 
+class TestAdaptiveLeash:
+    def test_limit_tracks_running_baseline(self, dp):
+        """Default threshold = rf_leash x the RF anchor, re-based to the
+        post-repair RF after every repair epoch — the next trigger needs
+        *new* drift, not the floor the repair could not recover below."""
+        d, arrivals, _ = dp
+        assert d.rf_limit == pytest.approx(1.15 * max(1.0, d.rf))
+        d.insert(arrivals[:300])
+        anchor_before = d._rf_anchor
+        d.repair()
+        assert d._rf_anchor == max(1.0, d.rf)
+        assert d.rf_limit == pytest.approx(d.rf_leash * d._rf_anchor)
+        assert d._rf_anchor != anchor_before or d.rf == anchor_before
+
+    def test_pinned_override_survives_repair(self, dp):
+        d, arrivals, _ = dp
+        d.rf_limit = 9.9                   # pin absolutely
+        d.insert(arrivals[:100])
+        d.repair()
+        assert d.rf_limit == 9.9           # re-anchoring does not unpin
+        d.rf_limit = None                  # back to adaptive
+        assert d.rf_limit == pytest.approx(d.rf_leash * d._rf_anchor)
+
+    def test_ctor_rf_limit_pins(self):
+        gseed, _, cl = split_timeline()
+        d = DynamicPartitioner(gseed, cl, method="hdrf", rf_limit=9.9,
+                               auto_repair=False)
+        assert d.rf_limit == 9.9
+
+    def test_zero_slack_leash_trips_on_new_drift_only(self):
+        """rf_leash=1.0: any RF growth beyond the running baseline trips
+        an ``"rf"`` repair; because the anchor re-bases, a repair that
+        cannot lower RF does not retrigger forever on the same floor."""
+        gseed, arrivals, cl = split_timeline()
+        d = DynamicPartitioner(gseed, cl, method="hdrf", rf_leash=1.0,
+                               skew_limit=1e9, repair_cap=256)
+        d.insert(arrivals[:256])
+        assert d.repairs and d.repairs[0].trigger == "rf"
+        assert d.drift() is None           # anchor >= live RF again
+
+
 class TestDelta:
     def test_delta_coalesces_within_epoch(self, dp):
         d, arrivals, _ = dp

@@ -1,0 +1,320 @@
+"""W-worker partitioning pipeline: sharded dedup + epoch-parallel scoring.
+
+Contracts under test (the ``core/parallel.py`` layer):
+
+* ``byte_ranges`` + ``iter_edge_blocks_range`` split any plain-text edge
+  list into disjoint, exhaustive, line-aligned pieces — concatenating
+  the per-range streams reproduces the whole-file stream exactly
+  (property test over random files, trailing-newline/comment variants);
+* ``ShardedTwoPassDedup`` yields the block-identical deduplicated
+  stream to the sequential ``TwoPassDedup``, at any worker count, with
+  the spill accounting aggregated (gzip falls back to a whole-file
+  pass-1 and must still agree);
+* ``stream_partition(..., workers=1)`` is bit-identical to the existing
+  single-process path — membership, totals, TC/RF, and the
+  ``StreamAssignment`` shard bytes (the acceptance criterion);
+* worker-count invariance: at ``sync_blocks=1`` every W is bit-identical
+  to sequential (all three streamable methods); at the default sync
+  period the result depends only on ``sync_blocks`` — W=2 and W=4 are
+  bit-identical to each other — and TC/RF stay within the 2% gate of
+  sequential on the LJ proxy;
+* ``StreamAssignment.compact`` folds tombstone debt below the automatic
+  ``_COMPACT_FRAC`` threshold, preserves live content and caller meta,
+  and no-ops above ``max_tomb_frac``.
+"""
+import gzip
+import pathlib
+import tempfile
+
+import numpy as np
+import pytest
+
+from _hyp import given, settings, strategies as st
+
+from repro.bsp.stream_assignment import StreamAssignment
+from repro.core import (AssignmentDelta, evaluate_membership,
+                        scaled_paper_cluster)
+from repro.core.baselines import streaming as S
+from repro.core.parallel import ShardedTwoPassDedup
+from repro.data import TwoPassDedup, iter_edge_blocks, rmat
+from repro.data.io import byte_ranges, iter_edge_blocks_range
+
+
+def _cat(blocks):
+    blocks = list(blocks)
+    return (np.concatenate(blocks) if blocks
+            else np.empty((0, 2), dtype=np.int64))
+
+
+def _random_text(seed: int, n_lines: int, trailing_nl: bool) -> str:
+    """Edge-list text with comment/blank lines and long/short numbers so
+    line lengths vary and range cuts land mid-line, mid-number, and on
+    newlines."""
+    rng = np.random.default_rng(seed)
+    lines = []
+    for _ in range(n_lines):
+        r = rng.random()
+        if r < 0.08:
+            lines.append("# c" + "x" * int(rng.integers(0, 9)))
+        elif r < 0.12:
+            lines.append("")
+        else:
+            hi = 10 if rng.random() < 0.5 else 10_000_000
+            u, v = rng.integers(0, hi, size=2)
+            lines.append(f"{u} {v}")
+    txt = "\n".join(lines)
+    if trailing_nl and txt:
+        txt += "\n"
+    return txt
+
+
+class TestByteRanges:
+    @given(st.integers(0, 2 ** 31), st.integers(0, 60), st.booleans(),
+           st.integers(1, 7))
+    @settings(max_examples=30, deadline=None)
+    def test_disjoint_exhaustive_line_cover(self, seed, n_lines,
+                                            trailing_nl, n_ranges):
+        """The property the sharded ingest rests on: the ranges tile the
+        file's bytes, and the per-range readers together consume every
+        line exactly once, in file order."""
+        with tempfile.TemporaryDirectory() as d:
+            path = pathlib.Path(d) / "edges.txt"
+            path.write_text(_random_text(seed, n_lines, trailing_nl))
+            size = path.stat().st_size
+            ranges = byte_ranges(str(path), n_ranges)
+            # byte-level: contiguous, disjoint, exhaustive
+            assert len(ranges) == n_ranges
+            assert ranges[0][0] == 0 and ranges[-1][1] == size
+            assert all(ranges[i][1] == ranges[i + 1][0]
+                       for i in range(len(ranges) - 1))
+            # line-level: concatenated range streams == whole-file stream
+            # (canonicalize off: per-block dedup is boundary-sensitive,
+            # the line-ownership property is not)
+            whole = _cat(iter_edge_blocks(path, 16, canonicalize=False))
+            pieces = _cat(b for s, e in ranges
+                          for b in iter_edge_blocks_range(
+                              str(path), s, e, 16, canonicalize=False))
+            np.testing.assert_array_equal(pieces, whole)
+
+    def test_gzip_cannot_be_ranged(self, tmp_path):
+        path = tmp_path / "edges.txt.gz"
+        with gzip.open(path, "wt") as f:
+            f.write("0 1\n2 3\n")
+        with pytest.raises(ValueError, match="gzip"):
+            next(iter_edge_blocks_range(str(path), 0, 4))
+
+
+def _dup_heavy_file(tmp_path, *, gz=False, seed=0, n_hot=40, repeats=25,
+                    n_unique=500, id_range=160):
+    """Duplicates spanning far-apart blocks (defeats per-block dedup)."""
+    rng = np.random.default_rng(seed)
+    hot = rng.integers(0, id_range // 4, size=(n_hot, 2))
+    uniq = rng.integers(0, id_range, size=(n_unique, 2))
+    chunks = []
+    step = max(1, n_unique // repeats)
+    for i in range(repeats):
+        chunks.append(hot)
+        chunks.append(uniq[i * step:(i + 1) * step])
+    rows = np.concatenate(chunks)
+    path = tmp_path / ("edges.txt.gz" if gz else "edges.txt")
+    txt = "# adversarial\n" + "\n".join(f"{u} {v}" for u, v in rows) + "\n"
+    if gz:
+        with gzip.open(path, "wt") as f:
+            f.write(txt)
+    else:
+        path.write_text(txt)
+    return path
+
+
+class TestShardedDedup:
+    @pytest.mark.parametrize("workers", [2, 3])
+    def test_block_identical_to_sequential(self, tmp_path, workers):
+        """Same blocks, in the same order, with the same block boundaries
+        — the scoring stage downstream sees a bit-identical stream."""
+        path = _dup_heavy_file(tmp_path, seed=5)
+        with TwoPassDedup(path, block_size=64, bucket_rows=128) as seq, \
+                ShardedTwoPassDedup(path, workers=workers, block_size=64,
+                                    bucket_rows=128) as par:
+            seq_blocks = [b.copy() for b in seq]
+            par_blocks = [b.copy() for b in par]
+            assert len(seq_blocks) == len(par_blocks)
+            for a, b in zip(seq_blocks, par_blocks):
+                np.testing.assert_array_equal(a, b)
+            assert par.num_edges == seq.num_edges
+            assert par.num_vertices == seq.num_vertices
+            # aggregated accounting: same dedup'd set, workers recorded
+            # (spilled_rows may differ — per-block pre-dedup is chunk-
+            # boundary-sensitive; the unique set never is)
+            assert par.stats.workers == workers
+            assert par.stats.unique_edges == seq.stats.unique_edges
+            assert par.stats.spilled_rows >= par.stats.unique_edges
+
+    def test_gzip_falls_back_to_whole_file_pass1(self, tmp_path):
+        path = _dup_heavy_file(tmp_path, gz=True, seed=6)
+        with TwoPassDedup(path, block_size=64, bucket_rows=128) as seq, \
+                ShardedTwoPassDedup(path, workers=2, block_size=64,
+                                    bucket_rows=128) as par:
+            np.testing.assert_array_equal(_cat(seq), _cat(par))
+
+    def test_workers1_is_the_sequential_path(self, tmp_path):
+        path = _dup_heavy_file(tmp_path, seed=7)
+        with ShardedTwoPassDedup(path, workers=1, block_size=64,
+                                 bucket_rows=128) as tp, \
+                TwoPassDedup(path, block_size=64, bucket_rows=128) as ref:
+            assert tp.prepare() == ref.prepare()
+            assert tp.stats.workers == 1
+
+
+def _proxy_graph(tmp_path):
+    """The quick-LJ proxy the tier-2 gate runs on, written to disk."""
+    g = rmat(13, edge_factor=7, seed=42)
+    path = tmp_path / "edges.txt"
+    np.savetxt(path, g.edges, fmt="%d")
+    cl = scaled_paper_cluster(3, 6, g.num_edges, slack=1.8)
+    return path, cl
+
+
+def _partition(path, cl, out_dir, method="hdrf", **kw):
+    """One full dedup → scoring → StreamAssignment pipeline run."""
+    workers = kw.get("workers", 1)
+    tp = (TwoPassDedup(str(path)) if workers == 1
+          else ShardedTwoPassDedup(str(path), workers=workers))
+    try:
+        tp.prepare()
+        sa = StreamAssignment(out_dir, cl.p, tp.num_vertices)
+        state = S.stream_partition(tp, cluster=cl, method=method,
+                                   dedup="two_pass", sink=sa.sink, **kw)
+    finally:
+        tp.close()
+    sa.finalize(state, {"method": method})
+    return state, sa
+
+
+def _shard_bytes(sa):
+    return [(sa.dir / f"shard{i}.edges").read_bytes()
+            for i in range(sa.p)]
+
+
+def assert_states_identical(a, b):
+    np.testing.assert_array_equal(a.cnt, b.cnt)
+    np.testing.assert_array_equal(a.edges_per, b.edges_per)
+    np.testing.assert_array_equal(a.verts_per, b.verts_per)
+
+
+class TestWorkerInvariance:
+    @pytest.fixture(scope="class")
+    def proxy(self, tmp_path_factory):
+        tmp = tmp_path_factory.mktemp("parallel_proxy")
+        path, cl = _proxy_graph(tmp)
+        seq, sa = _partition(path, cl, tmp / "seq")
+        return tmp, path, cl, seq, sa
+
+    def test_workers1_bit_identical_incl_shards(self, proxy):
+        """The acceptance criterion: ``workers=1`` is the single-process
+        path bit for bit — membership, totals, TC/RF, shard bytes."""
+        tmp, path, cl, seq, sa_seq = proxy
+        one, sa_one = _partition(path, cl, tmp / "w1", workers=1)
+        assert_states_identical(seq, one)
+        assert _shard_bytes(sa_seq) == _shard_bytes(sa_one)
+        s = evaluate_membership(seq.cnt > 0, seq.edges_per, cl)
+        q = evaluate_membership(one.cnt > 0, one.edges_per, cl)
+        assert (s.tc, s.rf) == (q.tc, q.rf)
+
+    @pytest.mark.parametrize("workers", [2, 4])
+    def test_sync1_bit_identical_to_sequential(self, proxy, workers):
+        """At ``sync_blocks=1`` every epoch is one block scored against a
+        fresh snapshot — the parallel schedule degenerates to the
+        sequential one at any W, shard bytes included."""
+        tmp, path, cl, seq, sa_seq = proxy
+        par, sa_par = _partition(path, cl, tmp / f"k1w{workers}",
+                                 workers=workers, sync_blocks=1)
+        assert_states_identical(seq, par)
+        assert _shard_bytes(sa_seq) == _shard_bytes(sa_par)
+
+    def test_default_sync_w_invariant_and_within_gate(self, proxy):
+        """At the default sync period the result is a pure function of
+        ``sync_blocks`` — W=2 and W=4 agree bit for bit — and TC/RF hold
+        the tier-2 gate (≤2% signed degradation) vs sequential."""
+        tmp, path, cl, seq, _ = proxy
+        w2, sa2 = _partition(path, cl, tmp / "w2", workers=2)
+        w4, sa4 = _partition(path, cl, tmp / "w4", workers=4)
+        assert_states_identical(w2, w4)
+        assert _shard_bytes(sa2) == _shard_bytes(sa4)
+        s = evaluate_membership(seq.cnt > 0, seq.edges_per, cl)
+        q = evaluate_membership(w2.cnt > 0, w2.edges_per, cl)
+        assert max(0.0, (q.tc - s.tc) / s.tc) <= 0.02 + 1e-9
+        assert max(0.0, (q.rf - s.rf) / s.rf) <= 0.02 + 1e-9
+
+    @pytest.mark.parametrize("method", ["hdrf", "ebv", "greedy"])
+    def test_sync1_all_methods_tiny(self, tmp_path, method):
+        """Every streamable scorer survives the ship-score-merge round
+        trip (aux shipping, admission recount, revert) bit for bit."""
+        g = rmat(9, edge_factor=6, seed=3)
+        rows = np.concatenate([g.edges, g.edges[::5]])   # inject dups
+        path = tmp_path / "edges.txt"
+        np.savetxt(path, rows, fmt="%d")
+        cl = scaled_paper_cluster(2, 4, g.num_edges, slack=2.0)
+        seq = S.stream_partition(str(path), cluster=cl, method=method,
+                                 block_size=256, dedup="two_pass")
+        par = S.stream_partition(str(path), cluster=cl, method=method,
+                                 block_size=256, dedup="two_pass",
+                                 workers=2, sync_blocks=1)
+        assert_states_identical(seq, par)
+
+    def test_registry_advertises_parallel(self):
+        from repro.core import partitioners as registry
+        assert set(registry.names(require={"parallel"})) == \
+            {"greedy", "hdrf", "ebv"}
+
+
+class TestCompact:
+    def _assignment_with_tombs(self, tmp_path):
+        """Finalize a 2-machine assignment, then delete a small slice via
+        apply_delta — few enough tombstones to stay under the automatic
+        ``_COMPACT_FRAC`` rewrite."""
+        g = rmat(8, edge_factor=6, seed=9)
+        cl = scaled_paper_cluster(1, 2, g.num_edges, slack=2.0)
+        path = tmp_path / "edges.txt"
+        np.savetxt(path, g.edges, fmt="%d")
+        state, sa = _partition(path, cl, tmp_path / "assign")
+        # drop every 10th edge of machine 0's shard (value-based tombs)
+        rows = sa.machine_edges(0)[::10]
+        degree = sa.degree.copy()
+        np.subtract.at(degree, rows.ravel(), 1)
+        member = (state.cnt > 0).copy()
+        member[:, degree == 0] = False
+        delta = AssignmentDelta(
+            num_vertices=sa.num_vertices,
+            added=np.empty((0, 2), dtype=np.int64),
+            added_ms=np.empty(0, dtype=np.int64),
+            removed=rows.astype(np.int64),
+            removed_ms=np.zeros(len(rows), dtype=np.int64))
+        sa.apply_delta(delta, member, {"method": "hdrf"})
+        return sa
+
+    def test_folds_tombstones_and_preserves_content(self, tmp_path):
+        sa = self._assignment_with_tombs(tmp_path)
+        assert sa.tomb_rows[0] > 0          # below auto threshold: kept
+        before = [sa.machine_edges(i).copy() for i in range(sa.p)]
+        extra_method = sa.meta["method"]
+        meta = sa.compact()
+        assert sa.tomb_rows.sum() == 0
+        assert not (sa.dir / "shard0.tomb").exists()
+        for i in range(sa.p):
+            np.testing.assert_array_equal(sa.machine_edges(i), before[i])
+        # provenance keys survive the republish; reopen agrees
+        assert meta["method"] == extra_method
+        sb = StreamAssignment.open(sa.dir)
+        np.testing.assert_array_equal(sb.membership(), sa.membership())
+        assert sb.meta["tomb_rows"] == [0] * sa.p
+
+    def test_noop_above_threshold(self, tmp_path):
+        sa = self._assignment_with_tombs(tmp_path)
+        meta = sa.meta
+        assert sa.compact(max_tomb_frac=1.0) is meta    # untouched
+        assert sa.tomb_rows[0] > 0
+
+    def test_requires_finalize(self, tmp_path):
+        sa = StreamAssignment(tmp_path / "a", 2, 4)
+        with pytest.raises(RuntimeError, match="finalized"):
+            sa.compact()
