@@ -27,7 +27,9 @@ def run(quick: bool = True, datasets=("TW", "LJ", "CP", "RN")):
                 assign = partitioner(m)(g, cl)
             rt = PartitionRuntime.build(g, assign, cl.p)
             sim_pr = simulate_runtime(rt, cl, num_steps=10)
-            _, act = sssp(rt, source=0, num_iters=12)
+            # fused runner: one device dispatch for the whole SSSP run,
+            # and the early exit trims the idle tail off the active sets
+            _, act = sssp(rt, source=0, num_iters=12, fused=True)
             sim_ss = simulate_runtime(rt, cl, actives=act,
                                       comm_scale="active")
             t0 = time.perf_counter()

@@ -87,6 +87,29 @@ The same flag exists on ``repro.launch.partition`` (with ``--stream``)
 and the backend registry is shared by all four BSP apps — SSSP/BFS/
 components run the same kernels under (min, +)/(or, and) semirings.
 
+Three more knobs tune how the supersteps *run*, independent of which
+backend combines the edges:
+
+* ``--fused`` — run the whole PageRank iteration as ONE on-device
+  dispatch (``repro.bsp.engine.run_bsp_fused``: ``lax.scan`` over
+  chunks of supersteps, host sync only at the end) instead of one
+  jitted dispatch + device→host sync per superstep.  On small/medium
+  shards the per-step runner is dispatch-bound, so this is the main
+  superstep-latency lever — same results, bitwise at the default
+  message dtype.
+* ``--tol T`` — convergence gate for the fused runner (implies
+  ``--fused``): stop as soon as the on-device residual
+  ``max|pr_{t+1} − pr_t| <= T`` instead of always running
+  ``--pagerank-iters`` supersteps.  The monotone apps (SSSP/BFS/CC)
+  need no tolerance — their fused runs already early-exit when the
+  active count hits zero.
+* ``--message-dtype bfloat16`` — the low-precision message path:
+  per-edge ⊗ operands are cast to bfloat16 while scatter/segment
+  ⊕-accumulation stays float32.  Halves message bandwidth at ~1e-3
+  relative PageRank error; ``benchmarks/bsp_apps.py --bf16-study``
+  prints the error-vs-iteration table to judge the trade.  The default
+  ``float32`` is bit-identical to not having the knob.
+
 Dynamic workflow
 ----------------
 The partition this script writes is a *seed*, not a terminal product:
@@ -130,7 +153,8 @@ from repro.bsp import (PartitionRuntime, StreamAssignment,
 from repro.core import evaluate, evaluate_membership, scaled_paper_cluster
 from repro.core import partitioners as registry
 from repro.data import TwoPassDedup, count_edge_list, read_edge_list
-from repro.launch.partition import EDGE_BACKENDS, _run_pagerank
+from repro.launch.partition import (EDGE_BACKENDS, MESSAGE_DTYPES,
+                                    _run_pagerank)
 
 
 def _partition_streaming(args, part, out: pathlib.Path):
@@ -254,6 +278,16 @@ def main(argv=None):
                     choices=EDGE_BACKENDS,
                     help="edge-kernel backend for --pagerank (see "
                          "module docstring)")
+    ap.add_argument("--fused", action="store_true",
+                    help="--pagerank: whole iteration as one on-device "
+                         "dispatch (see module docstring)")
+    ap.add_argument("--tol", type=float, default=None,
+                    help="--pagerank: on-device convergence tolerance "
+                         "(implies --fused)")
+    ap.add_argument("--message-dtype", default="float32",
+                    choices=MESSAGE_DTYPES,
+                    help="--pagerank: edge-message precision (bfloat16 "
+                         "= low-precision message path)")
     ap.add_argument("--out-dir", default="parts")
     args = ap.parse_args(argv)
 

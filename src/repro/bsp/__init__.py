@@ -7,7 +7,9 @@ vertex table — TPU-native, and its size shrinks with partition quality.
 """
 from .partition_runtime import PartitionRuntime, LocalBSR
 from .stream_assignment import StreamAssignment, write_json_atomic
-from .backends import BACKENDS, EdgeBackend, get_backend
+from .backends import (BACKENDS, MESSAGE_DTYPES, EdgeBackend, get_backend,
+                       frontier_entries)
+from .engine import make_fused_runner, run_bsp, run_bsp_fused
 from .apps import (pagerank, sssp, bfs, triangle_count,
                    connected_components, build_app, AppSpec, APP_BUILDERS)
 from . import ref
@@ -15,7 +17,9 @@ from .simulate import simulate_superstep_times, simulate_runtime
 
 __all__ = ["PartitionRuntime", "LocalBSR", "StreamAssignment",
            "write_json_atomic",
-           "BACKENDS", "EdgeBackend", "get_backend",
+           "BACKENDS", "MESSAGE_DTYPES", "EdgeBackend", "get_backend",
+           "frontier_entries", "make_fused_runner", "run_bsp",
+           "run_bsp_fused",
            "pagerank", "sssp", "bfs", "triangle_count",
            "connected_components", "build_app", "AppSpec", "APP_BUILDERS",
            "ref", "simulate_superstep_times", "simulate_runtime"]

@@ -15,6 +15,30 @@ the float-exact oracle; ``"segment"`` is the sorted-CSR CPU fast path;
 ``rt.local_bsr()``.  Results agree across backends — bitwise for the
 min/max semirings, to ~1e-7 for (+, ×) — and under both vmap and a real
 ``shard_map`` mesh (tests pin both).
+
+The replica exchange is fused into the backend combine's epilogue
+(``EdgeBackend.prepare_exchanged``): each superstep body makes a single
+``combine`` call that already returns post-exchange values instead of
+materializing a separate pre-exchange ``(Vmax,)`` partial.  For the
+(min, +) apps this rewrites ``exchange(min(dist, cand))`` as
+``min(dist, exchange(cand))`` — bitwise equal, because replicas of a
+vertex always agree on ``dist`` (it is itself a post-exchange value)
+and min is exact.
+
+The monotone apps (SSSP/CC) carry a **changed-vertex mask** in their
+state: only vertices whose value improved last superstep send messages;
+everyone else feeds the semiring's no-message value (+inf under
+(min, +)), whose ⊕ contribution is the identity.  This is exact — a
+vertex's value was already folded into its neighbors the superstep
+after it last changed, and (min, +) states only improve — and it is the
+mask the ``scatter`` backend's ``frontier_cap`` compaction keys on to
+make supersteps O(frontier) instead of O(E_local).  BFS's frontier
+(``dist == step``) already is that mask.
+
+Every app wrapper runs on either engine runner: the per-step oracle
+(``run_bsp``, default) or the fused on-device loop (``fused=True`` /
+``tol=`` → ``run_bsp_fused``), and backend opts such as
+``message_dtype="bfloat16"`` flow through ``**backend_opts``.
 """
 from __future__ import annotations
 
@@ -26,7 +50,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .backends import get_backend
-from .engine import exchange, run_bsp
+from .engine import run_bsp, run_bsp_fused
 from .partition_runtime import PartitionRuntime
 
 
@@ -60,10 +84,30 @@ class AppSpec:
     finalize: Callable        # (rt, out_state) -> global result array
 
 
-def _resolve(rt, backend, semiring: str, weights: str, **opts):
+def _resolve(rt, backend, semiring: str, weights: str, exchange_mode: str,
+             **opts):
+    """Backend + static tree + exchange-fused combine for one app.
+
+    The returned ``combine(sa, x)`` yields *post-exchange* neighborhood
+    values (``EdgeBackend.prepare_exchanged``) — the superstep bodies
+    below never call :func:`~.engine.exchange` themselves.
+    """
+    r_pad = max(1, rt.num_replicas)
     eb = get_backend(backend, **opts)
-    extras, combine = eb.prepare(rt, semiring, weights)
+    extras, combine = eb.prepare_exchanged(rt, semiring, weights,
+                                           exchange_mode, r_pad)
     return eb, {**_static_tree(rt), **extras}, combine
+
+
+def _run(spec: "AppSpec", num_steps: int, *, mesh=None, fused=False,
+         tol=None, chunk=8):
+    """Dispatch an :class:`AppSpec` to the stepwise or fused runner."""
+    if fused or tol is not None:
+        return run_bsp_fused(spec.superstep, spec.state, spec.static,
+                             num_steps, mesh=mesh, check_rep=spec.check_rep,
+                             chunk=chunk, tol=tol)
+    return run_bsp(spec.superstep, spec.state, spec.static, num_steps,
+                   mesh=mesh, check_rep=spec.check_rep)
 
 
 # ---------------------------------------------------------------------------
@@ -81,10 +125,9 @@ def build_pagerank(rt: PartitionRuntime, damping: float = 0.85, *,
     to the uniform mass.  CC/SSSP get no such hook: their states are
     monotone under the semiring, so stale labels are invalid the moment a
     deletion can lengthen a path."""
-    r_pad = max(1, rt.num_replicas)
     n = rt.num_vertices
     eb, static, combine = _resolve(rt, backend, "plus_times", "weight",
-                                   **backend_opts)
+                                   "sum", **backend_opts)
 
     def superstep(state, sa):
         pr = state["pr"]
@@ -93,8 +136,7 @@ def build_pagerank(rt: PartitionRuntime, damping: float = 0.85, *,
         # classic uniform split)
         msg = jnp.where(sa["vertex_valid"],
                         pr / sa["weighted_degree"], 0.0)
-        partial = combine(sa, msg)
-        total = exchange(partial, sa["rep_slot"], r_pad, "sum")
+        total = combine(sa, msg)              # post-exchange ("sum")
         new_pr = jnp.where(sa["vertex_valid"],
                            (1.0 - damping) / n + damping * total, 0.0)
         active = sa["vertex_valid"].sum()
@@ -119,15 +161,18 @@ def build_pagerank(rt: PartitionRuntime, damping: float = 0.85, *,
 
 def pagerank(rt: PartitionRuntime, num_iters: int = 20,
              damping: float = 0.85, *, mesh=None, backend="scatter",
-             init: np.ndarray | None = None, **backend_opts):
+             init: np.ndarray | None = None, fused=False, tol=None,
+             chunk=8, **backend_opts):
     """Returns (V,) global PageRank after ``num_iters`` supersteps.
 
     ``init`` warm-starts from a previous (V,) result (see
-    :func:`build_pagerank`)."""
+    :func:`build_pagerank`).  ``fused=True`` runs the whole iteration as
+    one on-device dispatch (``run_bsp_fused``); ``tol`` additionally
+    stops early once ``‖pr_{t+1} − pr_t‖∞ ≤ tol`` (and implies fused)."""
     spec = build_pagerank(rt, damping, backend=backend, init=init,
                           **backend_opts)
-    out, actives = run_bsp(spec.superstep, spec.state, spec.static,
-                           num_iters, mesh=mesh, check_rep=spec.check_rep)
+    out, actives = _run(spec, num_iters, mesh=mesh, fused=fused, tol=tol,
+                        chunk=chunk)
     return spec.finalize(rt, out), actives
 
 
@@ -138,36 +183,41 @@ def pagerank(rt: PartitionRuntime, num_iters: int = 20,
 def build_relax(rt: PartitionRuntime, source: int, weighted: bool, *,
                 backend="scatter", name: str = "sssp",
                 **backend_opts) -> AppSpec:
-    r_pad = max(1, rt.num_replicas)
     inf = jnp.float32(jnp.inf)
     eb, static, combine = _resolve(rt, backend, "min_plus",
                                    "weight" if weighted else "unit",
-                                   **backend_opts)
+                                   "min", **backend_opts)
 
     def superstep(state, sa):
-        dist = state["dist"]
-        cand = combine(sa, dist)
-        new_local = jnp.minimum(dist, cand)
-        new_dist = exchange(new_local, sa["rep_slot"], r_pad, "min")
+        dist, changed = state["dist"], state["changed"]
+        # only vertices that improved last superstep send; +inf is the
+        # (min, +) no-message value, so the masked entries fold to the
+        # ⊕ identity — exact, because an unchanged vertex's distance was
+        # already folded into its neighbors when it last changed
+        msg = jnp.where(changed, dist, inf)
+        cand = combine(sa, msg)               # post-exchange ("min")
+        new_dist = jnp.minimum(dist, cand)
         new_dist = jnp.where(sa["vertex_valid"], new_dist, inf)
-        active = (new_dist < dist).sum()      # vertices updated this step
-        return {"dist": new_dist}, active
+        new_changed = new_dist < dist         # vertices updated this step
+        return {"dist": new_dist, "changed": new_changed}, new_changed.sum()
 
     dist0 = np.full((rt.p, rt.vmax), np.inf, dtype=np.float32)
     holders = np.nonzero(rt.local_vertex_gid == source)
     dist0[holders] = 0.0
+    state = {"dist": jnp.asarray(dist0),
+             "changed": jnp.asarray(np.isfinite(dist0))}
     fin = lambda rt, out: rt.gather_global(np.asarray(out["dist"]),
                                            fill=np.inf)
-    return AppSpec(name, superstep, {"dist": jnp.asarray(dist0)}, static,
-                   eb.check_rep, fin)
+    return AppSpec(name, superstep, state, static, eb.check_rep, fin)
 
 
 def sssp(rt: PartitionRuntime, source: int = 0, num_iters: int = 30,
-         *, mesh=None, backend="scatter", **backend_opts):
+         *, mesh=None, backend="scatter", fused=False, tol=None, chunk=8,
+         **backend_opts):
     spec = build_relax(rt, source, weighted=True, backend=backend,
                        **backend_opts)
-    out, actives = run_bsp(spec.superstep, spec.state, spec.static,
-                           num_iters, mesh=mesh, check_rep=spec.check_rep)
+    out, actives = _run(spec, num_iters, mesh=mesh, fused=fused, tol=tol,
+                        chunk=chunk)
     return spec.finalize(rt, out), actives
 
 
@@ -182,16 +232,14 @@ def build_bfs(rt: PartitionRuntime, source: int, *, backend="scatter",
     equal the (min, +) relaxation with unit weights — the semiring view
     of the same traversal — which the backend-equivalence tests exploit.
     """
-    r_pad = max(1, rt.num_replicas)
-    eb, static, combine = _resolve(rt, backend, "or_and", "unit",
+    eb, static, combine = _resolve(rt, backend, "or_and", "unit", "max",
                                    **backend_opts)
 
     def superstep(state, sa):
         dist, step = state["dist"], state["step"]
         frontier = jnp.where(sa["vertex_valid"] & (dist == step),
                              1.0, 0.0).astype(jnp.float32)
-        reached = combine(sa, frontier)
-        reached = exchange(reached, sa["rep_slot"], r_pad, "max")
+        reached = combine(sa, frontier)       # post-exchange ("max")
         newly = sa["vertex_valid"] & (reached > 0) & jnp.isinf(dist)
         new_dist = jnp.where(newly, step + 1.0, dist)
         return {"dist": new_dist, "step": step + 1.0}, newly.sum()
@@ -207,10 +255,11 @@ def build_bfs(rt: PartitionRuntime, source: int, *, backend="scatter",
 
 
 def bfs(rt: PartitionRuntime, source: int = 0, num_iters: int = 30,
-        *, mesh=None, backend="scatter", **backend_opts):
+        *, mesh=None, backend="scatter", fused=False, tol=None, chunk=8,
+        **backend_opts):
     spec = build_bfs(rt, source, backend=backend, **backend_opts)
-    out, actives = run_bsp(spec.superstep, spec.state, spec.static,
-                           num_iters, mesh=mesh, check_rep=spec.check_rep)
+    out, actives = _run(spec, num_iters, mesh=mesh, fused=fused, tol=tol,
+                        chunk=chunk)
     return spec.finalize(rt, out), actives
 
 
@@ -220,35 +269,36 @@ def bfs(rt: PartitionRuntime, source: int = 0, num_iters: int = 30,
 
 def build_components(rt: PartitionRuntime, *, backend="scatter",
                      **backend_opts) -> AppSpec:
-    r_pad = max(1, rt.num_replicas)
     inf = jnp.float32(jnp.inf)
-    eb, static, combine = _resolve(rt, backend, "min_plus", "zero",
+    eb, static, combine = _resolve(rt, backend, "min_plus", "zero", "min",
                                    **backend_opts)
 
     def superstep(state, sa):
-        lab = state["lab"]
-        cand = combine(sa, lab)               # min over neighbor labels
+        lab, changed = state["lab"], state["changed"]
+        msg = jnp.where(changed, lab, inf)    # changed-mask, as in SSSP
+        cand = combine(sa, msg)               # post-exchange min label
         new = jnp.minimum(lab, cand)
-        new = exchange(new, sa["rep_slot"], r_pad, "min")
         new = jnp.where(sa["vertex_valid"], new, inf)
-        active = (new < lab).sum()
-        return {"lab": new}, active
+        new_changed = new < lab
+        return {"lab": new, "changed": new_changed}, new_changed.sum()
 
     lab0 = jnp.where(jnp.asarray(rt.vertex_valid),
                      jnp.asarray(rt.local_vertex_gid, dtype=jnp.float32),
                      jnp.inf)
+    # every valid vertex broadcasts its own label once, on superstep 1
+    state = {"lab": lab0, "changed": jnp.asarray(rt.vertex_valid)}
     fin = lambda rt, out: rt.gather_global(np.asarray(out["lab"]),
                                            fill=np.inf)
-    return AppSpec("cc", superstep, {"lab": lab0}, static,
-                   eb.check_rep, fin)
+    return AppSpec("cc", superstep, state, static, eb.check_rep, fin)
 
 
 def connected_components(rt: PartitionRuntime, num_iters: int = 30,
-                         *, mesh=None, backend="scatter", **backend_opts):
+                         *, mesh=None, backend="scatter", fused=False,
+                         tol=None, chunk=8, **backend_opts):
     """Min-label propagation; returns (V,) component id per vertex."""
     spec = build_components(rt, backend=backend, **backend_opts)
-    out, actives = run_bsp(spec.superstep, spec.state, spec.static,
-                           num_iters, mesh=mesh, check_rep=spec.check_rep)
+    out, actives = _run(spec, num_iters, mesh=mesh, fused=fused, tol=tol,
+                        chunk=chunk)
     return spec.finalize(rt, out), actives
 
 

@@ -40,6 +40,37 @@ the additions, so results drift O(eps·Σ|msg|) ≈ 1e-7 from ``scatter`` per
 superstep — within the 1e-5 cross-backend contract the tests pin.
 (min, +) and (or, and) are exact (min/max are associative), so sparse
 apps agree bitwise across all three backends.
+
+Two cross-cutting knobs every backend understands:
+
+``message_dtype`` (default ``"float32"``)
+    The ⊗ operand precision: messages and edge weights are cast to this
+    dtype before the per-edge product.  ``scatter``/``segment`` cast the
+    *products* back to float32 before ⊕-accumulating (low-precision
+    messages, full-precision accumulation — the classic bf16 message
+    path); ``pallas`` stores its blocks in the dtype
+    (``rt.local_bsr(dtype=...)``) and accumulates in it too.  With
+    ``"float32"`` every cast is a no-op, so the default path is
+    bit-identical to the pre-knob backends.
+
+``frontier_cap`` (``scatter`` only, default ``None``)
+    Active-frontier sparsification, two-level: the combine first
+    compacts the *vertices carrying a live message* (``x`` differs from
+    the semiring's no-message value — +inf for (min, +), 0 for
+    (or, and)/(+, ×)) into a ``(frontier_cap,)`` id buffer via
+    ``jnp.nonzero(..., size=cap)`` — an O(Vmax) scan, not O(E) — then
+    gathers those vertices' rows of a per-vertex ELL incidence
+    ``(Vmax, dmax)`` built at prepare time and ⊕-scatters the
+    ``cap × dmax`` expanded entries.  Superstep edge work drops from
+    O(E_local) to O(frontier · dmax + Vmax).  The layout spends
+    O(Vmax · dmax) memory, so this path fits bounded-degree graphs
+    (road networks, meshes — exactly where BFS/SSSP frontiers stay
+    narrow); on power-law graphs the hub degree makes ``dmax`` —
+    and the padding — explode.  The caller must pick ``frontier_cap ≥``
+    the per-machine live-vertex count (vertices beyond the cap are
+    dropped) — :func:`frontier_entries` computes the exact count
+    host-side, and the ``--latency`` benchmark re-buckets the cap per
+    superstep as the BFS/SSSP frontier drains.
 """
 from __future__ import annotations
 
@@ -52,9 +83,26 @@ import numpy as np
 
 from ..kernels.bsr_spmv import get_semiring
 from ..kernels.bsr_spmv.kernel import spmv_pallas
+from .engine import exchange
 
 #: weight kinds an app may ask for: the stored ⊗ operand per edge
 WEIGHT_KINDS = ("weight", "unit", "zero")
+
+#: message dtypes the low-precision path accepts
+MESSAGE_DTYPES = ("float32", "bfloat16", "float16")
+
+
+def _message_dtype(name: str):
+    if str(name) not in MESSAGE_DTYPES:
+        raise ValueError(f"message_dtype must be one of {MESSAGE_DTYPES}, "
+                         f"got {name!r}")
+    return jnp.dtype(str(name))
+
+
+def _no_message(sr) -> float:
+    """The x value meaning "this vertex sends nothing": its ⊗ product is
+    the ⊕ identity for every edge weight ((min,+): +inf; else 0)."""
+    return np.inf if sr.name == "min_plus" else 0.0
 
 
 def _edge_operand(rt, weights: str) -> np.ndarray:
@@ -80,38 +128,140 @@ class EdgeBackend:
     #: (Pallas) — the engine then passes ``check_vma=False``
     check_rep: bool = True
 
+    def prepare_exchanged(self, rt, semiring: str, weights: str,
+                          mode: str, r_pad: int):
+        """``prepare`` with the replica :func:`~.engine.exchange` fused
+        into the combine epilogue.
+
+        The returned ``combine(sa, x)`` yields the *post-exchange*
+        neighborhood values directly — the superstep never materializes
+        the pre-exchange ``(Vmax,)`` partial as a separate value, and
+        every app's cross-machine sync lives in one place instead of
+        being re-spelled per superstep body.
+        """
+        extras, combine = self.prepare(rt, semiring, weights)
+
+        def combine_exchanged(sa, x):
+            return exchange(combine(sa, x), sa["rep_slot"], r_pad, mode)
+
+        return extras, combine_exchanged
+
+
+def frontier_entries(rt, changed: np.ndarray) -> np.ndarray:
+    """(p,) live (message-carrying) vertices per machine for a changed
+    mask — the exact lower bound for the ``scatter`` backend's
+    ``frontier_cap``.
+
+    ``changed``: (p, Vmax) bool, True where the vertex carries a message
+    this superstep (the ``"changed"`` state leaf of the monotone apps;
+    ``dist == step`` for BFS).
+    """
+    changed = np.asarray(changed, dtype=bool)
+    return (changed & rt.vertex_valid).sum(axis=1).astype(np.int64)
+
 
 # ---------------------------------------------------------------------------
 # scatter: the oracle (gather + at[].⊕ per direction)
 # ---------------------------------------------------------------------------
 
-def _scatter_prepare(rt, semiring: str, weights: str):
-    sr = get_semiring(semiring)
-    wkind = weights
+def _scatter_prepare_factory(message_dtype: str = "float32",
+                             frontier_cap: int | None = None):
+    def prepare(rt, semiring: str, weights: str):
+        sr = get_semiring(semiring)
+        mdt = _message_dtype(message_dtype)
+        wkind = weights
 
-    def combine(sa, x):
-        src, dst = sa["edges"][:, 0], sa["edges"][:, 1]
-        if wkind == "weight":
-            w_raw = sa["edge_weight"]
-        elif wkind == "unit":
-            w_raw = jnp.ones_like(sa["edge_weight"])
-        else:
-            w_raw = jnp.zeros_like(sa["edge_weight"])
-        w = sr.weights(w_raw, sa["edge_valid"])
-        out = jnp.full(x.shape, sr.zero, dtype=x.dtype)
-        out = sr.scatter_accum(out, dst, sr.times(w, x[src]))
-        out = sr.scatter_accum(out, src, sr.times(w, x[dst]))
-        return out
+        if frontier_cap is None:
+            def combine(sa, x):
+                src, dst = sa["edges"][:, 0], sa["edges"][:, 1]
+                if wkind == "weight":
+                    w_raw = sa["edge_weight"]
+                elif wkind == "unit":
+                    w_raw = jnp.ones_like(sa["edge_weight"])
+                else:
+                    w_raw = jnp.zeros_like(sa["edge_weight"])
+                w = sr.weights(w_raw, sa["edge_valid"])
+                xm = x.astype(mdt)
+                out = jnp.full(x.shape, sr.zero, dtype=x.dtype)
+                out = sr.scatter_accum(
+                    out, dst,
+                    sr.times(w.astype(mdt), xm[src]).astype(x.dtype))
+                out = sr.scatter_accum(
+                    out, src,
+                    sr.times(w.astype(mdt), xm[dst]).astype(x.dtype))
+                return out
 
-    return {}, combine
+            return {}, combine
+
+        # frontier mode: per-vertex ELL of the directed incidence —
+        # row v holds v's outgoing (dst, w) entries, padded to the
+        # machine-max degree with the dump row / the ⊗ annihilator.
+        # The combine compacts the live *vertices* (an O(Vmax) scan)
+        # and expands only their rows: O(frontier · dmax) edge work.
+        cap = int(frontier_cap)
+        if cap < 1:
+            raise ValueError(f"frontier_cap must be >= 1, got {cap}")
+        w_raw = _edge_operand(rt, weights)
+        p, vmax = rt.p, rt.vmax
+        src2 = np.concatenate([rt.local_edges[:, :, 0],
+                               rt.local_edges[:, :, 1]], axis=1)
+        dst2 = np.concatenate([rt.local_edges[:, :, 1],
+                               rt.local_edges[:, :, 0]], axis=1)
+        valid2 = np.concatenate([rt.edge_valid, rt.edge_valid], axis=1)
+        w2 = np.concatenate([w_raw, w_raw], axis=1).astype(np.float32)
+        deg = np.zeros((p, vmax), dtype=np.int64)
+        for i in range(p):
+            np.add.at(deg[i], src2[i][valid2[i]], 1)
+        dmax = max(1, int(deg.max()))
+        ell_dst = np.full((p, vmax, dmax), vmax, dtype=np.int32)
+        ell_w = np.full((p, vmax, dmax), np.float32(sr.absent),
+                        dtype=np.float32)
+        for i in range(p):
+            s = src2[i][valid2[i]]
+            order = np.argsort(s, kind="stable")
+            s = s[order]
+            slot = np.arange(len(s)) - np.searchsorted(s, s)
+            ell_dst[i][s, slot] = dst2[i][valid2[i]][order]
+            ell_w[i][s, slot] = w2[i][valid2[i]][order]
+        extras = {"eb_fr_dst": jnp.asarray(ell_dst),
+                  "eb_fr_w": jnp.asarray(ell_w)}
+        none = _no_message(sr)
+
+        def combine(sa, x):
+            live = sa["vertex_valid"] & (x != none)
+            ids = jnp.nonzero(live, size=cap, fill_value=0)[0]
+            ok = jnp.arange(cap) < live.sum()        # (cap,) real rows
+            rows_d = sa["eb_fr_dst"][ids]            # (cap, dmax)
+            rows_w = sa["eb_fr_w"][ids].astype(mdt)
+            vals = sr.times(rows_w,
+                            x.astype(mdt)[ids][:, None]).astype(x.dtype)
+            vals = jnp.where(ok[:, None], vals,
+                             jnp.asarray(sr.zero, x.dtype))
+            d = jnp.where(ok[:, None], rows_d, vmax)  # pad -> dump row
+            out = jnp.full((vmax + 1,), sr.zero, dtype=x.dtype)
+            return sr.scatter_accum(out, d.reshape(-1),
+                                    vals.reshape(-1))[:vmax]
+
+        return extras, combine
+
+    return prepare
 
 
 # ---------------------------------------------------------------------------
 # segment: sorted-CSR reduction (cumsum-diff for ⊕ = +)
 # ---------------------------------------------------------------------------
 
-def _segment_prepare(rt, semiring: str, weights: str):
+def _segment_prepare_factory(message_dtype: str = "float32"):
+    def prepare(rt, semiring, weights):
+        return _segment_prepare(rt, semiring, weights,
+                                message_dtype=message_dtype)
+    return prepare
+
+
+def _segment_prepare(rt, semiring: str, weights: str,
+                     message_dtype: str = "float32"):
     sr = get_semiring(semiring)
+    mdt = _message_dtype(message_dtype)
     p, vmax, emax = rt.p, rt.vmax, rt.emax
     w_raw = _edge_operand(rt, weights)
 
@@ -141,7 +291,10 @@ def _segment_prepare(rt, semiring: str, weights: str):
               "eb_seg_ptr": jnp.asarray(ptr)}
 
     def combine(sa, x):
-        vals = sr.times(sa["eb_seg_w"], x[sa["eb_seg_in"]])
+        # low-precision messages, full-precision ⊕: ⊗ in message_dtype,
+        # products back to the state dtype before the reduction
+        vals = sr.times(sa["eb_seg_w"].astype(mdt),
+                        x.astype(mdt)[sa["eb_seg_in"]]).astype(x.dtype)
         if sr.name == "plus_times":
             s = jnp.concatenate([jnp.zeros(1, vals.dtype), jnp.cumsum(vals)])
             ptr_ = sa["eb_seg_ptr"]
@@ -164,11 +317,13 @@ def _segment_prepare(rt, semiring: str, weights: str):
 # ---------------------------------------------------------------------------
 
 def _pallas_prepare_factory(block_size: int = 128,
-                            interpret: bool | None = None):
+                            interpret: bool | None = None,
+                            message_dtype: str = "float32"):
     def prepare(rt, semiring: str, weights: str):
         sr = get_semiring(semiring)
+        mdt = _message_dtype(message_dtype)
         bsr = rt.local_bsr(block_size=block_size, semiring=sr.name,
-                           weights=weights)
+                           weights=weights, dtype=str(message_dtype))
         ip = (jax.default_backend() != "tpu") if interpret is None \
             else interpret
         extras = {"eb_bsr_cols": jnp.asarray(bsr.cols),
@@ -177,7 +332,10 @@ def _pallas_prepare_factory(block_size: int = 128,
                   "eb_bsr_rank": jnp.asarray(bsr.rank)}
 
         def combine(sa, x):
-            xb = x[sa["eb_bsr_gather"]].astype(jnp.float32)
+            # blocks are stored in message_dtype (LocalBSR dtype cache
+            # key); x joins them, so the kernel computes — and, unlike
+            # scatter/segment, ⊕-accumulates — in that dtype
+            xb = x[sa["eb_bsr_gather"]].astype(mdt)
             y = spmv_pallas(sa["eb_bsr_cols"], sa["eb_bsr_blocks"], xb,
                             block_size=block_size, interpret=ip,
                             semiring=sr.name)
@@ -189,16 +347,18 @@ def _pallas_prepare_factory(block_size: int = 128,
 
 
 _REGISTRY = {
-    "scatter": lambda **kw: EdgeBackend(
-        "scatter", "gather-scatter oracle (at[].⊕ per direction)",
-        _scatter_prepare, **kw),
-    "segment": lambda **kw: EdgeBackend(
+    "scatter": lambda message_dtype="float32", frontier_cap=None, **kw:
+        EdgeBackend(
+            "scatter", "gather-scatter oracle (at[].⊕ per direction)",
+            _scatter_prepare_factory(message_dtype, frontier_cap), **kw),
+    "segment": lambda message_dtype="float32", **kw: EdgeBackend(
         "segment", "sorted-CSR reduction (cumsum-diff; CPU fast path)",
-        _segment_prepare, **kw),
-    "pallas": lambda block_size=128, interpret=None, **kw: EdgeBackend(
-        "pallas", "blocked Block-ELL semiring SpMV (kernels/bsr_spmv)",
-        _pallas_prepare_factory(block_size, interpret),
-        check_rep=False, **kw),
+        _segment_prepare_factory(message_dtype), **kw),
+    "pallas": lambda block_size=128, interpret=None,
+        message_dtype="float32", **kw: EdgeBackend(
+            "pallas", "blocked Block-ELL semiring SpMV (kernels/bsr_spmv)",
+            _pallas_prepare_factory(block_size, interpret, message_dtype),
+            check_rep=False, **kw),
 }
 
 BACKENDS = tuple(_REGISTRY)
@@ -207,9 +367,12 @@ BACKENDS = tuple(_REGISTRY)
 def get_backend(name, **opts) -> EdgeBackend:
     """Resolve a backend by name (``EdgeBackend`` passes through).
 
-    ``opts`` are backend-specific: ``pallas`` takes ``block_size``
-    (default 128, the MXU tile) and ``interpret`` (None = auto:
-    interpreter off-TPU).
+    ``opts`` are backend-specific: every backend takes ``message_dtype``
+    (default ``"float32"``; ``"bfloat16"`` is the low-precision message
+    path); ``scatter`` adds ``frontier_cap`` (active-frontier
+    sparsification — see module docstring); ``pallas`` adds
+    ``block_size`` (default 128, the MXU tile) and ``interpret``
+    (None = auto: interpreter off-TPU).
     """
     if isinstance(name, EdgeBackend):
         return name

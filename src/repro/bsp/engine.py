@@ -15,9 +15,22 @@ term charges for.
 
 Superstep contract: ``superstep(state, static) -> (state, active_count)``
 with per-machine (rank-reduced) arrays, using ``exchange`` for sync.
+
+Two runners iterate that contract:
+
+* :func:`run_bsp` — one jitted dispatch *per superstep* with a host sync
+  in between (``np.asarray`` on the active counts).  Bit-exact oracle.
+* :func:`run_bsp_fused` — the whole iteration fused on device:
+  ``lax.scan`` over chunks of supersteps, each chunk an inner
+  ``lax.while_loop`` gated on convergence (global active count == 0, or
+  an on-device residual ``‖x_{t+1}−x_t‖∞ ≤ tol``), actives accumulated
+  on device.  One dispatch and one host sync for the entire run — on
+  dispatch-bound shards (small per-machine edge sets) this is where the
+  superstep wall clock actually goes.
 """
 from __future__ import annotations
 
+import functools
 from typing import Callable
 
 import jax
@@ -28,6 +41,20 @@ from jax.sharding import Mesh, PartitionSpec as P
 from ..compat import shard_map
 
 MACHINES = "machines"
+
+
+def _extreme(dtype, sign: int):
+    """Dtype-safe stand-in for ±∞: the most extreme representable value.
+
+    Floats keep the true infinities; integer dtypes get ``iinfo`` max/min
+    (``jnp.full(..., jnp.inf, dtype=int32)`` silently wraps — the replica
+    exchange must stay correct for integer-valued states).
+    """
+    dt = jnp.dtype(dtype)
+    if jnp.issubdtype(dt, jnp.integer):
+        info = jnp.iinfo(dt)
+        return dt.type(info.max if sign > 0 else info.min)
+    return dt.type(jnp.inf if sign > 0 else -jnp.inf)
 
 
 def exchange(partial: jnp.ndarray, rep_slot: jnp.ndarray, r_pad: int,
@@ -44,12 +71,14 @@ def exchange(partial: jnp.ndarray, rep_slot: jnp.ndarray, r_pad: int,
         buf = buf.at[slot].add(jnp.where(rep_slot >= 0, partial, 0))
         tot = jax.lax.psum(buf, MACHINES)
     elif mode == "min":
-        buf = jnp.full(r_pad + 1, jnp.inf, dtype=partial.dtype)
-        buf = buf.at[slot].min(jnp.where(rep_slot >= 0, partial, jnp.inf))
+        hi = _extreme(partial.dtype, +1)
+        buf = jnp.full(r_pad + 1, hi, dtype=partial.dtype)
+        buf = buf.at[slot].min(jnp.where(rep_slot >= 0, partial, hi))
         tot = jax.lax.pmin(buf, MACHINES)
     elif mode == "max":
-        buf = jnp.full(r_pad + 1, -jnp.inf, dtype=partial.dtype)
-        buf = buf.at[slot].max(jnp.where(rep_slot >= 0, partial, -jnp.inf))
+        lo = _extreme(partial.dtype, -1)
+        buf = jnp.full(r_pad + 1, lo, dtype=partial.dtype)
+        buf = buf.at[slot].max(jnp.where(rep_slot >= 0, partial, lo))
         tot = jax.lax.pmax(buf, MACHINES)
     else:
         raise ValueError(mode)
@@ -87,12 +116,190 @@ def make_step(superstep: Callable, static, *, mesh: Mesh | None = None,
     return jax.jit(step)
 
 
+def _num_machines(state) -> int:
+    """p from any state tree: every leaf is machine-stacked on axis 0."""
+    return len(jax.tree.leaves(state)[0])
+
+
 def run_bsp(superstep: Callable, state, static, num_steps: int,
             *, mesh: Mesh | None = None, check_rep: bool = True):
-    """Iterate the superstep; returns (final_state, (steps, p) actives)."""
+    """Iterate the superstep; returns (final_state, (steps, p) actives).
+
+    One jitted dispatch and one device→host sync per superstep — the
+    bit-exact oracle :func:`run_bsp_fused` is pinned against.
+    """
     step = make_step(superstep, static, mesh=mesh, check_rep=check_rep)
     actives = []
     for _ in range(num_steps):
         state, act = step(state)
         actives.append(np.asarray(act))
-    return state, np.stack(actives) if actives else np.zeros((0,))
+    if not actives:
+        # zero steps still contract to a (0, p) actives array
+        return state, np.zeros((0, _num_machines(state)))
+    return state, np.stack(actives)
+
+
+def _state_residual(old, new) -> jnp.ndarray:
+    """Global ``‖new − old‖∞`` over every state leaf (cast to float32).
+
+    The on-device convergence measure for contraction-map apps
+    (PageRank): counter/mask leaves would keep it ≥ 1, which is why the
+    monotone apps gate on the active count instead.
+    """
+    diffs = jax.tree.map(
+        lambda a, b: jnp.max(jnp.abs(b.astype(jnp.float32)
+                                     - a.astype(jnp.float32))), old, new)
+    return functools.reduce(jnp.maximum, jax.tree.leaves(diffs))
+
+
+def make_fused_runner(superstep: Callable, static, *,
+                      mesh: Mesh | None = None, check_rep: bool = True,
+                      chunk: int = 8, tol: float | None = None):
+    """Build a reusable fused runner: ``run(state, num_steps)``.
+
+    The returned callable executes the whole BSP iteration as ONE jitted
+    dispatch — ``lax.scan`` over ``ceil(num_steps / chunk)`` chunks of
+    supersteps, each chunk an inner ``lax.while_loop`` that steps until
+    the chunk is exhausted *or* the run has converged:
+
+    * ``tol is None`` — converged when the global active count hits 0
+      (the monotone apps: BFS/SSSP/CC activity is exactly the changed
+      set, and 0 is absorbing);
+    * ``tol`` set — converged when the on-device residual
+      ``‖state_{t+1} − state_t‖∞ ≤ tol`` (PageRank power iteration).
+
+    After convergence every remaining chunk's while_loop exits on its
+    first predicate check, so converged tail steps cost one condition
+    evaluation instead of a superstep.  Active counts accumulate into an
+    on-device ``(chunk, p)`` buffer per chunk; the single host sync at
+    the end trims them to the steps actually run.
+
+    The compiled computation is cached on the returned callable (one
+    trace per distinct chunk count), so repeat runs — benchmark loops,
+    dynamic-epoch hand-offs — pay dispatch, not retracing.  The
+    convenience wrapper :func:`run_bsp_fused` rebuilds it per call, like
+    :func:`run_bsp` rebuilds its step.
+    """
+    chunk = max(1, int(chunk))
+    body = jax.vmap(superstep, axis_name=MACHINES, in_axes=(0, 0))
+
+    def chunk_body(step_fn, done_of, buf_shape, act_dt, carry, limit):
+        """One scan step: while_loop over ≤ chunk supersteps, gated."""
+        st0, done0 = carry
+        buf0 = jnp.zeros(buf_shape, dtype=act_dt)
+
+        def cond(c):
+            _, _, t, dn = c
+            return (t < limit) & jnp.logical_not(dn)
+
+        def step_once(c):
+            st, buf, t, _ = c
+            new_st, act = step_fn(st)
+            return (new_st, buf.at[t].set(act), t + 1,
+                    done_of(st, new_st, act))
+
+        st, buf, t, done = jax.lax.while_loop(
+            cond, step_once, (st0, buf0, jnp.int32(0), done0))
+        return (st, done), (buf, t)
+
+    if mesh is None:
+        def done_of(st, new_st, act):
+            if tol is not None:
+                return _state_residual(st, new_st) <= tol
+            return act.sum() == jnp.zeros((), act.dtype)
+
+        @jax.jit
+        def fused(state, limits):
+            p = _num_machines(state)
+            act_dt = jax.eval_shape(lambda s: body(s, static)[1],
+                                    state).dtype
+            run = functools.partial(chunk_body,
+                                    lambda st: body(st, static), done_of,
+                                    (chunk, p), act_dt)
+            (st, _), (bufs, ts) = jax.lax.scan(
+                run, (state, jnp.zeros((), bool)), limits)
+            return st, bufs, ts
+
+        def run(state, num_steps: int):
+            p = _num_machines(state)
+            if num_steps <= 0:
+                return state, np.zeros((0, p))
+            num_chunks = -(-num_steps // chunk)
+            limits = np.full(num_chunks, chunk, dtype=np.int32)
+            limits[-1] = num_steps - chunk * (num_chunks - 1)
+            state, bufs, ts = fused(state, jnp.asarray(limits))
+            steps = int(np.asarray(ts).sum())
+            actives = np.asarray(bufs).reshape(-1, p)[:steps]
+            return state, actives
+
+        return run
+
+    # shard_map: the fused loop runs rank-reduced per device; the gate
+    # reduces with a collective so every device agrees on the predicate
+    state_spec_of = lambda tree: jax.tree.map(lambda _: P(MACHINES), tree)
+    static_spec = state_spec_of(static)
+
+    def sharded(state_b, static_b, limits):
+        st = jax.tree.map(lambda a: a[0], state_b)
+        sa = jax.tree.map(lambda a: a[0], static_b)
+        act_dt = jax.eval_shape(lambda s: superstep(s, sa)[1], st).dtype
+
+        def done_of(old, new, act):
+            if tol is not None:
+                res = jax.lax.pmax(_state_residual(old, new), MACHINES)
+                return res <= tol
+            tot = jax.lax.psum(jnp.asarray(act), MACHINES)
+            return tot == jnp.zeros((), tot.dtype)
+
+        def step_fn(st):
+            new_st, act = superstep(st, sa)
+            return new_st, jnp.asarray(act)
+
+        run = functools.partial(chunk_body, step_fn, done_of, (chunk,),
+                                act_dt)
+        (st, _), (bufs, ts) = jax.lax.scan(
+            run, (st, jnp.zeros((), bool)), limits)
+        return (jax.tree.map(lambda a: jnp.asarray(a)[None], st),
+                jnp.asarray(bufs)[None], jnp.asarray(ts)[None])
+
+    @jax.jit
+    def fused(state, limits):
+        # shard_map has no replication rule for while_loop, so the
+        # replication check must stay off for the fused mesh path
+        # regardless of the backend's check_rep flag
+        return shard_map(
+            sharded, mesh=mesh,
+            in_specs=(state_spec_of(state), static_spec, P()),
+            out_specs=(state_spec_of(state), P(MACHINES), P(MACHINES)),
+            check_vma=False)(state, static, limits)
+
+    def run(state, num_steps: int):
+        p = _num_machines(state)
+        if num_steps <= 0:
+            return state, np.zeros((0, p))
+        num_chunks = -(-num_steps // chunk)
+        limits = np.full(num_chunks, chunk, dtype=np.int32)
+        limits[-1] = num_steps - chunk * (num_chunks - 1)
+        state, bufs, ts = fused(state, jnp.asarray(limits))
+        steps = int(np.asarray(ts)[0].sum())
+        # bufs: (p, num_chunks, chunk) -> (num_chunks*chunk, p), trimmed
+        actives = np.asarray(bufs).transpose(1, 2, 0).reshape(-1, p)[:steps]
+        return state, actives
+
+    return run
+
+
+def run_bsp_fused(superstep: Callable, state, static, num_steps: int,
+                  *, mesh: Mesh | None = None, check_rep: bool = True,
+                  chunk: int = 8, tol: float | None = None):
+    """One fused on-device BSP run (see :func:`make_fused_runner`).
+
+    Returns ``(final_state, (steps_run, p) actives)``.  With ``tol=None``
+    the final state is bit-identical to :func:`run_bsp` after
+    ``num_steps`` supersteps for min/max-semiring apps (converged
+    supersteps are state fixpoints) and the actives are the stepwise
+    prefix (the stepwise tail is all zeros).
+    """
+    runner = make_fused_runner(superstep, static, mesh=mesh,
+                               check_rep=check_rep, chunk=chunk, tol=tol)
+    return runner(state, num_steps)

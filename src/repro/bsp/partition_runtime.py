@@ -52,12 +52,13 @@ class LocalBSR:
     """
 
     cols: np.ndarray        # (p, R, K) int32 block-column ids
-    blocks: np.ndarray      # (p, R, K, bm, bm) float32 (absent-padded)
+    blocks: np.ndarray      # (p, R, K, bm, bm) in ``dtype`` (absent-padded)
     gather: np.ndarray      # (p, R*bm) int32: BSR position -> local index
     rank: np.ndarray        # (p, Vmax) int32: local index -> BSR position
     block_size: int
     semiring: str
     fill_stats: tuple       # per-machine dicts (see BsrMatrix.fill_stats)
+    dtype: str = "float32"  # stored block dtype (message precision)
 
     @property
     def p(self) -> int:
@@ -85,13 +86,15 @@ class LocalBSR:
 
     @classmethod
     def build(cls, rt: "PartitionRuntime", *, block_size: int = 128,
-              semiring: str = "plus_times",
-              weights: str = "weight") -> "LocalBSR":
+              semiring: str = "plus_times", weights: str = "weight",
+              dtype: str = "float32") -> "LocalBSR":
         """Blocked adjacency from ``rt.local_edges``, one machine at a time.
 
         ``weights`` picks the stored ⊗ operand per edge: ``"weight"``
         (``rt.edge_weight``), ``"unit"`` (1, presence), or ``"zero"``
-        (0 — (min,+) label propagation).
+        (0 — (min,+) label propagation).  ``dtype`` is the stored block
+        precision (``"bfloat16"`` for the low-precision message path;
+        blocks are built in float32 and cast once).
         """
         from ..kernels.bsr_spmv import bsr_from_edges, get_semiring
         p, vmax = rt.p, rt.vmax
@@ -133,10 +136,23 @@ class LocalBSR:
         gather = np.zeros((p, R * bm), dtype=np.int32)
         for i in range(p):
             gather[i, :vmax] = orders[i]
+        if dtype != "float32":
+            blocks = blocks.astype(_np_dtype(dtype))
         return cls(cols=cols, blocks=blocks, gather=gather,
                    rank=np.stack(ranks),
                    block_size=bm, semiring=get_semiring(semiring).name,
-                   fill_stats=tuple(m.fill_stats() for m in mats))
+                   fill_stats=tuple(m.fill_stats() for m in mats),
+                   dtype=str(dtype))
+
+
+def _np_dtype(name: str):
+    """numpy dtype by name, reaching into ml_dtypes (a jax dependency)
+    for the narrow float types numpy itself does not register."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
 
 
 def rank_of(order: np.ndarray, n: int) -> np.ndarray:
@@ -175,20 +191,23 @@ class PartitionRuntime:
         return {}
 
     def local_bsr(self, *, block_size: int = 128,
-                  semiring: str = "plus_times",
-                  weights: str = "weight") -> LocalBSR:
+                  semiring: str = "plus_times", weights: str = "weight",
+                  dtype: str = "float32") -> LocalBSR:
         """The blocked per-machine adjacency (:class:`LocalBSR`).
 
         Built once from ``local_edges`` per (block_size, semiring,
-        weights) combination and cached on the runtime — the Pallas
-        edge-kernel backend's layout, with padding/ELL-fill stats on the
-        returned object.
+        weights, dtype) combination and cached on the runtime — the
+        Pallas edge-kernel backend's layout, with padding/ELL-fill stats
+        on the returned object.  ``dtype`` is the stored block precision
+        (the ``message_dtype`` knob: a bfloat16 operand cache entry
+        halves the blocks' footprint and feeds the low-precision message
+        path without touching the float32 entry).
         """
-        key = (int(block_size), str(semiring), str(weights))
+        key = (int(block_size), str(semiring), str(weights), str(dtype))
         if key not in self._bsr_cache:
             self._bsr_cache[key] = LocalBSR.build(
                 self, block_size=block_size, semiring=semiring,
-                weights=weights)
+                weights=weights, dtype=dtype)
         return self._bsr_cache[key]
 
     @classmethod

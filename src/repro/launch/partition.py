@@ -26,9 +26,13 @@ selectable **edge-kernel backend** (``--backend``, see
 ``repro.bsp.backends``): ``scatter`` is the gather-scatter oracle,
 ``segment`` the sorted-CSR CPU fast path (~5x PageRank superstep
 throughput on the proxies), ``pallas`` the blocked Block-ELL semiring
-SpMV (MXU-shaped on TPU, interpreter on CPU).  In ``--stream`` mode this
-requires ``--out-dir`` (the runtime packs from the on-disk shards, one
-machine at a time).
+SpMV (MXU-shaped on TPU, interpreter on CPU).  ``--fused`` runs the whole
+iteration as one on-device dispatch (``run_bsp_fused``) instead of one
+dispatch + host sync per superstep; ``--tol`` additionally stops once
+``‖pr_{t+1} − pr_t‖∞ ≤ tol`` (implies ``--fused``); ``--message-dtype
+bfloat16`` opts into the low-precision message path.  In ``--stream``
+mode ``--pagerank`` requires ``--out-dir`` (the runtime packs from the
+on-disk shards, one machine at a time).
 
 Every partition this CLI emits is also a valid *seed* for the dynamic
 layer (``repro.core.DynamicPartitioner``): live edge inserts/deletes,
@@ -54,6 +58,9 @@ from ..data import graph500, read_edge_list, rmat, road_mesh
 #: (and jax) must not load on the plain numpy partition path; a test
 #: pins the two in sync
 EDGE_BACKENDS = ("scatter", "segment", "pallas")
+
+#: static mirror of ``repro.bsp.backends.MESSAGE_DTYPES`` (same test)
+MESSAGE_DTYPES = ("float32", "bfloat16", "float16")
 
 
 def load_graph(spec: str):
@@ -127,6 +134,19 @@ def main(argv=None):
                          "(gather-scatter oracle), segment (sorted-CSR "
                          "CPU fast path), pallas (blocked Block-ELL "
                          "semiring SpMV)")
+    ap.add_argument("--fused", action="store_true",
+                    help="--pagerank: run the whole iteration as one "
+                         "on-device dispatch (run_bsp_fused) instead of "
+                         "one dispatch + host sync per superstep")
+    ap.add_argument("--tol", type=float, default=None,
+                    help="--pagerank: stop once the on-device residual "
+                         "max|pr_{t+1}-pr_t| <= TOL (implies --fused)")
+    ap.add_argument("--message-dtype", default="float32",
+                    choices=MESSAGE_DTYPES,
+                    help="--pagerank: edge-message precision; bfloat16 "
+                         "is the low-precision message path (messages "
+                         "cast down, accumulation stays float32 on "
+                         "scatter/segment)")
     ap.add_argument("--out", default=None, help=".npz output path")
     args = ap.parse_args(argv)
 
@@ -182,11 +202,15 @@ def _run_pagerank(rt, args) -> None:
     """Distributed PageRank on the fresh partition via --backend."""
     from ..bsp import pagerank
     t0 = time.perf_counter()
-    pr, _ = pagerank(rt, num_iters=args.pagerank_iters,
-                     backend=args.backend)
+    pr, actives = pagerank(rt, num_iters=args.pagerank_iters,
+                           backend=args.backend, fused=args.fused,
+                           tol=args.tol, message_dtype=args.message_dtype)
     dt = time.perf_counter() - t0
     top = np.argsort(pr)[::-1][:5]
-    print(f"pagerank[{args.backend}]: {args.pagerank_iters} supersteps on "
+    steps = len(actives)
+    mode = "fused" if (args.fused or args.tol is not None) else "stepwise"
+    print(f"pagerank[{args.backend}/{mode}/{args.message_dtype}]: "
+          f"{steps}/{args.pagerank_iters} supersteps on "
           f"p={rt.p} machines (R={rt.num_replicas} replicas) in {dt:.2f}s; "
           f"mass={pr.sum():.6f}")
     print("top-5:", {int(v): round(float(pr[v]), 6) for v in top})

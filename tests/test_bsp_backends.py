@@ -102,9 +102,10 @@ class TestCrossBackend:
 
     def test_cli_mirror_matches_registry(self):
         """launch.partition's static choices (kept jax-free) == BACKENDS."""
-        from repro.bsp import BACKENDS
-        from repro.launch.partition import EDGE_BACKENDS
-        assert set(EDGE_BACKENDS) == set(BACKENDS)
+        from repro.bsp import BACKENDS, MESSAGE_DTYPES
+        from repro.launch import partition as cli
+        assert set(cli.EDGE_BACKENDS) == set(BACKENDS)
+        assert set(cli.MESSAGE_DTYPES) == set(MESSAGE_DTYPES)
 
     def test_build_app_specs(self, part):
         _, _, rt = part
