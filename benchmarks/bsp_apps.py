@@ -120,7 +120,8 @@ def _pow2_cap(n: int) -> int:
 
 
 def _partition(g, cl) -> PartitionRuntime:
-    return PartitionRuntime.build(g, partitioner("hdrf")(g, cl), cl.p)
+    return PartitionRuntime.create(g, assign=partitioner("hdrf")(g, cl),
+                                   cluster=cl)
 
 
 def _equivalence(rt, iters: int = 10, block_size: int = SMOKE_BLOCK):

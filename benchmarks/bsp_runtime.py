@@ -25,7 +25,7 @@ def run(quick: bool = True, datasets=("TW", "LJ", "CP", "RN")):
                                 alpha=0.1, beta=0.1).assign
             else:
                 assign = partitioner(m)(g, cl)
-            rt = PartitionRuntime.build(g, assign, cl.p)
+            rt = PartitionRuntime.create(g, assign=assign, cluster=cl)
             sim_pr = simulate_runtime(rt, cl, num_steps=10)
             # fused runner: one device dispatch for the whole SSSP run,
             # and the early exit trims the idle tail off the active sets

@@ -78,7 +78,7 @@ def _in_memory_pipeline(path, method: str, cl_of):
     cl = cl_of(g.num_edges)
     assign = partitioner(method)(g, cl)
     stats = evaluate(g, assign, cl)
-    rt = PartitionRuntime.build(g, assign, cl.p)
+    rt = PartitionRuntime.create(g, assign=assign, cluster=cl)
     return {"stats": stats, "rt": rt, "num_edges": g.num_edges}
 
 
@@ -92,7 +92,7 @@ def _oocore_pipeline(path, method: str, cl_of, workdir: pathlib.Path):
     state = partitioner(method).stream(tp, num_v, num_e, cl, sink=sa.sink)
     sa.finalize(state, {"method": method, "dedup": "two_pass"})
     stats = evaluate_membership(state.cnt > 0, state.edges_per, cl)
-    rt = PartitionRuntime.from_stream(sa)
+    rt = PartitionRuntime.create(sa)
     return {"stats": stats, "rt": rt, "num_edges": num_e,
             "spill": tp.stats}
 

@@ -1,0 +1,206 @@
+"""GNN minibatch sampling throughput + halo-fetch fraction vs partitioner.
+
+The sampling service (``repro.sampling``) is the workload partition
+quality is *for* in GNN training: every minibatch expands a k-hop
+neighborhood against machine-owned CSC shards, and each frontier vertex
+owned elsewhere is a cross-machine halo fetch.  This benchmark makes
+that observable:
+
+* ``--smoke`` (the tier-2 ``sampling`` CI job) gates
+  - the jax sampler against its NumPy oracle — bitwise on the same key,
+    both with- and without-replacement;
+  - halo-fetch fraction on the LJ proxy: windgp (locality-optimized)
+    must beat hash (locality-free) strictly, with hdrf in between as
+    context;
+  - the training-aware knob: ``train_balance`` must reduce the
+    max/mean train-vertex skew vs the unbalanced default;
+  - samples/sec on the LJ proxy (tracked, ungated — CI walls drift).
+* ``--full`` adds samples/sec vs machine count and a fanout sweep.
+
+Run:  PYTHONPATH=src python -m benchmarks.sampling_service --smoke \
+          --json BENCH_smoke.json
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import scaled_paper_cluster
+from repro.core.partition_state import edge_incidence_counts
+from repro.core.partitioners import get as partitioner
+from repro.data import rmat
+from repro.sampling import SamplingService, sample_fanout, sample_fanout_np
+
+from .common import CSV, cluster_for, dataset, median_iqr, write_bench_json
+
+FANOUTS = (10, 5)
+BATCH = 64
+
+
+def _service(g, cl, method, fanouts=FANOUTS, **knobs) -> SamplingService:
+    return SamplingService.create(g, method=method, cluster=cl,
+                                  fanouts=fanouts, **knobs)
+
+
+def _halo_stats(svc: SamplingService, key, batches: int = 2):
+    """Mean halo-fetch fraction over every machine's minibatches, plus
+    total sampled entries (the numerator of samples/sec)."""
+    halo = frontier = sampled = 0
+    for home in range(svc.p):
+        if svc.csc.owned_per[home] == 0:
+            continue
+        for b in range(batches):
+            k_seed, k_hop = jax.random.split(
+                jax.random.fold_in(jax.random.fold_in(key, home), b))
+            seeds = svc.local_seeds(home, BATCH, k_seed)
+            mb = svc.sample(seeds, k_hop, home=home)
+            for s in mb.hop_stats:
+                halo += s.halo
+                frontier += s.frontier
+            sampled += mb.num_sampled()
+    return halo / max(1, frontier), sampled
+
+
+def _samples_per_sec(svc: SamplingService, key, batches: int = 6) -> float:
+    """Warm-started sampling throughput on machine 0's seeds."""
+    seeds = svc.local_seeds(0, BATCH, jax.random.fold_in(key, 999))
+    svc.sample(seeds, key, home=0)           # compile/warm the hop shapes
+    t0 = time.perf_counter()
+    n = 0
+    for b in range(batches):
+        mb = svc.sample(seeds, jax.random.fold_in(key, b), home=0)
+        n += mb.num_sampled()
+    return n / max(time.perf_counter() - t0, 1e-9)
+
+
+def _train_skew(g, assign, p, train_mask) -> float:
+    """max/mean of per-machine hosted-train-vertex counts."""
+    member = edge_incidence_counts(g, assign, p) > 0
+    counts = member[:, train_mask].sum(axis=1).astype(np.float64)
+    return float(counts.max() / max(counts.mean(), 1e-9))
+
+
+def run_smoke(json_path: str | None = None) -> dict:
+    metrics = {}
+    csv = CSV("sampling_smoke")
+    key = jax.random.PRNGKey(0)
+
+    # -- jax sampler ≡ NumPy oracle, bitwise, both replacement modes -------
+    g = rmat(9, seed=2)
+    cl = scaled_paper_cluster(2, 4, g.num_edges)
+    svc = _service(g, cl, "hdrf")
+    rows = svc.csc.flat_rowmap()[np.arange(g.num_vertices)]
+    gap = 0
+    for replace in (False, True):
+        got = np.asarray(sample_fanout(svc._table, svc._deg, rows, key, 7,
+                                       replace=replace))
+        want = sample_fanout_np(np.asarray(svc._table),
+                                np.asarray(svc._deg), rows, key, 7,
+                                replace=replace)
+        gap = max(gap, int((got != want).sum()))
+    assert gap == 0, f"jax sampler disagrees with the NumPy oracle on " \
+                     f"{gap} entries (same PRNG key — must be bitwise)"
+    csv.row("oracle", 0, f"gap={gap} (both replacement modes)")
+    metrics["sampling/oracle_gap"] = gap
+
+    # -- halo-fetch fraction vs partitioner on the LJ proxy ----------------
+    g = dataset("LJ", True)
+    cl = cluster_for("LJ", g)
+    halo = {}
+    for method, knobs in (("windgp", dict(t0=8, alpha=0.1, beta=0.1)),
+                          ("hdrf", {}), ("hash", {})):
+        svc = _service(g, cl, method, **knobs)
+        frac, _ = _halo_stats(svc, jax.random.fold_in(key, 1))
+        halo[method] = frac
+        csv.row(f"lj/halo/{method}", 0, f"halo_frac={frac:.4f}")
+        metrics[f"sampling/halo/{method}"] = frac
+        if method == "windgp":
+            rate = _samples_per_sec(svc, jax.random.fold_in(key, 2))
+            csv.row("lj/windgp/throughput", 0, f"{rate/1e6:.2f}Msamples/s")
+            metrics["sampling/samples_per_sec"] = rate
+    ratio = halo["windgp"] / max(halo["hash"], 1e-9)
+    csv.row("lj/halo/windgp_vs_hash", 0, f"ratio={ratio:.3f}")
+    assert halo["windgp"] < halo["hash"], (
+        f"windgp halo fraction {halo['windgp']:.4f} not strictly below "
+        f"hash {halo['hash']:.4f} — partition locality is not reaching "
+        f"the sampling workload")
+    metrics["sampling/halo/windgp_vs_hash"] = ratio
+
+    # -- training-aware balance knob ---------------------------------------
+    g = rmat(11, edge_factor=7, seed=42)
+    cl = scaled_paper_cluster(3, 6, g.num_edges)
+    rng = np.random.default_rng(0)
+    train = rng.random(g.num_vertices) < 0.1
+    wind = partitioner("windgp")
+    a_def = wind(g, cl, t0=8, alpha=0.1, beta=0.1)
+    a_bal = wind(g, cl, t0=8, alpha=0.1, beta=0.1,
+                 train_mask=train, train_balance=1.0)
+    skew_def = _train_skew(g, a_def, cl.p, train)
+    skew_bal = _train_skew(g, a_bal, cl.p, train)
+    csv.row("train_skew/default", 0, f"max/mean={skew_def:.3f}")
+    csv.row("train_skew/balanced", 0, f"max/mean={skew_bal:.3f}")
+    assert skew_bal < skew_def, (
+        f"train_balance knob did not reduce train-vertex skew "
+        f"(balanced {skew_bal:.3f} vs default {skew_def:.3f})")
+    metrics["sampling/train_skew_default"] = skew_def
+    metrics["sampling/train_skew_balanced"] = skew_bal
+    metrics["sampling/train_skew_ratio"] = skew_bal / skew_def
+
+    if json_path:
+        write_bench_json(json_path, metrics)
+    return metrics
+
+
+def run_full(repeats: int = 3) -> None:
+    """Samples/sec vs machine count + halo per hop, windgp vs hdrf vs
+    hash on the LJ proxy."""
+    csv = CSV("sampling")
+    key = jax.random.PRNGKey(0)
+    g = dataset("LJ", True)
+
+    # machine-count sweep at fixed fanouts (hdrf: cheap, representative)
+    for n in (3, 6, 12):
+        cl = scaled_paper_cluster(1, n - 1, g.num_edges)
+        svc = _service(g, cl, "hdrf")
+        rates = [_samples_per_sec(svc, jax.random.fold_in(key, r))
+                 for r in range(repeats)]
+        med, iqr = median_iqr(rates)
+        frac, _ = _halo_stats(svc, key)
+        csv.row(f"lj/p{n}/throughput", 0,
+                f"{med/1e6:.2f}Msamples/s iqr={iqr/1e6:.2f} "
+                f"halo={frac:.3f} p={n}")
+
+    # per-hop halo by partitioner at the paper cluster
+    cl = cluster_for("LJ", g)
+    for method, knobs in (("windgp", dict(t0=8, alpha=0.1, beta=0.1)),
+                          ("hdrf", {}), ("hash", {})):
+        svc = _service(g, cl, method, **knobs)
+        seeds = svc.local_seeds(0, BATCH, key)
+        mb = svc.sample(seeds, jax.random.fold_in(key, 7), home=0)
+        fr = " ".join(f"h{h}={f:.3f}"
+                      for h, f in enumerate(mb.halo_fracs()))
+        csv.row(f"lj/halo_hops/{method}", 0, fr)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tier-2 CI gate: sampler oracle bitwise + "
+                         "windgp < hash halo fraction + train-balance "
+                         "skew reduction on proxies")
+    ap.add_argument("--json", default=None,
+                    help="write gateable metrics to this path "
+                         "(BENCH_smoke.json for CI)")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--repeats", type=int, default=3)
+    args = ap.parse_args()
+    if args.smoke:
+        run_smoke(args.json)
+    if args.full:
+        run_full(args.repeats)
+    if not (args.smoke or args.full):
+        ap.print_help()

@@ -31,7 +31,7 @@ def run(quick: bool = True, ds: str = "LJ"):
         else:
             assign = partitioner(m)(g, cl)
         tc = evaluate(g, assign, cl).tc
-        rt = PartitionRuntime.build(g, assign, cl.p)
+        rt = PartitionRuntime.create(g, assign=assign, cluster=cl)
 
         t0 = time.perf_counter()
         _, act_pr = pagerank(rt, num_iters=10)

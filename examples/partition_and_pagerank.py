@@ -26,7 +26,7 @@ for method in ("hash", "ne", "windgp"):
     else:
         assign = partitioner(method)(g, cluster)
     stats = evaluate(g, assign, cluster)
-    rt = PartitionRuntime.build(g, assign, cluster.p)
+    rt = PartitionRuntime.create(g, assign=assign, cluster=cluster)
 
     t0 = time.perf_counter()
     pr, _ = pagerank(rt, num_iters=30)

@@ -121,7 +121,7 @@ re-running the pipeline per snapshot::
 
     dp = DynamicPartitioner(g, cl, assign)     # live state over the seed
     sa = StreamAssignment.open(out_dir / "assignment")
-    rt = PartitionRuntime.from_stream(sa)
+    rt = PartitionRuntime.create(sa)
     snap = dp.snapshot()
     dp.insert(new_edges)                       # wave-scored vs live (p,V)
     dp.delete(stale_edges)                     # exact Eq.3/4 rollback
@@ -137,6 +137,39 @@ the cold pass, so a quiet timeline converges to the static partition.
 ``benchmarks/dynamic_replay.py`` is the measured version of this loop
 (assignment-latency percentiles, amortized repair cost, TC drift vs
 scratch) and runs in CI as the tier-2 ``dynamic`` job.
+
+Sampling workflow
+-----------------
+The shards this script writes also feed GNN minibatch training: wrap
+the partition in the sampling service (``repro.sampling``) and draw
+fixed-fanout k-hop neighborhoods per machine::
+
+    from repro.sampling import SamplingService
+    import jax
+
+    svc = SamplingService.create(out_dir / "assignment",
+                                 fanouts=(10, 5))
+    key = jax.random.PRNGKey(0)
+    seeds = svc.local_seeds(home=0, n=1024, key=key)   # machine 0's shard
+    mb = svc.sample(seeds, jax.random.fold_in(key, 1), home=0)
+    mb.halo_fracs()    # per-hop fraction of frontier owned elsewhere
+
+``SamplingService.create`` accepts every ``PartitionRuntime.create``
+source — the assignment directory above, or ``(graph, method=,
+cluster=)`` to partition in-process, or ``(graph, assign=, p=)`` for a
+precomputed assignment.  Each machine holds a degree-sorted CSC of its
+*owned* vertices; per hop, sampled vertices owned elsewhere are counted
+as one batched halo fetch — the traffic a better partition shrinks,
+which is how partition quality becomes observable on the training
+workload.  The sampler is key-deterministic (same ``(partition, seeds,
+key)`` → bitwise-same minibatch, pinned against a NumPy oracle) and
+``local_seeds(..., train_mask=m)`` restricts seeds to labeled vertices.
+For training-aware partitions, pass ``train_mask=`` /
+``train_balance=`` to the windgp partitioner — Eq. 3 then weighs
+hosted train vertices extra, balancing the labeled set across machines.
+``benchmarks/sampling_service.py`` is the measured version (samples/sec,
+halo fraction windgp vs hdrf vs hash, train-skew reduction) and runs in
+CI as the tier-2 ``sampling`` job.
 """
 from __future__ import annotations
 
@@ -339,7 +372,7 @@ def main(argv=None):
     if args.pagerank:
         # same report as the launch CLI (shared helper): pack the runtime
         # from the on-disk shards, run supersteps through --backend
-        _run_pagerank(PartitionRuntime.from_stream(sa), args)
+        _run_pagerank(PartitionRuntime.create(sa), args)
     return 0
 
 

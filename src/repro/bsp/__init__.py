@@ -11,7 +11,8 @@ from .backends import (BACKENDS, MESSAGE_DTYPES, EdgeBackend, get_backend,
                        frontier_entries)
 from .engine import make_fused_runner, run_bsp, run_bsp_fused
 from .apps import (pagerank, sssp, bfs, triangle_count,
-                   connected_components, build_app, AppSpec, APP_BUILDERS)
+                   connected_components, build_app, AppSpec, APP_BUILDERS,
+                   RunOptions, MONOTONE_APPS)
 from . import ref
 from .simulate import simulate_superstep_times, simulate_runtime
 
@@ -22,4 +23,5 @@ __all__ = ["PartitionRuntime", "LocalBSR", "StreamAssignment",
            "run_bsp_fused",
            "pagerank", "sssp", "bfs", "triangle_count",
            "connected_components", "build_app", "AppSpec", "APP_BUILDERS",
+           "RunOptions", "MONOTONE_APPS",
            "ref", "simulate_superstep_times", "simulate_runtime"]

@@ -49,9 +49,105 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .backends import get_backend
+from .backends import BACKENDS, MESSAGE_DTYPES, get_backend
 from .engine import run_bsp, run_bsp_fused
 from .partition_runtime import PartitionRuntime
+
+#: apps whose state is monotone under the semiring: they already early-exit
+#: on an empty changed-set, so PageRank's ``tol`` residual gate does not
+#: apply to them (RunOptions.validate rejects the combination).
+MONOTONE_APPS = ("bfs", "cc", "sssp")
+
+
+@dataclasses.dataclass(frozen=True)
+class RunOptions:
+    """The engine/backend knobs every BSP app shares, validated once.
+
+    The four app wrappers used to re-declare ``backend / fused / tol /
+    chunk / message_dtype / frontier_cap`` individually; this dataclass
+    is the single surface for them.  Pass ``options=RunOptions(...)`` to
+    any app (or ``launch/partition.py``); the individual kwargs remain
+    as a legacy spelling that assembles one internally — mixing both
+    raises.
+
+    * ``backend`` — edge-kernel backend (``bsp/backends.py``).
+    * ``fused`` — run the whole iteration as one on-device dispatch.
+    * ``tol`` — PageRank residual early-exit (implies ``fused``); the
+      monotone apps (:data:`MONOTONE_APPS`) reject it.
+    * ``chunk`` — fused-runner scan chunk (steps per convergence check).
+    * ``message_dtype`` — message precision (see ``MESSAGE_DTYPES``).
+    * ``frontier_cap`` — scatter-only frontier compaction width.
+    """
+
+    backend: str = "scatter"
+    fused: bool = False
+    tol: float | None = None
+    chunk: int = 8
+    message_dtype: str = "float32"
+    frontier_cap: int | None = None
+
+    def validate(self, app: str | None = None) -> "RunOptions":
+        """Raise ``ValueError`` on bad knobs / combinations; returns self."""
+        if self.backend not in BACKENDS:
+            raise ValueError(f"unknown edge-kernel backend "
+                             f"{self.backend!r} "
+                             f"(choices: {sorted(BACKENDS)})")
+        if self.message_dtype not in MESSAGE_DTYPES:
+            raise ValueError(f"unknown message_dtype "
+                             f"{self.message_dtype!r} (choices: "
+                             f"{list(MESSAGE_DTYPES)})")
+        if self.chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {self.chunk}")
+        if self.tol is not None and app in MONOTONE_APPS:
+            raise ValueError(
+                f"tol= is the PageRank residual gate; {app!r} is monotone "
+                f"and already exits on an empty changed-set — valid "
+                f"choices: tol=None here, or tol with app='pagerank' "
+                f"(use fused=True for the one-dispatch runner)")
+        if self.frontier_cap is not None and self.backend != "scatter":
+            raise ValueError(
+                f"frontier_cap is a 'scatter'-backend knob (frontier "
+                f"compaction); backend {self.backend!r} does not take it "
+                f"— valid choices: backend='scatter', or frontier_cap="
+                f"None")
+        return self
+
+    def backend_opts(self) -> dict:
+        """The knobs that flow to ``get_backend`` for this run."""
+        opts = {"message_dtype": self.message_dtype}
+        if self.frontier_cap is not None:
+            opts["frontier_cap"] = self.frontier_cap
+        return opts
+
+
+def _options(options: RunOptions | None, app: str, backend, fused, tol,
+             chunk, backend_opts: dict):
+    """Resolve ``options=`` vs the legacy per-kwarg spelling.
+
+    Returns ``(RunOptions, extra_backend_opts)`` — extras are
+    backend-specific knobs outside the shared surface (e.g. the pallas
+    ``block_size``/``interpret``), which pass through either way.
+    """
+    extra = dict(backend_opts)
+    if options is not None:
+        mixed = [name for name, val, default in
+                 (("backend", backend, "scatter"), ("fused", fused, False),
+                  ("tol", tol, None), ("chunk", chunk, 8))
+                 if val != default]
+        mixed += sorted(k for k in ("message_dtype", "frontier_cap")
+                        if k in extra)
+        if mixed:
+            raise ValueError(
+                f"got both options=RunOptions(...) and the individual "
+                f"kwarg(s) {mixed} — pass the shared knobs one way or "
+                f"the other")
+    else:
+        options = RunOptions(
+            backend=backend, fused=fused, tol=tol, chunk=chunk,
+            message_dtype=extra.pop("message_dtype", "float32"),
+            frontier_cap=extra.pop("frontier_cap", None))
+    options.validate(app)
+    return options, extra
 
 
 def _static_tree(rt: PartitionRuntime):
@@ -160,19 +256,23 @@ def build_pagerank(rt: PartitionRuntime, damping: float = 0.85, *,
 
 
 def pagerank(rt: PartitionRuntime, num_iters: int = 20,
-             damping: float = 0.85, *, mesh=None, backend="scatter",
-             init: np.ndarray | None = None, fused=False, tol=None,
-             chunk=8, **backend_opts):
+             damping: float = 0.85, *, mesh=None, options=None,
+             backend="scatter", init: np.ndarray | None = None,
+             fused=False, tol=None, chunk=8, **backend_opts):
     """Returns (V,) global PageRank after ``num_iters`` supersteps.
 
     ``init`` warm-starts from a previous (V,) result (see
     :func:`build_pagerank`).  ``fused=True`` runs the whole iteration as
     one on-device dispatch (``run_bsp_fused``); ``tol`` additionally
-    stops early once ``‖pr_{t+1} − pr_t‖∞ ≤ tol`` (and implies fused)."""
-    spec = build_pagerank(rt, damping, backend=backend, init=init,
-                          **backend_opts)
-    out, actives = _run(spec, num_iters, mesh=mesh, fused=fused, tol=tol,
-                        chunk=chunk)
+    stops early once ``‖pr_{t+1} − pr_t‖∞ ≤ tol`` (and implies fused).
+    ``options=RunOptions(...)`` carries the shared engine knobs in one
+    validated object."""
+    opts, extra = _options(options, "pagerank", backend, fused, tol,
+                           chunk, backend_opts)
+    spec = build_pagerank(rt, damping, backend=opts.backend, init=init,
+                          **opts.backend_opts(), **extra)
+    out, actives = _run(spec, num_iters, mesh=mesh, fused=opts.fused,
+                        tol=opts.tol, chunk=opts.chunk)
     return spec.finalize(rt, out), actives
 
 
@@ -212,12 +312,14 @@ def build_relax(rt: PartitionRuntime, source: int, weighted: bool, *,
 
 
 def sssp(rt: PartitionRuntime, source: int = 0, num_iters: int = 30,
-         *, mesh=None, backend="scatter", fused=False, tol=None, chunk=8,
-         **backend_opts):
-    spec = build_relax(rt, source, weighted=True, backend=backend,
-                       **backend_opts)
-    out, actives = _run(spec, num_iters, mesh=mesh, fused=fused, tol=tol,
-                        chunk=chunk)
+         *, mesh=None, options=None, backend="scatter", fused=False,
+         tol=None, chunk=8, **backend_opts):
+    opts, extra = _options(options, "sssp", backend, fused, tol, chunk,
+                           backend_opts)
+    spec = build_relax(rt, source, weighted=True, backend=opts.backend,
+                       **opts.backend_opts(), **extra)
+    out, actives = _run(spec, num_iters, mesh=mesh, fused=opts.fused,
+                        tol=opts.tol, chunk=opts.chunk)
     return spec.finalize(rt, out), actives
 
 
@@ -255,11 +357,14 @@ def build_bfs(rt: PartitionRuntime, source: int, *, backend="scatter",
 
 
 def bfs(rt: PartitionRuntime, source: int = 0, num_iters: int = 30,
-        *, mesh=None, backend="scatter", fused=False, tol=None, chunk=8,
-        **backend_opts):
-    spec = build_bfs(rt, source, backend=backend, **backend_opts)
-    out, actives = _run(spec, num_iters, mesh=mesh, fused=fused, tol=tol,
-                        chunk=chunk)
+        *, mesh=None, options=None, backend="scatter", fused=False,
+        tol=None, chunk=8, **backend_opts):
+    opts, extra = _options(options, "bfs", backend, fused, tol, chunk,
+                           backend_opts)
+    spec = build_bfs(rt, source, backend=opts.backend,
+                     **opts.backend_opts(), **extra)
+    out, actives = _run(spec, num_iters, mesh=mesh, fused=opts.fused,
+                        tol=opts.tol, chunk=opts.chunk)
     return spec.finalize(rt, out), actives
 
 
@@ -293,12 +398,15 @@ def build_components(rt: PartitionRuntime, *, backend="scatter",
 
 
 def connected_components(rt: PartitionRuntime, num_iters: int = 30,
-                         *, mesh=None, backend="scatter", fused=False,
-                         tol=None, chunk=8, **backend_opts):
+                         *, mesh=None, options=None, backend="scatter",
+                         fused=False, tol=None, chunk=8, **backend_opts):
     """Min-label propagation; returns (V,) component id per vertex."""
-    spec = build_components(rt, backend=backend, **backend_opts)
-    out, actives = _run(spec, num_iters, mesh=mesh, fused=fused, tol=tol,
-                        chunk=chunk)
+    opts, extra = _options(options, "cc", backend, fused, tol, chunk,
+                           backend_opts)
+    spec = build_components(rt, backend=opts.backend,
+                            **opts.backend_opts(), **extra)
+    out, actives = _run(spec, num_iters, mesh=mesh, fused=opts.fused,
+                        tol=opts.tol, chunk=opts.chunk)
     return spec.finalize(rt, out), actives
 
 

@@ -211,8 +211,92 @@ class PartitionRuntime:
         return self._bsr_cache[key]
 
     @classmethod
+    def create(cls, source=None, *, assign=None, p=None, cluster=None,
+               method=None, edge_weights=None, **knobs) -> "PartitionRuntime":
+        """One keyword-routed constructor for every runtime source.
+
+        Routes on what ``source`` is and which keywords accompany it:
+
+        * ``create(source=graph, assign=assign, p=p)`` — pack a runtime
+          from an in-memory edge assignment (the old :meth:`build`);
+          ``cluster=`` may replace ``p=`` (``cluster.p`` is used).
+        * ``create(source=graph, method="windgp", cluster=cl, **knobs)``
+          — partition first through the registry, then pack (the old
+          :meth:`from_partitioner`); ``knobs`` are validated by the
+          registry entry.
+        * ``create(source=assignment_or_path)`` — pack out-of-core from
+          an on-disk :class:`StreamAssignment` (the old
+          :meth:`from_stream`); ``edge_weights`` may be a callable
+          ``(edges_i, i) -> (k_i,)``.
+
+        ``edge_weights`` is accepted on every route.  Conflicting or
+        missing keywords raise ``ValueError`` naming the valid routes.
+        The legacy constructors remain as thin aliases of this facade,
+        so both spellings build bit-identical runtimes.
+        """
+        from .stream_assignment import StreamAssignment
+        if source is None:
+            raise ValueError(
+                "PartitionRuntime.create requires source=: a Graph (with "
+                "assign=+p=/cluster= or method=+cluster=), or a "
+                "StreamAssignment / its directory path")
+        import os
+        if isinstance(source, (StreamAssignment, str, os.PathLike)):
+            bad = {"assign": assign, "p": p, "cluster": cluster,
+                   "method": method}
+            bad = sorted(k for k, v in bad.items() if v is not None)
+            if bad or knobs:
+                raise ValueError(
+                    f"create(source=<stream assignment>) takes only "
+                    f"edge_weights=; got {bad + sorted(knobs)}")
+            return cls._pack_from_stream(source, edge_weights=edge_weights)
+        if not (hasattr(source, "edges") and hasattr(source, "num_vertices")):
+            raise ValueError(
+                f"create: source must be a Graph or a StreamAssignment "
+                f"(or its path), got {type(source).__name__}")
+        if method is not None:
+            if assign is not None or p is not None:
+                raise ValueError(
+                    "create(source=graph, method=...) partitions the graph "
+                    "itself — drop assign=/p= (or drop method= to pack a "
+                    "precomputed assignment)")
+            if cluster is None:
+                raise ValueError(
+                    "create(source=graph, method=...) requires cluster= "
+                    "(the heterogeneous machine spec the partitioner "
+                    "targets)")
+            from ..core.partitioners import get
+            assign = get(method)(source, cluster, **knobs)
+            return cls._pack_from_assignment(source, assign, cluster.p,
+                                             edge_weights=edge_weights)
+        if assign is None:
+            raise ValueError(
+                "create(source=graph) needs either assign= (+ p= or "
+                "cluster=) for a precomputed assignment, or method= "
+                "(+ cluster=) to partition via the registry")
+        if knobs:
+            raise ValueError(
+                f"create(source=graph, assign=...) got partitioner knobs "
+                f"{sorted(knobs)} — knobs only apply with method=")
+        if p is None:
+            if cluster is None:
+                raise ValueError(
+                    "create(source=graph, assign=...) requires p= or "
+                    "cluster= for the machine count")
+            p = cluster.p
+        return cls._pack_from_assignment(source, assign, p,
+                                         edge_weights=edge_weights)
+
+    @classmethod
     def build(cls, g: Graph, assign: np.ndarray, p: int,
               edge_weights: np.ndarray | None = None) -> "PartitionRuntime":
+        """Thin alias of :meth:`create` (``source=g, assign=, p=``)."""
+        return cls.create(g, assign=assign, p=p, edge_weights=edge_weights)
+
+    @classmethod
+    def _pack_from_assignment(cls, g: Graph, assign: np.ndarray, p: int,
+                              edge_weights: np.ndarray | None = None,
+                              ) -> "PartitionRuntime":
         assert (assign >= 0).all() and assign.max() < p
         deg = g.degree().astype(np.int32)
         if edge_weights is None:
@@ -277,6 +361,12 @@ class PartitionRuntime:
     @classmethod
     def from_stream(cls, assignment,
                     edge_weights=None) -> "PartitionRuntime":
+        """Thin alias of :meth:`create` (``source=assignment``)."""
+        return cls.create(assignment, edge_weights=edge_weights)
+
+    @classmethod
+    def _pack_from_stream(cls, assignment,
+                          edge_weights=None) -> "PartitionRuntime":
         """Pack the BSP runtime from an on-disk :class:`StreamAssignment`.
 
         The out-of-core counterpart of :meth:`build`: no ``Graph`` and no
@@ -429,17 +519,9 @@ class PartitionRuntime:
     def from_partitioner(cls, g: Graph, cluster, method: str = "windgp",
                          edge_weights: np.ndarray | None = None,
                          **knobs) -> "PartitionRuntime":
-        """Partition ``g`` with a registered method and pack the runtime.
-
-        ``method`` resolves through the unified registry
-        (``repro.core.partitioners``); ``knobs`` pass through to it after
-        name validation, so e.g. ``block_size=...`` reaches the
-        block-stream scorers.  One-stop shop for the examples/benchmarks:
-        partition → fixed-shape per-machine arrays.
-        """
-        from ..core.partitioners import get
-        assign = get(method)(g, cluster, **knobs)
-        return cls.build(g, assign, cluster.p, edge_weights=edge_weights)
+        """Thin alias of :meth:`create` (``source=g, method=, cluster=``)."""
+        return cls.create(g, method=method, cluster=cluster,
+                          edge_weights=edge_weights, **knobs)
 
     def gather_global(self, local_values: np.ndarray,
                       fill: float = 0.0) -> np.ndarray:

@@ -145,6 +145,13 @@ class PartitionState:
     t_com: np.ndarray             # (p,)  Eq. 4 totals
     com_sum: np.ndarray           # (V,)  Σ_{i∈S(v)} C_i^com
     replicas: np.ndarray          # (V,)  |S(v)|
+    #: optional (V,) float64 per-vertex calculation weight — the
+    #: training-aware balance term: ``1 + train_balance`` on train
+    #: vertices, 1 elsewhere, so Eq. 3 charges machines extra for every
+    #: labeled vertex they host and the scorers spread the training set.
+    #: ``None`` (default) keeps every cost bit-identical to the unweighted
+    #: accounting; ``verts_per``/memory always stay plain counts.
+    node_weight: np.ndarray | None = None
 
     def __post_init__(self):
         # Cluster views are rebuilt per call; cache them once for hot loops.
@@ -157,8 +164,18 @@ class PartitionState:
         self._costs_stale = False       # set by light-path admit_block
 
     @classmethod
-    def build(cls, g: "Graph", assign: np.ndarray, cluster: "Cluster"):
-        """Build from scratch — the reference for every incremental path."""
+    def build(cls, g: "Graph", assign: np.ndarray, cluster: "Cluster", *,
+              train_mask: np.ndarray | None = None,
+              train_balance: float = 0.0):
+        """Build from scratch — the reference for every incremental path.
+
+        ``train_mask`` (V,) bool + ``train_balance`` > 0 switch on the
+        training-aware node weight: Eq. 3 charges ``c_node * (1 +
+        train_balance)`` per hosted train vertex, so every scorer that
+        reads ``t_cal``/``placement_scores`` balances the labeled set
+        across machines, not just edges.  Defaults reproduce the plain
+        accounting bit for bit.
+        """
         p = cluster.p
         cnt = edge_incidence_counts(g, assign, p)
         member = cnt > 0
@@ -168,12 +185,26 @@ class PartitionState:
         c_com = cluster.c_com()
         replicas = member.sum(axis=0).astype(np.int64)
         com_sum = member.T.astype(np.float64) @ c_com
-        t_cal = cluster.c_node() * verts_per + cluster.c_edge() * edges_per
+        node_weight = None
+        if train_mask is not None and train_balance:
+            tm = np.asarray(train_mask, dtype=bool)
+            if tm.shape != (g.num_vertices,):
+                raise ValueError(
+                    f"train_mask must be ({g.num_vertices},) bool, got "
+                    f"shape {tm.shape}")
+            node_weight = 1.0 + float(train_balance) * tm.astype(np.float64)
+        if node_weight is None:
+            t_cal = (cluster.c_node() * verts_per
+                     + cluster.c_edge() * edges_per)
+        else:
+            t_cal = (cluster.c_node() * (member.astype(np.float64)
+                                         @ node_weight)
+                     + cluster.c_edge() * edges_per)
         t_com = t_com_from_membership(member, replicas, com_sum, c_com)
         return cls(g=g, cluster=cluster, assign=np.asarray(assign, dtype=np.int32).copy(),
                    cnt=cnt, edges_per=edges_per, verts_per=verts_per,
                    t_cal=t_cal, t_com=t_com, com_sum=com_sum,
-                   replicas=replicas)
+                   replicas=replicas, node_weight=node_weight)
 
     # -- objective views ----------------------------------------------------
     @property
@@ -225,7 +256,10 @@ class PartitionState:
         self.replicas[v] += 1
         self.com_sum[v] += c_com[i]
         self.verts_per[i] += 1
-        self.t_cal[i] += self._c_node[i]
+        if self.node_weight is None:
+            self.t_cal[i] += self._c_node[i]
+        else:
+            self.t_cal[i] += self._c_node[i] * self.node_weight[v]
 
     def _vertex_leave(self, i: int, v: int) -> None:
         c_com = self._c_com
@@ -236,7 +270,10 @@ class PartitionState:
         holders = holders[holders != i]
         self.t_com[holders] -= c_com[holders] + c_com[i]
         self.verts_per[i] -= 1
-        self.t_cal[i] -= self._c_node[i]
+        if self.node_weight is None:
+            self.t_cal[i] -= self._c_node[i]
+        else:
+            self.t_cal[i] -= self._c_node[i] * self.node_weight[v]
 
     def remove_edge(self, e: int) -> None:
         i = int(self.assign[e])
@@ -273,8 +310,9 @@ class PartitionState:
         dt = self._c_edge[i]
         for x in (int(u), int(v)):
             if self.cnt[i, x] == 0:
-                dt += (self._c_node[i]
-                       + self.replicas[x] * c_com[i] + self.com_sum[x])
+                c_n = (self._c_node[i] if self.node_weight is None
+                       else self._c_node[i] * self.node_weight[x])
+                dt += c_n + self.replicas[x] * c_com[i] + self.com_sum[x]
         return float(self.t_total[i] + dt)
 
     def mem_after(self, e: int, i: int) -> float:
@@ -304,7 +342,12 @@ class PartitionState:
         self.t_com += new - old
         dv = (mem_new.sum(axis=1) - mem_old.sum(axis=1)).astype(np.float64)
         self.verts_per += dv
-        self.t_cal += self._c_node * dv
+        if self.node_weight is None:
+            self.t_cal += self._c_node * dv
+        else:
+            dvw = ((mem_new.astype(np.float64) - mem_old.astype(np.float64))
+                   @ self.node_weight[A])
+            self.t_cal += self._c_node * dvw
 
     def remove_edges(self, es: np.ndarray) -> None:
         """Batch ``remove_edge`` over an edge-id array.
@@ -435,11 +478,16 @@ class PartitionState:
         free_v = self.cnt[np.ix_(cands, v)] == 0
         c_node = self._c_node[cands][:, None]
         c_com = self._c_com[cands][:, None]
+        if self.node_weight is None:
+            c_node_u = c_node_v = c_node
+        else:   # training-aware Eq. 3: per-endpoint weighted node charge
+            c_node_u = c_node * self.node_weight[u][None, :]
+            c_node_v = c_node * self.node_weight[v][None, :]
         # same summation order as the scalar oracle: c_edge, +u-term, +v-term
         dt = (self._c_edge[cands][:, None]
-              + free_u * (c_node + self.replicas[u][None, :] * c_com
+              + free_u * (c_node_u + self.replicas[u][None, :] * c_com
                           + self.com_sum[u][None, :])
-              + free_v * (c_node + self.replicas[v][None, :] * c_com
+              + free_v * (c_node_v + self.replicas[v][None, :] * c_com
                           + self.com_sum[v][None, :]))
         new_v = free_u.astype(np.float64) + free_v
         mem = (self.cluster.m_node * (self.verts_per[cands][:, None] + new_v)
@@ -486,7 +534,9 @@ class PartitionState:
         scorers never read the stale fields mid-stream.
         """
         assert es is not None, "PartitionState admission needs edge ids"
-        if verts_delta is None:
+        if verts_delta is None or self.node_weight is not None:
+            # the light path charges c_node per new vertex uniformly, which
+            # is wrong under a train-weighted Eq. 3 — take the exact path
             self.add_edges(es, ms)
             return
         np.add.at(self.cnt, (ms, u), 1)
@@ -505,6 +555,9 @@ class PartitionState:
         :meth:`admit_block`'s batch scaffolding.  Same staleness contract:
         Eq. 4 quantities wait for :meth:`refresh_costs`.
         """
+        if self.node_weight is not None:
+            self.add_edge(int(e), int(i))   # exact path, as in admit_block
+            return
         self.cnt[i, u] += 1
         self.cnt[i, v] += 1
         self.assign[e] = i
@@ -512,6 +565,12 @@ class PartitionState:
         self.verts_per[i] += verts_delta
         self.t_cal[i] += self._c_edge[i] + self._c_node[i] * verts_delta
         self._costs_stale = True
+
+    def train_counts(self, train_mask: np.ndarray) -> np.ndarray:
+        """(p,) count of train vertices each machine hosts a member of —
+        the numerator of the train-skew metric (max/mean of this)."""
+        tm = np.asarray(train_mask, dtype=bool)
+        return (self.cnt[:, tm] > 0).sum(axis=1).astype(np.int64)
 
     def refresh_costs(self) -> None:
         """Rebuild the Eq. 4 quantities after light-path admissions."""

@@ -63,12 +63,19 @@ class Partitioner:
     stream_fn: Callable | None = None   # graph-free out-of-core entry
     stream_knobs: tuple = ()            # keyword-knob names it accepts
 
+    def _knob_error(self, unknown: set, valid: tuple,
+                    entry: str = "") -> TypeError:
+        """Unknown-knob error naming the partitioner and its valid knobs."""
+        what = (f"valid knobs for {self.name!r}{entry}: {sorted(valid)}"
+                if valid else f"{self.name!r}{entry} accepts no knobs")
+        return TypeError(
+            f"partitioner {self.name!r}{entry} got unknown knob(s) "
+            f"{sorted(unknown)}; {what}")
+
     def __call__(self, g, cluster, **kw) -> np.ndarray:
         unknown = set(kw) - set(self.knobs)
         if unknown:
-            raise TypeError(
-                f"partitioner {self.name!r} accepts knobs {self.knobs}, "
-                f"got unknown {sorted(unknown)}")
+            raise self._knob_error(unknown, self.knobs)
         return self.fn(g, cluster, **kw)
 
     def stream(self, source, num_vertices=None, num_edges=None,
@@ -84,9 +91,7 @@ class Partitioner:
                 f"(capabilities: {sorted(self.capabilities)})")
         unknown = set(kw) - set(self.stream_knobs)
         if unknown:
-            raise TypeError(
-                f"partitioner {self.name!r} stream accepts knobs "
-                f"{self.stream_knobs}, got unknown {sorted(unknown)}")
+            raise self._knob_error(unknown, self.stream_knobs, " stream")
         return self.stream_fn(source, num_vertices, num_edges, cluster, **kw)
 
     def supports(self, capability: str) -> bool:

@@ -59,6 +59,54 @@ def _repair_unassigned(g: Graph, assign: np.ndarray, cluster: Cluster,
     return obj.assign
 
 
+def _train_rebalance(g: Graph, assign: np.ndarray, cluster: Cluster,
+                     orders: list[list[int]], train_mask: np.ndarray,
+                     mu: float, rounds: int = 3,
+                     slack: float = 1.05) -> np.ndarray:
+    """Spread the labeled/train vertex set across machines (GNN epochs
+    stress machines by hosted train vertices, not edges — cf. graphstorm's
+    ``--balance_train``).
+
+    Evicts the partition-local edges of the cheapest-to-move train
+    vertices on machines holding more than ``slack ×`` the mean train
+    count, then re-places them through the shared BalancedGreedyRepair
+    waves over a *train-weighted* :class:`PartitionState` (Eq. 3 charges
+    ``c_node·(1+mu)`` per hosted train vertex), so the repair itself
+    steers the replacements toward train-light machines.  Bounded and
+    monotone-ish: each round only touches overloaded machines; stops
+    early when none remain.
+    """
+    tm = np.asarray(train_mask, dtype=bool)
+    state = sls_mod.PartitionState.build(g, assign, cluster,
+                                         train_mask=tm, train_balance=mu)
+    train_ids = np.flatnonzero(tm)
+    if len(train_ids) == 0:
+        return state.assign
+    for _ in range(max(1, int(rounds))):
+        counts = state.train_counts(tm).astype(np.float64)
+        target = counts.mean() * slack
+        over = np.flatnonzero(counts > target + 1.0)
+        if len(over) == 0:
+            break
+        evict = []
+        for i in over:
+            held = train_ids[state.cnt[i, train_ids] > 0]
+            # cheapest-to-move first: fewest machine-i incident edges
+            held = held[np.argsort(state.cnt[i, held], kind="stable")]
+            n_drop = int(min(len(held), np.ceil(counts[i] - target)))
+            for v in held[:n_drop]:
+                eids = g.incident_edge_ids(int(v))
+                evict.append(eids[state.assign[eids] == i])
+        if not evict:
+            break
+        es = np.unique(np.concatenate(evict))
+        if len(es) == 0:
+            break
+        state.remove_edges(es)
+        sls_mod.repair_edges(state, es, orders)
+    return state.assign
+
+
 def windgp(
     g: Graph,
     cluster: Cluster,
@@ -74,12 +122,20 @@ def windgp(
     seed: int = 0,
     engine: str = "batched",
     repair: str = "vectorized",
+    train_mask: np.ndarray | None = None,
+    train_balance: float = 0.0,
+    train_rounds: int = 3,
     **engine_kw,
 ) -> WindGPResult:
     """Run WindGP (or one of its ablations) and evaluate the TC metric.
 
     ``repair`` selects SLS's destroy-repair sweep: the vectorized wave
     implementation (default) or the per-edge ``"scalar"`` oracle.
+    ``train_mask`` + ``train_balance`` > 0 append the training-aware
+    rebalance pass (:func:`_train_rebalance`): machines then balance
+    hosted labeled vertices as well as Eq. 3/4 cost — the knob GNN
+    minibatch sampling needs so every machine draws comparable seed
+    batches.
     """
     assert level in ("windgp-", "windgp*", "windgp+", "windgp")
     assert engine in exp.ENGINES, engine
@@ -131,6 +187,14 @@ def windgp(
             engine=engine, repair=repair, **engine_kw)
     phases["sls"] = time.perf_counter() - t0_
 
+    # Phase 4 (optional): training-aware rebalance.
+    if train_mask is not None and train_balance:
+        t0_ = time.perf_counter()
+        assign = _train_rebalance(g, assign, cluster, orders, train_mask,
+                                  float(train_balance),
+                                  rounds=int(train_rounds))
+        phases["train_balance"] = time.perf_counter() - t0_
+
     stats = evaluate(g, assign, cluster)
     return WindGPResult(
         assign=assign, stats=stats, deltas=np.asarray(deltas),
@@ -145,7 +209,8 @@ from .partitioners import Partitioner, register  # noqa: E402
 
 _DRIVER_KNOBS = ("alpha", "beta", "gamma", "theta", "t0", "n0", "k",
                  "level", "seed", "repair", "scale", "batch_frac",
-                 "batch_window", "strict_ties", "hub_split", "hub_degree")
+                 "batch_window", "strict_ties", "hub_split", "hub_degree",
+                 "train_mask", "train_balance", "train_rounds")
 
 
 def _windgp_assign(engine=None):

@@ -281,7 +281,8 @@ def run_bsp_cells(out: str, skip_done: bool = False) -> int:
 
     g = rmat(9, seed=2)
     cl = scaled_paper_cluster(2, 6, g.num_edges)      # p = 8 machines
-    rt = PartitionRuntime.build(g, windgp(g, cl, t0=2).assign, cl.p)
+    rt = PartitionRuntime.create(g, assign=windgp(g, cl, t0=2).assign,
+                                 cluster=cl)
     mesh = make_mesh((cl.p,), ("machines",))
     os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
     done = set()

@@ -193,18 +193,18 @@ def main(argv=None):
         print(f"wrote {args.out}")
     if args.pagerank:
         from ..bsp import PartitionRuntime
-        rt = PartitionRuntime.build(g, assign, cl.p)
+        rt = PartitionRuntime.create(g, assign=assign, cluster=cl)
         _run_pagerank(rt, args)
     return 0
 
 
 def _run_pagerank(rt, args) -> None:
     """Distributed PageRank on the fresh partition via --backend."""
-    from ..bsp import pagerank
+    from ..bsp import RunOptions, pagerank
+    opts = RunOptions(backend=args.backend, fused=args.fused, tol=args.tol,
+                      message_dtype=args.message_dtype)
     t0 = time.perf_counter()
-    pr, actives = pagerank(rt, num_iters=args.pagerank_iters,
-                           backend=args.backend, fused=args.fused,
-                           tol=args.tol, message_dtype=args.message_dtype)
+    pr, actives = pagerank(rt, num_iters=args.pagerank_iters, options=opts)
     dt = time.perf_counter() - t0
     top = np.argsort(pr)[::-1][:5]
     steps = len(actives)
@@ -320,7 +320,7 @@ def _run_stream(ap, args) -> int:
               f"(E={meta['num_edges']}, rf={meta['replication_factor']})")
         if args.pagerank:
             from ..bsp import PartitionRuntime
-            rt = PartitionRuntime.from_stream(sa)
+            rt = PartitionRuntime.create(sa)
             _run_pagerank(rt, args)
     return 0
 

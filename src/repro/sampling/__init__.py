@@ -1,0 +1,27 @@
+"""Partitioned GNN minibatch sampling over the BSP runtime's shards.
+
+Full-graph BSP sweeps touch every edge every superstep; GNN training hits
+the same partition with k-hop *neighbor sampling* — many small frontier
+expansions against machine-local adjacency, where every frontier vertex
+owned by another machine is a cross-machine ("halo") fetch.  This package
+makes partition quality directly observable on that workload:
+
+* :mod:`~repro.sampling.machine_csc` — per-machine CSC adjacency packed
+  one shard at a time from the runtime/stream state, with the degree-
+  sorted local relabeling idiom of :class:`~repro.bsp.partition_runtime.
+  LocalBSR`.
+* :mod:`~repro.sampling.sampler` — vectorized jax fixed-fanout sampling
+  (with-replacement fast path, without-replacement exact path) pinned
+  bitwise against a NumPy oracle on the same PRNG key.
+* :mod:`~repro.sampling.service` — k-hop minibatch sampling with
+  ``jax.random`` key threading and per-hop batched halo-fetch
+  accounting.
+
+The layer consumes runtimes only through ``PartitionRuntime.create``.
+"""
+from .machine_csc import MachineCSC
+from .sampler import sample_fanout, sample_fanout_np
+from .service import HopStats, MiniBatch, SamplingService
+
+__all__ = ["MachineCSC", "sample_fanout", "sample_fanout_np",
+           "HopStats", "MiniBatch", "SamplingService"]

@@ -1,0 +1,111 @@
+"""Vectorized fixed-fanout neighbor sampling (jax) + its NumPy oracle.
+
+Both paths draw from the same ``jax.random`` key, so the oracle is a
+*bitwise* pin, not a statistical one:
+
+* **with replacement** (fast path): one ``(B, fanout)`` uniform draw;
+  neighbor index = ``floor(u * degree)`` clamped to the row — a single
+  gather, no per-row work.
+* **without replacement** (exact path): one ``(B, width)`` uniform draw;
+  each row keeps its first ``degree`` uniforms, masks the rest to +inf,
+  and takes the ``fanout`` smallest by stable argsort — exactly a uniform
+  random permutation prefix of the true neighbor list (every neighbor's
+  key is i.i.d. uniform, so any ordering is equally likely).
+
+Rows are indices into a padded ``(R, D)`` neighbor table (``-1``-padded,
+as :class:`~repro.sampling.machine_csc.MachineCSC` packs it).  Invalid
+rows (``row < 0``) and zero-degree rows sample ``-1`` everywhere; rows
+with ``degree < fanout`` pad their tail with ``-1`` in the
+without-replacement path (a fanout draw never repeats a neighbor).
+
+The NumPy oracle re-implements both selection rules with per-row Python
+loops over the *same* uniforms — an independent derivation of the same
+bits, which the smoke gate and the determinism tests compare bitwise.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.partial(jax.jit, static_argnames=("fanout", "replace"))
+def _sample_jit(table, deg, rows, key, fanout, replace):
+    R, D = table.shape
+    B = rows.shape[0]
+    safe = jnp.clip(rows, 0, R - 1)
+    d = jnp.where(rows >= 0, deg[safe], 0)                    # (B,)
+    if replace:
+        u = jax.random.uniform(key, (B, fanout))
+        # floor(u * d) < d for exact arithmetic; the clamp guards the
+        # float32 rounding edge u*d == d.  Zero-degree rows mask below.
+        idx = (u * d[:, None]).astype(jnp.int32)
+        idx = jnp.minimum(idx, jnp.maximum(d[:, None] - 1, 0))
+        out = jnp.take_along_axis(table[safe], idx, axis=1)
+        return jnp.where(d[:, None] > 0, out, -1)
+    width = max(D, fanout)
+    u = jax.random.uniform(key, (B, width))
+    live = jnp.arange(width)[None, :] < d[:, None]
+    keyed = jnp.where(live, u, jnp.inf)
+    order = jnp.argsort(keyed, axis=1)[:, :fanout]            # stable
+    padded = table[safe]
+    if width > D:
+        padded = jnp.pad(padded, ((0, 0), (0, width - D)),
+                         constant_values=-1)
+    out = jnp.take_along_axis(padded, order, axis=1)
+    live_out = jnp.arange(fanout)[None, :] < jnp.minimum(d, fanout)[:, None]
+    return jnp.where(live_out, out, -1)
+
+
+def sample_fanout(table, deg, rows, key, fanout: int, *,
+                  replace: bool = False):
+    """Sample ``fanout`` neighbors for each of ``rows`` from ``table``.
+
+    ``table`` — (R, D) int32 padded neighbor lists (global ids, -1 pad);
+    ``deg`` — (R,) true neighbor count per row; ``rows`` — (B,) row
+    indices, ``-1`` for invalid/remote-unresolved entries.  Returns
+    (B, fanout) int32 sampled global ids, ``-1`` where no sample exists.
+    """
+    return _sample_jit(jnp.asarray(table), jnp.asarray(deg),
+                       jnp.asarray(rows, dtype=jnp.int32), key,
+                       int(fanout), bool(replace))
+
+
+def sample_fanout_np(table, deg, rows, key, fanout: int, *,
+                     replace: bool = False) -> np.ndarray:
+    """NumPy oracle for :func:`sample_fanout` — same key, same bits,
+    per-row Python loops; the jax path must match it bitwise."""
+    table = np.asarray(table)
+    deg = np.asarray(deg)
+    rows = np.asarray(rows)
+    B, D = len(rows), table.shape[1]
+    fanout = int(fanout)
+    out = np.full((B, fanout), -1, dtype=np.int32)
+    if replace:
+        u = np.asarray(jax.random.uniform(key, (B, fanout)))
+        for b in range(B):
+            r = int(rows[b])
+            if r < 0:
+                continue
+            d = int(deg[r])
+            if d == 0:
+                continue
+            for j in range(fanout):
+                idx = min(int(np.float32(u[b, j]) * np.float32(d)), d - 1)
+                out[b, j] = table[r, idx]
+        return out
+    width = max(D, fanout)
+    u = np.asarray(jax.random.uniform(key, (B, width)))
+    for b in range(B):
+        r = int(rows[b])
+        if r < 0:
+            continue
+        d = int(deg[r])
+        keyed = u[b].copy()
+        keyed[d:] = np.inf
+        order = np.argsort(keyed, kind="stable")
+        for j in range(min(d, fanout)):
+            out[b, j] = table[r, order[j]]
+    return out

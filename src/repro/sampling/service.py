@@ -1,0 +1,153 @@
+"""K-hop minibatch sampling service with per-hop halo-fetch accounting.
+
+One :class:`SamplingService` wraps a partition (via
+``PartitionRuntime.create`` — the only constructor surface this layer
+uses) as an owner-partitioned :class:`~repro.sampling.machine_csc.
+MachineCSC` plus device-resident flat tables, and answers minibatch
+requests: seeds → ``fanouts[0]`` neighbors each → ``fanouts[1]``
+neighbors of those → …, threading one ``jax.random`` key through
+``jax.random.split`` per hop, so the whole minibatch is a pure function
+of ``(partition, seeds, key)`` — bitwise reproducible across runs and
+across equal-content runtimes, however they were built.
+
+Halo accounting: after each hop, the new frontier's vertices that are
+*not* owned by the sampling machine would be resolved by one batched
+cross-machine fetch of their owner rows (deduplicated per hop — the
+replica-table analogue for the sampling workload).  The per-hop
+``halo_frac`` is the fraction of valid frontier entries that are remote:
+exactly the traffic a better partition (lower RF, stronger locality)
+shrinks, which is what makes partition quality observable on this
+workload.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from ..bsp.partition_runtime import PartitionRuntime
+from .machine_csc import MachineCSC
+from .sampler import sample_fanout
+
+
+@dataclasses.dataclass(frozen=True)
+class HopStats:
+    """Fetch accounting for one hop's *output* frontier."""
+
+    frontier: int        # valid sampled entries entering the next hop
+    halo: int            # of those, entries owned by a remote machine
+    fetched_unique: int  # deduplicated remote rows one batch fetch pulls
+
+    @property
+    def halo_frac(self) -> float:
+        return self.halo / max(1, self.frontier)
+
+
+@dataclasses.dataclass(frozen=True)
+class MiniBatch:
+    """One sampled k-hop neighborhood batch.
+
+    ``hops[h]`` holds hop ``h``'s sampled global ids, flattened to
+    ``(len(seeds) * prod(fanouts[:h+1]),)`` with ``-1`` for pad lanes
+    (isolated/undersized neighborhoods propagate ``-1`` forward, keeping
+    every hop's shape fixed — jit retraces once per hop shape).
+    """
+
+    seeds: np.ndarray
+    hops: tuple
+    hop_stats: tuple
+    home: int | None
+
+    def halo_fracs(self) -> tuple:
+        return tuple(s.halo_frac for s in self.hop_stats)
+
+    def num_sampled(self) -> int:
+        return int(sum(s.frontier for s in self.hop_stats))
+
+
+class SamplingService:
+    """Fixed-fanout k-hop neighbor sampling over a partitioned graph."""
+
+    def __init__(self, rt: PartitionRuntime | MachineCSC,
+                 fanouts=(10, 5), *, replace: bool = False):
+        self.csc = rt if isinstance(rt, MachineCSC) else MachineCSC.build(rt)
+        self.fanouts = tuple(int(f) for f in fanouts)
+        if not self.fanouts or any(f < 1 for f in self.fanouts):
+            raise ValueError(f"fanouts must be positive ints, got "
+                             f"{self.fanouts}")
+        self.replace = bool(replace)
+        csc = self.csc
+        # machine-stacked flat tables: row of vertex v = owner*Omax+row[v]
+        import jax.numpy as jnp
+        self._table = jnp.asarray(
+            csc.nbr.reshape(csc.p * csc.omax, csc.max_degree))
+        self._deg = jnp.asarray(csc.deg.reshape(-1))
+        self._rowmap = csc.flat_rowmap()                  # np (V,)
+        self._owner = csc.owner
+
+    @classmethod
+    def create(cls, source=None, *, fanouts=(10, 5), replace: bool = False,
+               **create_kw) -> "SamplingService":
+        """Build straight from any ``PartitionRuntime.create`` source:
+        ``create(source=g, method="windgp", cluster=cl)``,
+        ``create(source=g, assign=a, p=p)``, or
+        ``create(source=stream_assignment_or_path)``."""
+        rt = PartitionRuntime.create(source, **create_kw)
+        return cls(rt, fanouts=fanouts, replace=replace)
+
+    @property
+    def p(self) -> int:
+        return self.csc.p
+
+    def local_seeds(self, home: int, n: int, key,
+                    train_mask: np.ndarray | None = None) -> np.ndarray:
+        """``n`` seed vertices owned by machine ``home`` — a uniform
+        key-deterministic draw from its owned (optionally train-masked)
+        vertex set.  Seeds are where minibatches start in DistDGL-style
+        training: each trainer draws from its own machine's shard."""
+        pool = self.csc.owned_gid[home][:int(self.csc.owned_per[home])]
+        if train_mask is not None:
+            tm = np.asarray(train_mask, dtype=bool)
+            pool = pool[tm[pool]]
+        if len(pool) == 0:
+            return np.empty(0, dtype=np.int32)
+        perm = np.asarray(jax.random.permutation(key, len(pool)))
+        return pool[perm[:int(n)]].astype(np.int32)
+
+    def sample(self, seeds, key, home: int | None = None) -> MiniBatch:
+        """Sample the k-hop neighborhood of ``seeds`` (global vertex ids).
+
+        ``home`` is the machine running the batch: per hop, sampled
+        vertices owned elsewhere count as halo fetches (``hop_stats``).
+        ``key`` is split once per hop; the same ``(seeds, key)`` always
+        yields the bitwise-same minibatch.
+        """
+        frontier = np.asarray(seeds, dtype=np.int32).reshape(-1)
+        V = self.csc.num_vertices
+        if len(frontier) and (frontier.max() >= V):
+            raise ValueError(f"seed ids must lie in [0, {V})")
+        hops, stats = [], []
+        for fanout in self.fanouts:
+            key, sub = jax.random.split(key)
+            valid = frontier >= 0
+            rows = np.where(valid,
+                            self._rowmap[np.clip(frontier, 0, V - 1)], -1)
+            out = np.asarray(sample_fanout(
+                self._table, self._deg, rows, sub, fanout,
+                replace=self.replace)).reshape(-1)
+            ok = out >= 0
+            if home is None:
+                halo = np.zeros(0, dtype=np.int32)
+                n_halo = 0
+            else:
+                remote = ok & (self._owner[np.clip(out, 0, V - 1)] != home)
+                halo = out[remote]
+                n_halo = int(remote.sum())
+            stats.append(HopStats(frontier=int(ok.sum()), halo=n_halo,
+                                  fetched_unique=len(np.unique(halo))))
+            hops.append(out)
+            frontier = out
+        return MiniBatch(seeds=np.asarray(seeds, dtype=np.int32),
+                         hops=tuple(hops), hop_stats=tuple(stats),
+                         home=home)
