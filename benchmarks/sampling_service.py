@@ -1,21 +1,48 @@
-"""GNN minibatch sampling throughput + halo-fetch fraction vs partitioner.
+"""GNN minibatch sampling: throughput, halo fraction, cache, prefetch.
 
 The sampling service (``repro.sampling``) is the workload partition
 quality is *for* in GNN training: every minibatch expands a k-hop
 neighborhood against machine-owned CSC shards, and each frontier vertex
 owned elsewhere is a cross-machine halo fetch.  This benchmark makes
-that observable:
+that observable end-to-end, including the feature tensor path:
 
 * ``--smoke`` (the tier-2 ``sampling`` CI job) gates
   - the jax sampler against its NumPy oracle — bitwise on the same key,
     both with- and without-replacement;
+  - the fused k-hop dispatch against the hop-at-a-time reference loop —
+    bitwise on the LJ proxy, and >= 3x its minibatch throughput (the
+    reference keeps the original per-hop dispatch pattern + argsort
+    selection, so the ratio measures what fusion + the top_k lowering
+    buy);
   - halo-fetch fraction on the LJ proxy: windgp (locality-optimized)
     must beat hash (locality-free) strictly, with hdrf in between as
     context;
+  - the halo feature cache: cached resolve bitwise == uncached; at an
+    equal pure-LRU budget windgp's hit rate >= hash's and its miss
+    traffic per sampled vertex is strictly lower (locality must reach
+    the feature path too; hub-tier hit rates ride along tracked —
+    a degree-ranked hub tier pins what hash fails to localize, so it
+    compresses the conditional-hit-rate spread between methods);
+  - prefetch-pipeline determinism: depth 0 and depth 2 produce bitwise
+    identical (batch, features) streams (speedup recorded, ungated —
+    CI runners time-slice threads);
   - the training-aware knob: ``train_balance`` must reduce the
     max/mean train-vertex skew vs the unbalanced default;
-  - samples/sec on the LJ proxy (tracked, ungated — CI walls drift).
+  - samples/sec on the LJ proxy, median of 5 — one-sided floor in the
+    trend baseline (see below).
+* ``--pipeline`` times sync (depth=0) vs prefetch at depth in {1,2,4}.
+* ``--cache-study`` sweeps hit-rate and miss-traffic vs budget per
+  partitioner, pure-LRU and with a half-budget static hub tier.
 * ``--full`` adds samples/sec vs machine count and a fanout sweep.
+
+Wall-clock variance: the samples/sec floor was promoted from
+tracked-ungated after characterizing the smoke job's spread — 5
+back-to-back in-process repeats land within ~5% IQR/median on the dev
+container, and cross-run medians within ~15%; CI hardware differs from
+the container by up to ~2x, so the baseline floor sits at ~3x below the
+dev-container median (one-sided: only a collapse fails, faster runners
+never do).  The per-run IQR fraction rides along tracked-ungated so the
+tolerance itself stays observable.
 
 Run:  PYTHONPATH=src python -m benchmarks.sampling_service --smoke \
           --json BENCH_smoke.json
@@ -31,17 +58,33 @@ from repro.core import scaled_paper_cluster
 from repro.core.partition_state import edge_incidence_counts
 from repro.core.partitioners import get as partitioner
 from repro.data import rmat
-from repro.sampling import SamplingService, sample_fanout, sample_fanout_np
+from repro.sampling import (FeatureStore, HaloCache, PrefetchPipeline,
+                            SamplingService, sample_fanout,
+                            sample_fanout_np)
 
-from .common import CSV, cluster_for, dataset, median_iqr, write_bench_json
+from .common import (CSV, cluster_for, dataset, median_iqr, repeat_timed,
+                     write_bench_json)
 
 FANOUTS = (10, 5)
 BATCH = 64
+FEAT_DIM = 64
+
+METHOD_KNOBS = (("windgp", dict(t0=8, alpha=0.1, beta=0.1)),
+                ("hdrf", {}), ("hash", {}))
 
 
 def _service(g, cl, method, fanouts=FANOUTS, **knobs) -> SamplingService:
     return SamplingService.create(g, method=method, cluster=cl,
                                   fanouts=fanouts, **knobs)
+
+
+def _store(svc: SamplingService, feat_dim: int = FEAT_DIM) -> FeatureStore:
+    """Deterministic synthetic features — same bits for every method, so
+    cache/hit comparisons isolate the partition, not the data."""
+    rng = np.random.default_rng(0)
+    feats = rng.standard_normal(
+        (svc.csc.num_vertices, feat_dim)).astype(np.float32)
+    return FeatureStore.build(svc, feats)
 
 
 def _halo_stats(svc: SamplingService, key, batches: int = 2):
@@ -63,14 +106,16 @@ def _halo_stats(svc: SamplingService, key, batches: int = 2):
     return halo / max(1, frontier), sampled
 
 
-def _samples_per_sec(svc: SamplingService, key, batches: int = 6) -> float:
+def _samples_per_sec(svc: SamplingService, key, batches: int = 6,
+                     fused: bool = True) -> float:
     """Warm-started sampling throughput on machine 0's seeds."""
     seeds = svc.local_seeds(0, BATCH, jax.random.fold_in(key, 999))
-    svc.sample(seeds, key, home=0)           # compile/warm the hop shapes
+    svc.sample(seeds, key, home=0, fused=fused)   # compile/warm the shapes
     t0 = time.perf_counter()
     n = 0
     for b in range(batches):
-        mb = svc.sample(seeds, jax.random.fold_in(key, b), home=0)
+        mb = svc.sample(seeds, jax.random.fold_in(key, b), home=0,
+                        fused=fused)
         n += mb.num_sampled()
     return n / max(time.perf_counter() - t0, 1e-9)
 
@@ -80,6 +125,57 @@ def _train_skew(g, assign, p, train_mask) -> float:
     member = edge_incidence_counts(g, assign, p) > 0
     counts = member[:, train_mask].sum(axis=1).astype(np.float64)
     return float(counts.max() / max(counts.mean(), 1e-9))
+
+
+def _pipeline_bps(svc, store, depth: int, num_batches: int, key,
+                  cache_budget: int = 1024) -> float:
+    """Batches/sec through a fresh pipeline at the given depth (its own
+    cache, so every depth sees the identical cold-start sequence)."""
+    cache = HaloCache.for_home(store, 0, capacity=cache_budget)
+    with PrefetchPipeline(svc, home=0, batch_size=BATCH,
+                          num_batches=num_batches, key=key, depth=depth,
+                          store=store, cache=cache) as pl:
+        next(pl)                      # warm compile outside the clock
+        t0 = time.perf_counter()
+        n = sum(1 for _ in pl)
+    return n / max(time.perf_counter() - t0, 1e-9)
+
+
+def _cache_run(svc, store, budget: int, key, batches: int = 4,
+               hub_frac: float = 0.0):
+    """(hit_rate, misses_per_sampled) over every machine's batch stream
+    at one cache budget (fresh per-home caches — DistDGL's one-cache-
+    per-trainer shape).  ``hit_rate`` is conditional on an access being
+    remote; ``misses_per_sampled`` is the actual fetch traffic per
+    sampled vertex, which also credits a partition for having fewer
+    remote accesses in the first place."""
+    hits = misses = sampled = 0
+    for home in range(svc.p):
+        if svc.csc.owned_per[home] == 0:
+            continue
+        cache = HaloCache.for_home(store, home, capacity=budget,
+                                   hub_frac=hub_frac)
+        for b in range(batches):
+            k_seed, k_hop = jax.random.split(
+                jax.random.fold_in(jax.random.fold_in(key, home), b))
+            seeds = svc.local_seeds(home, BATCH, k_seed)
+            mb = svc.sample(seeds, k_hop, home=home)
+            _, st = store.gather(mb.all_ids(), home, cache)
+            hits += st.hits
+            misses += st.misses
+            sampled += mb.num_sampled()
+    return hits / max(1, hits + misses), misses / max(1, sampled)
+
+
+def _assert_batch_equal(a, b, what: str) -> None:
+    (ma, fa), (mb, fb) = a, b
+    assert np.array_equal(ma.seeds, mb.seeds), what
+    for ha, hb in zip(ma.hops, mb.hops):
+        assert np.array_equal(ha, hb), what
+    assert ma.hop_stats == mb.hop_stats, what
+    assert (fa is None) == (fb is None), what
+    if fa is not None:
+        assert np.array_equal(fa, fb), what
 
 
 def run_smoke(json_path: str | None = None) -> dict:
@@ -108,18 +204,14 @@ def run_smoke(json_path: str | None = None) -> dict:
     # -- halo-fetch fraction vs partitioner on the LJ proxy ----------------
     g = dataset("LJ", True)
     cl = cluster_for("LJ", g)
-    halo = {}
-    for method, knobs in (("windgp", dict(t0=8, alpha=0.1, beta=0.1)),
-                          ("hdrf", {}), ("hash", {})):
+    halo, services = {}, {}
+    for method, knobs in METHOD_KNOBS:
         svc = _service(g, cl, method, **knobs)
+        services[method] = svc
         frac, _ = _halo_stats(svc, jax.random.fold_in(key, 1))
         halo[method] = frac
         csv.row(f"lj/halo/{method}", 0, f"halo_frac={frac:.4f}")
         metrics[f"sampling/halo/{method}"] = frac
-        if method == "windgp":
-            rate = _samples_per_sec(svc, jax.random.fold_in(key, 2))
-            csv.row("lj/windgp/throughput", 0, f"{rate/1e6:.2f}Msamples/s")
-            metrics["sampling/samples_per_sec"] = rate
     ratio = halo["windgp"] / max(halo["hash"], 1e-9)
     csv.row("lj/halo/windgp_vs_hash", 0, f"ratio={ratio:.3f}")
     assert halo["windgp"] < halo["hash"], (
@@ -127,6 +219,119 @@ def run_smoke(json_path: str | None = None) -> dict:
         f"hash {halo['hash']:.4f} — partition locality is not reaching "
         f"the sampling workload")
     metrics["sampling/halo/windgp_vs_hash"] = ratio
+
+    # -- fused k-hop dispatch: bitwise == per-hop loop, and >= 3x ----------
+    svc = services["windgp"]
+    seeds = svc.local_seeds(0, BATCH, jax.random.fold_in(key, 5))
+    k_hop = jax.random.fold_in(key, 6)
+    fused_gap = 0
+    a = svc.sample(seeds, k_hop, home=0, fused=True)
+    b = svc.sample(seeds, k_hop, home=0, fused=False)
+    for ha, hb in zip(a.hops, b.hops):
+        fused_gap += int((ha != hb).sum())
+    fused_gap += int(a.hop_stats != b.hop_stats)
+    assert fused_gap == 0, (
+        f"fused k-hop path diverges from the hop-at-a-time reference on "
+        f"{fused_gap} entries — must be bitwise")
+    rate_fused = _samples_per_sec(svc, jax.random.fold_in(key, 2))
+    rate_loop = _samples_per_sec(svc, jax.random.fold_in(key, 2),
+                                 batches=3, fused=False)
+    fused_x = rate_fused / max(rate_loop, 1e-9)
+    csv.row("lj/fused", 0, f"gap={fused_gap} speedup={fused_x:.1f}x")
+    metrics["sampling/fused_gap"] = fused_gap
+    metrics["sampling/fused_speedup"] = fused_x
+    assert fused_x >= 3.0, (
+        f"fused k-hop sampling only {fused_x:.2f}x the per-hop reference "
+        f"loop on the LJ proxy (gate: >= 3x)")
+
+    # -- samples/sec: median of 5 (the promoted one-sided floor) -----------
+    bench_seeds = svc.local_seeds(0, BATCH, jax.random.fold_in(key, 999))
+
+    def burst(n_batches: int = 6) -> int:
+        n = 0
+        for b in range(n_batches):
+            n += svc.sample(bench_seeds, jax.random.fold_in(key, b),
+                            home=0).num_sampled()
+        return n
+
+    burst(1)                                   # warm the hop shapes
+    n_sampled, times = repeat_timed(burst, 5)
+    med_t, iqr_t = median_iqr(times)
+    rate = n_sampled / max(med_t, 1e-9)
+    csv.row("lj/windgp/throughput", med_t,
+            f"{rate/1e6:.2f}Msamples/s iqr_frac={iqr_t/med_t:.3f}")
+    metrics["sampling/samples_per_sec"] = rate
+    metrics["sampling/samples_per_sec_iqr_frac"] = iqr_t / med_t
+
+    # -- feature halo cache: bitwise correct; windgp beats hash on both
+    #    LRU hit rate (at a working-set-sized budget) and miss traffic
+    #    per sampled vertex.  The gates run pure-LRU (hub_frac=0):
+    #    a degree-ranked hub tier pins exactly the vertices hash fails
+    #    to localize, so it equalizes methods' *conditional* hit rates —
+    #    hub-tier numbers ride along tracked-ungated as context, and the
+    #    traffic metric (which also credits windgp for having fewer
+    #    remote accesses at all) favors windgp at every configuration.
+    budget = 2048
+    hits, mps, hub_hits = {}, {}, {}
+    for method, _ in METHOD_KNOBS:
+        svc = services[method]
+        store = _store(svc)
+        if method == "windgp":        # cached resolve == uncached, bitwise
+            mb = svc.sample(seeds, k_hop, home=0)
+            cache = HaloCache.for_home(store, 0, capacity=budget)
+            got, _ = store.gather(mb.all_ids(), 0, cache)
+            want = store.gather_global(mb.all_ids())
+            assert np.array_equal(got, want), \
+                "cached feature resolve diverges from the uncached gather"
+        hits[method], mps[method] = _cache_run(
+            svc, store, budget, jax.random.fold_in(key, 3),
+            batches=4, hub_frac=0.0)
+        hub_hits[method], _ = _cache_run(
+            svc, store, budget, jax.random.fold_in(key, 3),
+            batches=4, hub_frac=0.5)
+        csv.row(f"lj/cache/{method}", 0,
+                f"lru_hit={hits[method]:.3f} "
+                f"miss_per_sampled={mps[method]:.4f} "
+                f"hub_hit={hub_hits[method]:.3f} budget={budget}")
+        metrics[f"sampling/cache/hit/{method}"] = hits[method]
+        metrics[f"sampling/cache/mps/{method}"] = mps[method]
+        metrics[f"sampling/cache/hub_hit/{method}"] = hub_hits[method]
+    hit_ratio = hits["windgp"] / max(hits["hash"], 1e-9)
+    traffic_ratio = mps["windgp"] / max(mps["hash"], 1e-9)
+    csv.row("lj/cache/windgp_vs_hash", 0,
+            f"hit_ratio={hit_ratio:.3f} traffic_ratio={traffic_ratio:.3f}")
+    assert hits["windgp"] >= hits["hash"], (
+        f"windgp LRU cache hit rate {hits['windgp']:.3f} below hash "
+        f"{hits['hash']:.3f} at equal budget {budget} — partition "
+        f"locality is not reaching the feature path")
+    assert mps["windgp"] < mps["hash"], (
+        f"windgp miss traffic {mps['windgp']:.4f} rows/sampled-vertex not "
+        f"below hash {mps['hash']:.4f} at equal budget {budget}")
+    metrics["sampling/cache/windgp_vs_hash_hit"] = hit_ratio
+    metrics["sampling/cache/windgp_vs_hash_traffic"] = traffic_ratio
+
+    # -- prefetch pipeline: depth 0 == depth 2 bitwise; speedup tracked ----
+    svc = services["windgp"]
+    store = _store(svc)
+    streams = {}
+    for depth in (0, 2):
+        cache = HaloCache.for_home(store, 0, capacity=budget)
+        with PrefetchPipeline(svc, home=0, batch_size=32, num_batches=4,
+                              key=jax.random.fold_in(key, 8), depth=depth,
+                              store=store, cache=cache) as pl:
+            streams[depth] = list(pl)
+    for i, (a_, b_) in enumerate(zip(streams[0], streams[2])):
+        _assert_batch_equal(
+            a_, b_, f"pipeline depth 0 vs 2 diverge at batch {i}")
+    sync_bps = _pipeline_bps(svc, store, 0, 6, jax.random.fold_in(key, 9))
+    d2_bps = _pipeline_bps(svc, store, 2, 6, jax.random.fold_in(key, 9))
+    csv.row("lj/pipeline", 0,
+            f"sync={sync_bps:.1f}b/s depth2={d2_bps:.1f}b/s "
+            f"speedup={d2_bps/max(sync_bps,1e-9):.2f}x")
+    metrics["sampling/pipeline/sync_bps"] = sync_bps
+    metrics["sampling/pipeline/depth2_bps"] = d2_bps
+    metrics["sampling/pipeline/speedup_d2"] = \
+        d2_bps / max(sync_bps, 1e-9)
 
     # -- training-aware balance knob ---------------------------------------
     g = rmat(11, edge_factor=7, seed=42)
@@ -153,6 +358,61 @@ def run_smoke(json_path: str | None = None) -> dict:
     return metrics
 
 
+def run_pipeline(repeats: int = 3) -> None:
+    """Batches/sec sync vs prefetch at depth in {1, 2, 4} on the LJ
+    proxy (windgp partition, feature store + 1024-row halo cache)."""
+    csv = CSV("sampling_pipeline")
+    key = jax.random.PRNGKey(0)
+    g = dataset("LJ", True)
+    cl = cluster_for("LJ", g)
+    svc = _service(g, cl, "windgp", **dict(METHOD_KNOBS)["windgp"])
+    store = _store(svc)
+    base = None
+    for depth in (0, 1, 2, 4):
+        rates = [_pipeline_bps(svc, store, depth, 10,
+                               jax.random.fold_in(key, r))
+                 for r in range(repeats)]
+        med, iqr = median_iqr(rates)
+        if depth == 0:
+            base = med
+        csv.row(f"lj/depth{depth}", 0,
+                f"{med:.1f}b/s iqr={iqr:.1f} "
+                f"speedup={med/max(base,1e-9):.2f}x")
+
+
+def run_cache_study(batches: int = 4) -> None:
+    """Hit-rate + miss-traffic vs cache-budget curves per partitioner on
+    the LJ proxy, at pure LRU (hub_frac=0) and with a half-budget static
+    hub tier (hub_frac=0.5).
+
+    Reading the curves: the hub tier raises *every* method's hit rate —
+    it pins the globally hottest remote vertices, which is exactly what
+    hash fails to localize, so it compresses the conditional-hit-rate
+    spread between methods.  Partition locality shows up in (a) the pure-
+    LRU hit rate once the budget covers the remote working set (windgp's
+    boundary set is smaller and revisited more), and (b) miss traffic
+    per sampled vertex, where windgp wins at every budget and hub_frac
+    because it also makes fewer remote accesses in the first place.
+    Every curve's miss count is bounded by the summed per-hop
+    ``fetched_unique`` stats (the zero-cache ceiling)."""
+    csv = CSV("sampling_cache")
+    key = jax.random.PRNGKey(0)
+    g = dataset("LJ", True)
+    cl = cluster_for("LJ", g)
+    budgets = (128, 256, 512, 1024, 2048, 4096)
+    for method, knobs in METHOD_KNOBS:
+        svc = _service(g, cl, method, **knobs)
+        store = _store(svc)
+        for hub_frac in (0.0, 0.5):
+            curve = []
+            for budget in budgets:
+                hit, mps = _cache_run(svc, store, budget,
+                                      jax.random.fold_in(key, 3),
+                                      batches, hub_frac=hub_frac)
+                curve.append(f"hit@{budget}={hit:.3f}/mps={mps:.4f}")
+            csv.row(f"lj/{method}/hub{hub_frac:g}", 0, " ".join(curve))
+
+
 def run_full(repeats: int = 3) -> None:
     """Samples/sec vs machine count + halo per hop, windgp vs hdrf vs
     hash on the LJ proxy."""
@@ -174,8 +434,7 @@ def run_full(repeats: int = 3) -> None:
 
     # per-hop halo by partitioner at the paper cluster
     cl = cluster_for("LJ", g)
-    for method, knobs in (("windgp", dict(t0=8, alpha=0.1, beta=0.1)),
-                          ("hdrf", {}), ("hash", {})):
+    for method, knobs in METHOD_KNOBS:
         svc = _service(g, cl, method, **knobs)
         seeds = svc.local_seeds(0, BATCH, key)
         mb = svc.sample(seeds, jax.random.fold_in(key, 7), home=0)
@@ -189,18 +448,30 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
-                    help="tier-2 CI gate: sampler oracle bitwise + "
-                         "windgp < hash halo fraction + train-balance "
-                         "skew reduction on proxies")
+                    help="tier-2 CI gate: sampler oracle bitwise, fused "
+                         "k-hop bitwise + >=3x the per-hop reference, "
+                         "windgp < hash halo fraction, cached features "
+                         "bitwise + windgp >= hash LRU hit rate + lower "
+                         "miss traffic, pipeline "
+                         "depth-determinism, train-balance skew "
+                         "reduction; samples/sec floor median-of-5")
     ap.add_argument("--json", default=None,
                     help="write gateable metrics to this path "
                          "(BENCH_smoke.json for CI)")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="sync vs prefetch batches/sec at depth 1/2/4")
+    ap.add_argument("--cache-study", action="store_true",
+                    help="hit-rate vs cache-budget curve per partitioner")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--repeats", type=int, default=3)
     args = ap.parse_args()
     if args.smoke:
         run_smoke(args.json)
+    if args.pipeline:
+        run_pipeline(args.repeats)
+    if args.cache_study:
+        run_cache_study()
     if args.full:
         run_full(args.repeats)
-    if not (args.smoke or args.full):
+    if not (args.smoke or args.full or args.pipeline or args.cache_study):
         ap.print_help()

@@ -144,7 +144,8 @@ The shards this script writes also feed GNN minibatch training: wrap
 the partition in the sampling service (``repro.sampling``) and draw
 fixed-fanout k-hop neighborhoods per machine::
 
-    from repro.sampling import SamplingService
+    from repro.sampling import (FeatureStore, HaloCache,
+                                PrefetchPipeline, SamplingService)
     import jax
 
     svc = SamplingService.create(out_dir / "assignment",
@@ -154,22 +155,43 @@ fixed-fanout k-hop neighborhoods per machine::
     mb = svc.sample(seeds, jax.random.fold_in(key, 1), home=0)
     mb.halo_fracs()    # per-hop fraction of frontier owned elsewhere
 
+    # feature path: owner-sharded store + per-trainer halo cache
+    store = FeatureStore.build(svc, features)      # features: (V, F)
+    cache = HaloCache.for_home(store, home=0, capacity=4096)
+    rows, st = store.gather(mb.all_ids(), home=0, cache=cache)
+    st.hit_rate    # deduplicated remote rows served without a fetch
+
+    # steady-state training loop: prefetch overlaps batch i+1's fused
+    # k-hop sampling with batch i's feature resolve; any depth (incl.
+    # 0 = fully synchronous) yields the bitwise-same stream
+    with PrefetchPipeline(svc, home=0, batch_size=1024, num_batches=100,
+                          key=key, depth=2, store=store,
+                          cache=cache) as pipe:
+        for mb, feats in pipe:
+            ...                                    # train on the batch
+
 ``SamplingService.create`` accepts every ``PartitionRuntime.create``
 source — the assignment directory above, or ``(graph, method=,
 cluster=)`` to partition in-process, or ``(graph, assign=, p=)`` for a
 precomputed assignment.  Each machine holds a degree-sorted CSC of its
-*owned* vertices; per hop, sampled vertices owned elsewhere are counted
-as one batched halo fetch — the traffic a better partition shrinks,
-which is how partition quality becomes observable on the training
-workload.  The sampler is key-deterministic (same ``(partition, seeds,
-key)`` → bitwise-same minibatch, pinned against a NumPy oracle) and
+*owned* vertices; the whole k-hop expansion runs as one fused jitted
+dispatch (a hop-at-a-time reference path survives behind
+``sample(..., fused=False)``, pinned bitwise).  Per hop, sampled
+vertices owned elsewhere are counted as one deduplicated batched halo
+fetch — the traffic a better partition shrinks, which is how partition
+quality becomes observable on the training workload; the feature
+store's ``gather`` pays exactly that traffic, minus what the
+``HaloCache`` (static degree-ranked hub tier + LRU tail) absorbs.  The
+sampler is key-deterministic (same ``(partition, seeds, key)`` →
+bitwise-same minibatch, pinned against a NumPy oracle) and
 ``local_seeds(..., train_mask=m)`` restricts seeds to labeled vertices.
 For training-aware partitions, pass ``train_mask=`` /
 ``train_balance=`` to the windgp partitioner — Eq. 3 then weighs
 hosted train vertices extra, balancing the labeled set across machines.
 ``benchmarks/sampling_service.py`` is the measured version (samples/sec,
-halo fraction windgp vs hdrf vs hash, train-skew reduction) and runs in
-CI as the tier-2 ``sampling`` job.
+fused-vs-loop speedup, halo fraction and cache hit rate windgp vs hdrf
+vs hash, prefetch depth sweep, train-skew reduction) and runs in CI as
+the tier-2 ``sampling`` job.
 """
 from __future__ import annotations
 

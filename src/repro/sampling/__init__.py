@@ -15,13 +15,25 @@ makes partition quality directly observable on that workload:
   bitwise against a NumPy oracle on the same PRNG key.
 * :mod:`~repro.sampling.service` — k-hop minibatch sampling with
   ``jax.random`` key threading and per-hop batched halo-fetch
-  accounting.
+  accounting; the whole k-hop expansion is one fused jitted dispatch
+  (the per-hop loop survives as the bitwise-pinned reference).
+* :mod:`~repro.sampling.features` — owner-sharded feature store plus a
+  hub-tier + LRU :class:`HaloCache` so remote feature rows are fetched
+  once, not per batch.
+* :mod:`~repro.sampling.pipeline` — bounded-depth async prefetch
+  producing ``(MiniBatch, features)`` with batch ``i+1``'s sampling
+  overlapping batch ``i``'s feature fetch, bitwise deterministic at
+  every depth.
 
 The layer consumes runtimes only through ``PartitionRuntime.create``.
 """
+from .features import FeatureStore, FetchStats, HaloCache
 from .machine_csc import MachineCSC
+from .pipeline import PrefetchPipeline
 from .sampler import sample_fanout, sample_fanout_np
 from .service import HopStats, MiniBatch, SamplingService
 
 __all__ = ["MachineCSC", "sample_fanout", "sample_fanout_np",
-           "HopStats", "MiniBatch", "SamplingService"]
+           "HopStats", "MiniBatch", "SamplingService",
+           "FeatureStore", "FetchStats", "HaloCache",
+           "PrefetchPipeline"]

@@ -1,0 +1,282 @@
+"""Per-machine feature shards + halo cache for minibatch training.
+
+A minibatch's sampled ids are useless to a trainer without the feature
+rows behind them.  This module adds the feature tensor path on top of
+the owner map :class:`~repro.sampling.machine_csc.MachineCSC` already
+defines:
+
+* :class:`FeatureStore` packs, one shard at a time, each machine's
+  *owned* vertices' feature rows (``shards[i][r]`` is the feature row of
+  ``owned_gid[i, r]`` — the same owner-local row ids the sampler's flat
+  tables use).  A machine resolves its own vertices' rows locally; every
+  remote vertex in a batch costs one cross-machine fetch, deduplicated
+  batch-wide.
+* :class:`HaloCache` sits in front of the remote fetch: a **static hub
+  tier** (the globally highest-degree remote vertices, preloaded, never
+  evicted — power-law frontiers hit hubs constantly, so pinning them is
+  cheap insurance) plus an **LRU tail** for the long tail of recent
+  remote rows.
+
+``FeatureStore.gather`` is the per-batch resolve: local rows from the
+home shard, cache hits from the cache, and the remaining misses via one
+deduplicated batched fetch whose rows are inserted into the LRU tail.
+Cached and uncached resolution are bitwise identical (cache rows came
+from the same shards); the per-gather :class:`FetchStats` record
+hit/miss/bytes, and the per-hop ``fetched_unique`` stat the service
+records is exactly the zero-cache miss upper bound — which makes the
+benchmark's hit-rate-vs-budget study (``benchmarks/sampling_service.py
+--cache-study``) an eviction study against a known ceiling.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+
+import numpy as np
+
+from ..bsp.partition_runtime import PartitionRuntime
+from .machine_csc import MachineCSC
+
+
+@dataclasses.dataclass
+class FetchStats:
+    """Accounting for one :meth:`FeatureStore.gather` call.
+
+    ``hits``/``misses`` count *deduplicated* remote vertices (so
+    ``misses`` ≤ the batch's summed per-hop ``fetched_unique`` bound);
+    ``local`` counts valid lanes resolved from the home shard and
+    ``bytes_fetched`` is the cross-machine traffic this batch actually
+    paid after the cache.
+    """
+
+    local: int = 0
+    hits: int = 0
+    misses: int = 0
+    bytes_fetched: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / max(1, self.hits + self.misses)
+
+
+class HaloCache:
+    """Remote-feature cache: degree-ranked static hubs + an LRU tail.
+
+    ``capacity`` is the **total** row budget; ``hub_ids`` (with their
+    preloaded ``hub_rows``) occupy ``len(hub_ids)`` of it permanently
+    and are never evicted, the remainder is the LRU tail.  Use
+    :meth:`for_home` to build one with the hub tier auto-selected as the
+    highest-global-degree vertices not owned by ``home``.
+    """
+
+    def __init__(self, capacity: int, hub_ids=(), hub_rows=None):
+        capacity = int(capacity)
+        if capacity < 0:
+            raise ValueError(f"capacity must be >= 0, got {capacity}")
+        hub_ids = np.asarray(hub_ids, dtype=np.int64).reshape(-1)
+        if len(hub_ids) > capacity:
+            raise ValueError(f"{len(hub_ids)} hub ids exceed the total "
+                             f"capacity {capacity}")
+        if len(hub_ids) and (hub_rows is None
+                             or len(hub_rows) != len(hub_ids)):
+            raise ValueError("hub_rows must provide one preloaded row "
+                             "per hub id")
+        self.capacity = capacity
+        self._hub = {int(v): np.asarray(hub_rows[j])
+                     for j, v in enumerate(hub_ids)}
+        self._lru: OrderedDict[int, np.ndarray] = OrderedDict()
+        self.lru_capacity = capacity - len(self._hub)
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.bytes_fetched = 0
+
+    @classmethod
+    def for_home(cls, store: "FeatureStore", home: int, capacity: int,
+                 hub_frac: float = 0.5) -> "HaloCache":
+        """Cache for machine ``home``: the ``ceil(capacity*hub_frac)``
+        highest-global-degree vertices owned elsewhere become the
+        preloaded hub tier (degree ties break to the lower vertex id),
+        the rest of the budget is the LRU tail."""
+        if not 0.0 <= hub_frac <= 1.0:
+            raise ValueError(f"hub_frac must be in [0, 1], got {hub_frac}")
+        gdeg = store.global_degree()
+        remote = np.flatnonzero((store.csc.owner >= 0)
+                                & (store.csc.owner != home))
+        hub_n = min(int(np.ceil(int(capacity) * hub_frac)), len(remote))
+        order = np.argsort(-gdeg[remote], kind="stable")[:hub_n]
+        hub_ids = remote[order]
+        return cls(capacity, hub_ids=hub_ids,
+                   hub_rows=store.gather_global(hub_ids))
+
+    @property
+    def hub_ids(self) -> np.ndarray:
+        return np.fromiter(self._hub.keys(), dtype=np.int64,
+                           count=len(self._hub))
+
+    def lru_ids(self) -> list:
+        """LRU-tail ids, least-recent first (the eviction order)."""
+        return list(self._lru.keys())
+
+    def __contains__(self, vid) -> bool:
+        return int(vid) in self._hub or int(vid) in self._lru
+
+    def __len__(self) -> int:
+        return len(self._hub) + len(self._lru)
+
+    def lookup(self, vid: int):
+        """The row for ``vid`` (refreshing its LRU recency) or ``None``.
+        Hub hits never touch the LRU order — the tier is static."""
+        vid = int(vid)
+        row = self._hub.get(vid)
+        if row is not None:
+            return row
+        row = self._lru.get(vid)
+        if row is not None:
+            self._lru.move_to_end(vid)
+        return row
+
+    def insert(self, vid: int, row: np.ndarray) -> None:
+        """Admit a fetched row to the LRU tail (hubs are preloaded and
+        ignore re-inserts), evicting the least-recent past capacity."""
+        vid = int(vid)
+        if vid in self._hub or self.lru_capacity == 0:
+            return
+        self._lru[vid] = row
+        self._lru.move_to_end(vid)
+        while len(self._lru) > self.lru_capacity:
+            self._lru.popitem(last=False)
+            self.evictions += 1
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / max(1, self.hits + self.misses)
+
+
+class FeatureStore:
+    """Owner-sharded vertex features over a partition's owner map."""
+
+    def __init__(self, csc: MachineCSC, shards):
+        if len(shards) != csc.p:
+            raise ValueError(f"expected {csc.p} shards, got {len(shards)}")
+        self.csc = csc
+        self.shards = [np.asarray(s) for s in shards]
+        dims = {s.shape[1:] for s in self.shards}
+        if len(dims) != 1:
+            raise ValueError(f"shards disagree on feature shape: {dims}")
+
+    @classmethod
+    def build(cls, source, features, **create_kw) -> "FeatureStore":
+        """Shard ``features`` (``(V, F)``, any dtype) by vertex owner.
+
+        ``source`` is anything that pins an owner map: a
+        :class:`~repro.sampling.service.SamplingService`, a
+        :class:`MachineCSC`, a ``PartitionRuntime``, or any
+        ``PartitionRuntime.create`` source (``**create_kw`` forwarded).
+        Shards are packed one machine at a time, so transient state
+        never exceeds one shard beyond the input.
+        """
+        from .service import SamplingService
+        if isinstance(source, SamplingService):
+            csc = source.csc
+        elif isinstance(source, MachineCSC):
+            csc = source
+        elif isinstance(source, PartitionRuntime):
+            csc = MachineCSC.build(source)
+        else:
+            csc = MachineCSC.build(
+                PartitionRuntime.create(source, **create_kw))
+        features = np.asarray(features)
+        if features.ndim < 2 or features.shape[0] != csc.num_vertices:
+            raise ValueError(
+                f"features must be (num_vertices={csc.num_vertices}, F), "
+                f"got {features.shape}")
+        shards = []
+        for i in range(csc.p):
+            n = int(csc.owned_per[i])
+            shards.append(
+                np.ascontiguousarray(features[csc.owned_gid[i, :n]]))
+        return cls(csc, shards)
+
+    @property
+    def feat_dim(self) -> int:
+        return int(np.prod(self.shards[0].shape[1:], dtype=np.int64))
+
+    @property
+    def row_bytes(self) -> int:
+        return self.feat_dim * self.shards[0].dtype.itemsize
+
+    def global_degree(self) -> np.ndarray:
+        """(V,) global degree, scattered back from the owner shards."""
+        csc = self.csc
+        gdeg = np.zeros(csc.num_vertices, dtype=np.int64)
+        for i in range(csc.p):
+            n = int(csc.owned_per[i])
+            gdeg[csc.owned_gid[i, :n]] = csc.deg[i, :n]
+        return gdeg
+
+    def gather_global(self, ids) -> np.ndarray:
+        """Feature rows for ``ids`` with full shard knowledge — the
+        uncached reference resolve (and the primitive a cross-machine
+        fetch of remote rows bottoms out in).  ``-1`` lanes get zeros."""
+        ids = np.asarray(ids, dtype=np.int64).reshape(-1)
+        out = np.zeros((len(ids),) + self.shards[0].shape[1:],
+                       dtype=self.shards[0].dtype)
+        valid = np.flatnonzero(ids >= 0)
+        own = self.csc.owner[ids[valid]]
+        row = self.csc.row[ids[valid]]
+        for m in np.unique(own):
+            if m < 0:
+                continue            # isolated vertices keep zeros
+            sel = own == m
+            out[valid[sel]] = self.shards[m][row[sel]]
+        return out
+
+    def gather(self, ids, home: int, cache: HaloCache | None = None):
+        """Resolve ``ids`` for machine ``home``: local rows from its own
+        shard, remote rows through ``cache`` (hub + LRU) with the
+        residual misses fetched in one deduplicated batch and admitted
+        to the cache.  Returns ``(rows, FetchStats)``; bitwise equal to
+        :meth:`gather_global` for any cache state.
+        """
+        ids = np.asarray(ids, dtype=np.int64).reshape(-1)
+        out = np.zeros((len(ids),) + self.shards[0].shape[1:],
+                       dtype=self.shards[0].dtype)
+        stats = FetchStats()
+        valid = np.flatnonzero(ids >= 0)
+        owner = self.csc.owner[ids[valid]]
+        local = valid[owner == home]
+        out[local] = self.shards[home][self.csc.row[ids[local]]]
+        stats.local = len(local)
+        remote = valid[(owner != home) & (owner >= 0)]
+        if not len(remote):
+            return out, stats
+        uniq = np.unique(ids[remote])
+        table = np.empty((len(uniq),) + self.shards[0].shape[1:],
+                         dtype=self.shards[0].dtype)
+        if cache is None:
+            table[:] = self.gather_global(uniq)
+            stats.misses = len(uniq)
+        else:
+            miss_pos = []
+            for j, v in enumerate(uniq):
+                row = cache.lookup(v)
+                if row is None:
+                    miss_pos.append(j)
+                else:
+                    table[j] = row
+                    stats.hits += 1
+            if miss_pos:
+                miss_pos = np.asarray(miss_pos)
+                fetched = self.gather_global(uniq[miss_pos])
+                table[miss_pos] = fetched
+                for j, v in zip(miss_pos, uniq[miss_pos]):
+                    cache.insert(v, table[j])
+                stats.misses = len(miss_pos)
+            cache.hits += stats.hits
+            cache.misses += stats.misses
+        stats.bytes_fetched = stats.misses * self.row_bytes
+        if cache is not None:
+            cache.bytes_fetched += stats.bytes_fetched
+        out[remote] = table[np.searchsorted(uniq, ids[remote])]
+        return out, stats

@@ -10,6 +10,21 @@ neighbors of those → …, threading one ``jax.random`` key through
 of ``(partition, seeds, key)`` — bitwise reproducible across runs and
 across equal-content runtimes, however they were built.
 
+Two execution paths produce the same bits:
+
+* the **fused path** (default): all hops collapse into one jitted
+  dispatch, static over ``(fanouts, replace)`` so shapes are fixed; the
+  per-hop keys are pre-split on host exactly as the loop splits them,
+  and owner/halo accounting — including the deduplicated remote-row
+  count — runs vectorized on device (sort + adjacent-difference, no
+  host ``np.unique``);
+* the **hop-at-a-time path** (``fused=False``): the original per-hop
+  loop — one dispatch and one host round-trip per hop, stable-argsort
+  selection, host ``np.unique`` accounting — kept verbatim as the
+  reference implementation the parity tests pin the fused path against,
+  bitwise (which also pins the fused path's ``top_k`` selection against
+  the argsort lowering, every run).
+
 Halo accounting: after each hop, the new frontier's vertices that are
 *not* owned by the sampling machine would be resolved by one batched
 cross-machine fetch of their owner rows (deduplicated per hop — the
@@ -17,18 +32,21 @@ replica-table analogue for the sampling workload).  The per-hop
 ``halo_frac`` is the fraction of valid frontier entries that are remote:
 exactly the traffic a better partition (lower RF, stronger locality)
 shrinks, which is what makes partition quality observable on this
-workload.
+workload.  ``fetched_unique`` is also the cache-miss upper bound for the
+feature layer (:mod:`~repro.sampling.features`).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from ..bsp.partition_runtime import PartitionRuntime
 from .machine_csc import MachineCSC
-from .sampler import sample_fanout
+from .sampler import fanout_hop, sample_fanout
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,6 +83,56 @@ class MiniBatch:
     def num_sampled(self) -> int:
         return int(sum(s.frontier for s in self.hop_stats))
 
+    def all_ids(self) -> np.ndarray:
+        """Seeds + every hop, flattened in order (``-1`` pads kept) —
+        the id set whose features a trainer needs for this batch."""
+        return np.concatenate([self.seeds] + [h.reshape(-1)
+                                              for h in self.hops])
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("fanouts", "replace", "has_home"))
+def _sample_khop_jit(table, deg, rowmap, owner, seeds, hop_keys, home,
+                     fanouts, replace, has_home):
+    """All hops in one dispatch.  ``hop_keys[h]`` must be the key the
+    loop path would pass to hop ``h`` (host pre-split), so every hop
+    traces :func:`fanout_hop` with identical inputs — bitwise parity
+    with the hop-at-a-time path by construction.
+
+    Per hop, alongside the sampled ids, returns
+    ``(frontier, halo, fetched_unique)`` computed on device: the dedup
+    is a sort with remote lanes keyed below a ``V`` sentinel, counting
+    adjacent differences — the same dedup a batched halo fetch performs,
+    so the accounting is free on this path.
+    """
+    V = rowmap.shape[0]
+    frontier = seeds
+    hops, stats = [], []
+    for h, fanout in enumerate(fanouts):
+        rows = jnp.where(frontier >= 0,
+                         rowmap[jnp.clip(frontier, 0, V - 1)], -1)
+        out = fanout_hop(table, deg, rows, hop_keys[h], fanout,
+                         replace).reshape(-1)
+        ok = out >= 0
+        zero = jnp.zeros((), jnp.int32)
+        if out.shape[0] == 0:
+            stats.append(jnp.stack([zero, zero, zero]))
+        elif has_home:
+            remote = ok & (owner[jnp.clip(out, 0, V - 1)] != home)
+            keyed = jnp.sort(jnp.where(remote, out, V))
+            fresh = jnp.concatenate([jnp.ones(1, bool),
+                                     keyed[1:] != keyed[:-1]])
+            stats.append(jnp.stack(
+                [ok.sum().astype(jnp.int32),
+                 remote.sum().astype(jnp.int32),
+                 ((keyed < V) & fresh).sum().astype(jnp.int32)]))
+        else:
+            stats.append(jnp.stack([ok.sum().astype(jnp.int32), zero,
+                                    zero]))
+        hops.append(out)
+        frontier = out
+    return tuple(hops), jnp.stack(stats)
+
 
 class SamplingService:
     """Fixed-fanout k-hop neighbor sampling over a partitioned graph."""
@@ -79,12 +147,13 @@ class SamplingService:
         self.replace = bool(replace)
         csc = self.csc
         # machine-stacked flat tables: row of vertex v = owner*Omax+row[v]
-        import jax.numpy as jnp
         self._table = jnp.asarray(
             csc.nbr.reshape(csc.p * csc.omax, csc.max_degree))
         self._deg = jnp.asarray(csc.deg.reshape(-1))
         self._rowmap = csc.flat_rowmap()                  # np (V,)
         self._owner = csc.owner
+        self._rowmap_d = jnp.asarray(self._rowmap)
+        self._owner_d = jnp.asarray(csc.owner)
 
     @classmethod
     def create(cls, source=None, *, fanouts=(10, 5), replace: bool = False,
@@ -105,7 +174,13 @@ class SamplingService:
         """``n`` seed vertices owned by machine ``home`` — a uniform
         key-deterministic draw from its owned (optionally train-masked)
         vertex set.  Seeds are where minibatches start in DistDGL-style
-        training: each trainer draws from its own machine's shard."""
+        training: each trainer draws from its own machine's shard.
+
+        When the (masked) pool holds fewer than ``n`` vertices the whole
+        pool is returned in key-permuted order — the result length is
+        ``min(n, pool size)``, never padded; callers wanting fixed batch
+        shapes must check ``len(seeds)``.  This is pinned by test.
+        """
         pool = self.csc.owned_gid[home][:int(self.csc.owned_per[home])]
         if train_mask is not None:
             tm = np.asarray(train_mask, dtype=bool)
@@ -115,27 +190,71 @@ class SamplingService:
         perm = np.asarray(jax.random.permutation(key, len(pool)))
         return pool[perm[:int(n)]].astype(np.int32)
 
-    def sample(self, seeds, key, home: int | None = None) -> MiniBatch:
-        """Sample the k-hop neighborhood of ``seeds`` (global vertex ids).
+    def _check_seeds(self, seeds) -> np.ndarray:
+        frontier = np.asarray(seeds, dtype=np.int32).reshape(-1)
+        if len(frontier):
+            if frontier.max() >= self.csc.num_vertices:
+                raise ValueError(
+                    f"seed ids must lie in [0, {self.csc.num_vertices})")
+            if frontier.min() < -1:
+                raise ValueError(
+                    f"seed ids must be >= -1 (-1 is the explicit pad "
+                    f"lane); got {int(frontier.min())}")
+        return frontier
+
+    def sample(self, seeds, key, home: int | None = None, *,
+               fused: bool = True) -> MiniBatch:
+        """Sample the k-hop neighborhood of ``seeds`` (global vertex ids;
+        ``-1`` marks an explicit pad lane, anything below is rejected).
 
         ``home`` is the machine running the batch: per hop, sampled
         vertices owned elsewhere count as halo fetches (``hop_stats``).
         ``key`` is split once per hop; the same ``(seeds, key)`` always
-        yields the bitwise-same minibatch.
+        yields the bitwise-same minibatch on either path (``fused=True``
+        is one device dispatch; ``False`` is the per-hop reference loop).
         """
-        frontier = np.asarray(seeds, dtype=np.int32).reshape(-1)
-        V = self.csc.num_vertices
-        if len(frontier) and (frontier.max() >= V):
-            raise ValueError(f"seed ids must lie in [0, {V})")
-        hops, stats = [], []
-        for fanout in self.fanouts:
+        frontier = self._check_seeds(seeds)
+        if fused:
+            return self._sample_fused(frontier, key, home)
+        return self._sample_loop(frontier, key, home)
+
+    def _hop_keys(self, key):
+        """Pre-split one key per hop, exactly as the loop path splits
+        (``key, sub = split(key)`` per hop) — batch determinism hangs on
+        this being the single splitting rule."""
+        subs = []
+        for _ in self.fanouts:
             key, sub = jax.random.split(key)
+            subs.append(sub)
+        return subs
+
+    def _sample_fused(self, frontier, key, home) -> MiniBatch:
+        hop_keys = jnp.stack(self._hop_keys(key))
+        hops, stats = _sample_khop_jit(
+            self._table, self._deg, self._rowmap_d, self._owner_d,
+            jnp.asarray(frontier), hop_keys,
+            jnp.int32(-1 if home is None else home),
+            self.fanouts, self.replace, home is not None)
+        stats = np.asarray(stats)                 # one (k, 3) transfer
+        return MiniBatch(
+            seeds=frontier,
+            hops=tuple(np.asarray(h) for h in hops),
+            hop_stats=tuple(HopStats(frontier=int(f), halo=int(h),
+                                     fetched_unique=int(u))
+                            for f, h, u in stats),
+            home=home)
+
+    def _sample_loop(self, frontier, key, home) -> MiniBatch:
+        seeds = frontier
+        V = self.csc.num_vertices
+        hops, stats = [], []
+        for fanout, sub in zip(self.fanouts, self._hop_keys(key)):
             valid = frontier >= 0
             rows = np.where(valid,
                             self._rowmap[np.clip(frontier, 0, V - 1)], -1)
             out = np.asarray(sample_fanout(
                 self._table, self._deg, rows, sub, fanout,
-                replace=self.replace)).reshape(-1)
+                replace=self.replace, select="sort")).reshape(-1)
             ok = out >= 0
             if home is None:
                 halo = np.zeros(0, dtype=np.int32)
@@ -148,6 +267,5 @@ class SamplingService:
                                   fetched_unique=len(np.unique(halo))))
             hops.append(out)
             frontier = out
-        return MiniBatch(seeds=np.asarray(seeds, dtype=np.int32),
-                         hops=tuple(hops), hop_stats=tuple(stats),
-                         home=home)
+        return MiniBatch(seeds=seeds, hops=tuple(hops),
+                         hop_stats=tuple(stats), home=home)

@@ -191,6 +191,32 @@ class TestDeterminism:
             svc.sample(np.array([g.num_vertices], np.int32),
                        jax.random.PRNGKey(0))
 
+    def test_seed_below_minus_one_raises(self, small):
+        """Only -1 is the pad lane; -2 etc. would silently alias rows
+        through the clip — must be rejected, not sampled."""
+        g, cl, assign = small
+        svc = SamplingService(
+            PartitionRuntime.create(g, assign=assign, cluster=cl))
+        with pytest.raises(ValueError, match="pad lane"):
+            svc.sample(np.array([0, -2], np.int32), jax.random.PRNGKey(0))
+
+    def test_local_seeds_undersized_pool_returns_whole_pool(self, small):
+        """When a machine owns fewer (masked) vertices than n, the whole
+        pool comes back key-permuted — length min(n, pool), no padding."""
+        g, cl, assign = small
+        svc = SamplingService(
+            PartitionRuntime.create(g, assign=assign, cluster=cl))
+        pool = int(svc.csc.owned_per[0])
+        seeds = svc.local_seeds(0, pool + 100, jax.random.PRNGKey(4))
+        assert len(seeds) == pool
+        want = svc.csc.owned_gid[0][:pool]
+        assert np.array_equal(np.sort(seeds), np.sort(want))
+        # masked variant: pool shrinks to the masked subset
+        mask = np.zeros(g.num_vertices, bool)
+        mask[want[:3]] = True
+        masked = svc.local_seeds(0, 50, jax.random.PRNGKey(4), mask)
+        assert len(masked) == 3 and set(masked) == set(want[:3].tolist())
+
     def test_bad_fanouts_raise(self, small):
         g, cl, assign = small
         rt = PartitionRuntime.create(g, assign=assign, cluster=cl)

@@ -1,0 +1,257 @@
+"""Fused k-hop sampling, the feature halo cache, and the prefetch
+pipeline.
+
+The contracts pinned here:
+
+* the fused single-dispatch k-hop path is **bitwise** identical to the
+  hop-at-a-time reference loop — ids and per-hop stats, both replacement
+  modes (this also pins the fused ``top_k`` selection against the
+  reference argsort lowering, and the device-side dedup count against
+  host ``np.unique``);
+* ``FeatureStore`` shards by owner and ``gather`` through any cache
+  state is bitwise equal to the uncached ``gather_global``;
+* ``HaloCache``: LRU eviction order is exactly
+  least-recently-used-first, the hub tier is never evicted, and hub hits
+  leave the LRU order untouched;
+* ``PrefetchPipeline`` yields bitwise-identical ``(batch, features)``
+  streams — and identical cumulative cache stats — at every depth,
+  propagates worker exceptions to the consumer, and shuts down cleanly
+  mid-iteration.
+"""
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.bsp import PartitionRuntime
+from repro.core import scaled_paper_cluster
+from repro.core import partitioners as registry
+from repro.data import rmat
+from repro.sampling import (FeatureStore, HaloCache, PrefetchPipeline,
+                            SamplingService)
+
+
+@pytest.fixture(scope="module")
+def svc():
+    g = rmat(8, edge_factor=8, seed=3)
+    cl = scaled_paper_cluster(2, 4, g.num_edges)
+    assign = registry.get("hdrf")(g, cl)
+    return SamplingService(
+        PartitionRuntime.create(g, assign=assign, cluster=cl))
+
+
+@pytest.fixture(scope="module")
+def store(svc):
+    rng = np.random.default_rng(0)
+    feats = rng.standard_normal(
+        (svc.csc.num_vertices, 8)).astype(np.float32)
+    return FeatureStore.build(svc, feats), feats
+
+
+def _assert_minibatch_equal(a, b):
+    assert np.array_equal(a.seeds, b.seeds)
+    assert len(a.hops) == len(b.hops)
+    for ha, hb in zip(a.hops, b.hops):
+        assert np.array_equal(ha, hb)
+    assert a.hop_stats == b.hop_stats
+
+
+class TestFusedParity:
+    @pytest.mark.parametrize("replace", [False, True])
+    def test_fused_bitwise_equals_loop(self, svc, replace):
+        s = SamplingService(svc.csc, fanouts=(6, 4, 3), replace=replace)
+        key = jax.random.PRNGKey(9)
+        seeds = s.local_seeds(0, 24, key)
+        a = s.sample(seeds, jax.random.fold_in(key, 1), home=0,
+                     fused=True)
+        b = s.sample(seeds, jax.random.fold_in(key, 1), home=0,
+                     fused=False)
+        _assert_minibatch_equal(a, b)
+        # stats equality above also pins the device-side dedup count
+        # (sort + adjacent difference) against the loop's np.unique
+        assert any(st.fetched_unique > 0 for st in a.hop_stats)
+
+    def test_fused_parity_without_home(self, svc):
+        key = jax.random.PRNGKey(3)
+        seeds = svc.local_seeds(1, 16, key)
+        a = svc.sample(seeds, jax.random.fold_in(key, 2), fused=True)
+        b = svc.sample(seeds, jax.random.fold_in(key, 2), fused=False)
+        _assert_minibatch_equal(a, b)
+        assert all(st.halo == 0 and st.fetched_unique == 0
+                   for st in a.hop_stats)
+
+    def test_all_ids_layout(self, svc):
+        key = jax.random.PRNGKey(5)
+        seeds = svc.local_seeds(0, 8, key)
+        mb = svc.sample(seeds, jax.random.fold_in(key, 1), home=0)
+        ids = mb.all_ids()
+        assert len(ids) == len(seeds) + sum(h.size for h in mb.hops)
+        assert np.array_equal(ids[:len(seeds)], seeds)
+
+
+class TestFeatureStore:
+    def test_shards_match_owner_map(self, svc, store):
+        fs, feats = store
+        csc = svc.csc
+        for i in range(csc.p):
+            n = int(csc.owned_per[i])
+            assert fs.shards[i].shape == (n, 8)
+            assert np.array_equal(fs.shards[i],
+                                  feats[csc.owned_gid[i, :n]])
+
+    def test_gather_global_matches_raw(self, svc, store):
+        fs, feats = store
+        ids = np.array([-1, 0, 5, 5, 17], np.int64)
+        got = fs.gather_global(ids)
+        assert np.all(got[0] == 0)
+        for j, v in enumerate(ids):
+            if v >= 0 and svc.csc.owner[v] >= 0:
+                assert np.array_equal(got[j], feats[v])
+
+    def test_gather_bitwise_equals_uncached_any_cache_state(self, svc,
+                                                            store):
+        fs, _ = store
+        key = jax.random.PRNGKey(7)
+        cache = HaloCache.for_home(fs, 0, capacity=64, hub_frac=0.5)
+        for b in range(4):      # evolving cache state across batches
+            k_seed, k_hop = jax.random.split(jax.random.fold_in(key, b))
+            seeds = svc.local_seeds(0, 32, k_seed)
+            mb = svc.sample(seeds, k_hop, home=0)
+            got, st = fs.gather(mb.all_ids(), 0, cache)
+            assert np.array_equal(got, fs.gather_global(mb.all_ids()))
+            bound = sum(s.fetched_unique for s in mb.hop_stats)
+            assert st.misses <= bound
+
+    def test_build_validates_shape(self, svc):
+        with pytest.raises(ValueError, match="num_vertices"):
+            FeatureStore.build(svc, np.zeros((3, 2), np.float32))
+
+
+class TestHaloCache:
+    def test_lru_eviction_order(self):
+        c = HaloCache(capacity=3)
+        rows = {v: np.full(2, v, np.float32) for v in range(5)}
+        for v in (0, 1, 2):
+            c.insert(v, rows[v])
+        assert c.lru_ids() == [0, 1, 2]
+        c.lookup(0)                       # refresh 0 -> 1 is now LRU
+        assert c.lru_ids() == [1, 2, 0]
+        c.insert(3, rows[3])              # evicts 1
+        assert c.lru_ids() == [2, 0, 3]
+        assert 1 not in c and c.evictions == 1
+        c.insert(4, rows[4])              # evicts 2
+        assert c.lru_ids() == [0, 3, 4]
+        assert c.evictions == 2
+
+    def test_hub_tier_never_evicted(self):
+        hub_rows = np.arange(4, dtype=np.float32).reshape(2, 2)
+        c = HaloCache(capacity=4, hub_ids=[10, 11], hub_rows=hub_rows)
+        assert c.lru_capacity == 2
+        for v in range(20, 40):           # churn far past capacity
+            c.insert(v, np.zeros(2, np.float32))
+        assert 10 in c and 11 in c
+        assert np.array_equal(c.lookup(10), hub_rows[0])
+        assert len(c.lru_ids()) == 2
+
+    def test_hub_hit_does_not_touch_lru_order(self):
+        c = HaloCache(capacity=3, hub_ids=[99],
+                      hub_rows=np.zeros((1, 2), np.float32))
+        c.insert(1, np.zeros(2, np.float32))
+        c.insert(2, np.zeros(2, np.float32))
+        c.lookup(99)
+        assert c.lru_ids() == [1, 2]
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="capacity"):
+            HaloCache(capacity=-1)
+        with pytest.raises(ValueError, match="exceed"):
+            HaloCache(capacity=1, hub_ids=[1, 2],
+                      hub_rows=np.zeros((2, 2)))
+        with pytest.raises(ValueError, match="hub_rows"):
+            HaloCache(capacity=4, hub_ids=[1, 2])
+
+    def test_for_home_picks_remote_top_degree(self, svc, store):
+        fs, _ = store
+        c = HaloCache.for_home(fs, 0, capacity=8, hub_frac=1.0)
+        gdeg = fs.global_degree()
+        owner = svc.csc.owner
+        assert len(c.hub_ids) == 8
+        assert all(owner[v] >= 0 and owner[v] != 0 for v in c.hub_ids)
+        remote = np.flatnonzero((owner >= 0) & (owner != 0))
+        floor = gdeg[c.hub_ids].min()
+        assert (gdeg[remote] > floor).sum() < 8   # nothing hotter missed
+
+
+def _stream(svc, store_pair, depth, num_batches=5, budget=48,
+            with_store=True):
+    fs, _ = store_pair
+    cache = HaloCache.for_home(fs, 0, capacity=budget) if with_store \
+        else None
+    with PrefetchPipeline(svc, home=0, batch_size=16,
+                          num_batches=num_batches,
+                          key=jax.random.PRNGKey(13), depth=depth,
+                          store=fs if with_store else None,
+                          cache=cache) as pl:
+        out = list(pl)
+    stats = (cache.hits, cache.misses, cache.evictions) if with_store \
+        else None
+    return out, stats
+
+
+class TestPrefetchPipeline:
+    @pytest.mark.parametrize("depth", [1, 4])
+    def test_bitwise_deterministic_at_every_depth(self, svc, store,
+                                                  depth):
+        (sync, st0), (deep, std) = (_stream(svc, store, 0),
+                                    _stream(svc, store, depth))
+        assert len(sync) == len(deep) == 5
+        for (ma, fa), (mb, fb) in zip(sync, deep):
+            _assert_minibatch_equal(ma, mb)
+            assert np.array_equal(fa, fb)
+        assert st0 == std     # same cache hit/miss/evict sequence
+
+    def test_no_store_yields_none_features(self, svc, store):
+        out, _ = _stream(svc, store, 2, with_store=False)
+        assert all(f is None for _, f in out)
+
+    def test_worker_exception_propagates(self, svc, store):
+        fs, _ = store
+
+        class Boom(RuntimeError):
+            pass
+
+        pl = PrefetchPipeline(svc, home=0, batch_size=16, num_batches=6,
+                              key=jax.random.PRNGKey(1), depth=2,
+                              store=fs)
+
+        def explode(mb):
+            raise Boom("feature stage died")
+
+        pl._resolve_features = explode
+        with pytest.raises(Boom, match="feature stage died"):
+            list(pl)
+        assert not any(t.is_alive() for t in pl._threads or [])
+
+    def test_mid_iteration_shutdown(self, svc, store):
+        fs, _ = store
+        pl = PrefetchPipeline(svc, home=0, batch_size=16, num_batches=50,
+                              key=jax.random.PRNGKey(2), depth=2,
+                              store=fs)
+        next(pl)
+        next(pl)
+        pl.close()
+        assert not any(t.name.startswith("prefetch-")
+                       for t in threading.enumerate())
+        with pytest.raises(StopIteration):
+            next(pl)
+
+    def test_validation(self, svc, store):
+        fs, _ = store
+        with pytest.raises(ValueError, match="depth"):
+            PrefetchPipeline(svc, home=0, batch_size=4, num_batches=1,
+                             key=jax.random.PRNGKey(0), depth=-1)
+        with pytest.raises(ValueError, match="without store"):
+            PrefetchPipeline(svc, home=0, batch_size=4, num_batches=1,
+                             key=jax.random.PRNGKey(0),
+                             cache=HaloCache(capacity=4))
